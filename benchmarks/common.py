@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: the paper's six evaluation inputs (Table 3)
+and the two simulated testbeds (Tables 1-2)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import HGemms, paper_mach1, paper_mach2
+
+# Table 3: (m, n, k) and TOps = m*n*k / 1e12
+PAPER_INPUTS = {
+    "i1": (30_000, 30_000, 30_000),   # 27.0 TOps
+    "i2": (60_000, 20_000, 35_000),   # 42.0
+    "i3": (130_000, 20_000, 20_000),  # 52.0
+    "i4": (40_000, 80_000, 20_000),   # 64.0
+    "i5": (40_000, 30_000, 60_000),   # 72.0
+    "i6": (56_000, 40_000, 40_000),   # 89.6
+}
+
+MACHINES = {"mach1": paper_mach1, "mach2": paper_mach2}
+
+
+def hgemms_for(machine: str, **kw) -> HGemms:
+    return HGemms(MACHINES[machine](), **kw)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    best = None
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,77 @@
+"""Paper Tables 4 & 5: per-device prediction error (%) and RMSE.
+
+The predictor is trained by the profiling pass (simulated runners with
+measurement noise), then evaluated on the six paper inputs against 'measured'
+runs with independent noise — reproducing the paper's protocol on the
+simulated testbed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (DeviceProfile, HGemms, Profiler, fit_linear,
+                        relative_error, rmse, simulated_runner)
+import dataclasses
+
+from .common import MACHINES, PAPER_INPUTS, emit, timed
+
+
+def profile_machine(machine: str, *, noise: float = 0.02, seed: int = 0):
+    """Run the paper's profiling pass: 30 squared matmuls per device."""
+    truth = MACHINES[machine]()
+    fitted = []
+    for i, dev in enumerate(truth):
+        sizes = (range(1000, 2001, 34) if dev.kind == "cpu"
+                 else range(3000, 6001, 100))
+        prof = Profiler(simulated_runner(dev, noise=noise, seed=seed + i),
+                        repeats=5)
+        prof.run(list(sizes)[:30])
+        fitted.append(dataclasses.replace(dev, compute=prof.fit()))
+    return truth, fitted
+
+
+def run(machine: str, *, noise: float = 0.03, seed: int = 17):
+    truth, fitted = profile_machine(machine, seed=seed)
+    hg = HGemms(fitted)          # plans with the *fitted* models
+    hg_truth = HGemms(truth)     # ground truth timings
+    rng = np.random.default_rng(seed)
+    errors: dict[str, list[float]] = {d.name: [] for d in truth}
+    rows = []
+    for name, (m, n, k) in PAPER_INPUTS.items():
+        plan = hg.plan(m, n, k)
+        row = {"input": name}
+        for dev_t, dev_f, asg in zip(truth, fitted, plan.adapted.assignments):
+            if asg.m == 0:
+                continue
+            pred_c = dev_f.compute(asg.ops)
+            pred_y = dev_f.copy(asg.ops, n, k)
+            meas_c = dev_t.compute(asg.ops) * (1 + noise * rng.standard_normal())
+            meas_y = dev_t.copy(asg.ops, n, k) * (1 + 0.3 * noise * rng.standard_normal())
+            e_glob = relative_error(pred_c + pred_y, meas_c + meas_y)
+            e_c = relative_error(pred_c, meas_c)
+            e_y = relative_error(pred_y, meas_y) if pred_y > 0 else 0.0
+            row[dev_t.kind] = (e_glob, e_c, e_y)
+            errors[dev_t.name].append(e_glob)
+        rows.append(row)
+    rmse_by_dev = {d.name: rmse(errors[d.name]) for d in truth
+                   if errors[d.name]}
+    return rows, rmse_by_dev
+
+
+def main() -> None:
+    for machine in ("mach1", "mach2"):
+        (rows, rmses), dt = timed(run, machine)
+        for row in rows:
+            parts = []
+            for kind in ("cpu", "gpu", "xpu"):
+                if kind in row:
+                    g, c, y = row[kind]
+                    parts.append(f"{kind}={g:.1f}({c:.1f};{y:.1f})")
+            emit(f"table4_pred_error_{machine}_{row['input']}",
+                 dt * 1e6, " ".join(parts))
+        for dev, r in rmses.items():
+            emit(f"table5_rmse_{machine}_{dev}", dt * 1e6, f"rmse={r:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

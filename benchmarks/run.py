@@ -1,0 +1,31 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.emit).
+Sections:
+  Table 4/5 — prediction accuracy + RMSE   (prediction_accuracy)
+  Table 6   — work distribution            (work_distribution)
+  Table 7   — co-execution speedups        (speedup)
+  Fig 3/4   — execution times + numerics   (exec_time)
+  §Roofline — dry-run roofline terms       (roofline)
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (exec_time, prediction_accuracy, roofline, speedup,
+                   work_distribution)
+    for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
+                roofline):
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---")
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 - report and continue
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Table 7: speedup of hgemms co-execution vs standalone execution
+(CPU-only / GPU-only / XPU-only), per input and machine."""
+from __future__ import annotations
+
+from .common import MACHINES, PAPER_INPUTS, emit, hgemms_for, timed
+
+
+def run(machine: str):
+    hg = hgemms_for(machine)
+    rows = []
+    for name, (m, n, k) in PAPER_INPUTS.items():
+        plan = hg.plan(m, n, k)
+        coexec = plan.schedule.timeline.makespan
+        n_ops = float(m) * n * k
+        standalone = {d.kind: d.total_time(n_ops, n, k) for d in hg.devices}
+        rows.append((name, {kind: t / coexec
+                            for kind, t in standalone.items()}, coexec))
+    return rows
+
+
+def main() -> None:
+    for machine in ("mach1", "mach2"):
+        rows, dt = timed(run, machine)
+        for name, sp, coexec in rows:
+            emit(f"table7_speedup_{machine}_{name}", dt * 1e6,
+                 f"vs_cpu={sp['cpu']:.2f}x vs_gpu={sp['gpu']:.2f}x "
+                 f"vs_xpu={sp['xpu']:.2f}x coexec_s={coexec:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 6: percentage of work distributed to CPU / GPU / XPU by the
+optimizer, per input and machine."""
+from __future__ import annotations
+
+from .common import MACHINES, PAPER_INPUTS, emit, hgemms_for, timed
+
+
+def run(machine: str):
+    hg = hgemms_for(machine)
+    out = []
+    for name, (m, n, k) in PAPER_INPUTS.items():
+        plan = hg.plan(m, n, k)
+        ops = [a.ops for a in plan.adapted.assignments]
+        total = sum(ops)
+        out.append((name, [o / total * 100 for o in ops]))
+    return out
+
+
+def main() -> None:
+    for machine in ("mach1", "mach2"):
+        rows, dt = timed(run, machine)
+        for name, shares in rows:
+            cpu, gpu, xpu = shares
+            emit(f"table6_distribution_{machine}_{name}", dt * 1e6,
+                 f"cpu={cpu:.2f}% gpu={gpu:.2f}% xpu={xpu:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving with POAS request dispatch across heterogeneous replicas.
+
+Serves a reduced-config model: a batch of prompts is split across two
+simulated replica groups (one 2x faster) by the POAS min-makespan dispatch,
+then each group runs real prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core.device_model import DeviceProfile, LinearTimeModel, NO_COPY
+from repro.models import Model
+from repro.serving.engine import PoasDispatcher, Request, ServingEngine
+
+
+def main():
+    cfg = get_tiny_config("stablelm-12b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(uid=i,
+                tokens=rng.integers(1, cfg.vocab_size, rng.integers(4, 24)),
+                max_new_tokens=8)
+        for i in range(12)
+    ]
+
+    groups = [
+        DeviceProfile("replica-fast", "tpu-group",
+                      LinearTimeModel(a=1e-6, b=1e-3), NO_COPY),
+        DeviceProfile("replica-slow", "tpu-group",
+                      LinearTimeModel(a=2e-6, b=1e-3), NO_COPY),
+    ]
+    dispatcher = PoasDispatcher(groups)
+    buckets = dispatcher.split(requests)
+    tok = lambda rs: sum(len(r.tokens) + r.max_new_tokens for r in rs)
+    print(f"dispatch: fast={len(buckets[0])} reqs ({tok(buckets[0])} tok)  "
+          f"slow={len(buckets[1])} reqs ({tok(buckets[1])} tok)  "
+          f"predicted makespan {dispatcher.predicted_makespan(buckets)*1e3:.2f}ms")
+    assert tok(buckets[0]) > tok(buckets[1]), "fast replica should get more"
+
+    t0 = time.perf_counter()
+    done = []
+    for g, bucket in enumerate(buckets):      # sequential here; parallel on a fleet
+        done += engine.generate(bucket)
+    dt = time.perf_counter() - t0
+    total_new = sum(len(c.tokens) for c in done)
+    print(f"generated {total_new} tokens for {len(done)} requests "
+          f"in {dt:.2f}s ({total_new/dt:.0f} tok/s on 1 CPU)")
+    for c in sorted(done, key=lambda c: c.uid)[:3]:
+        print(f"  req {c.uid}: {c.tokens[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Straggler mitigation via POAS dynamic scheduling (hetero data parallel).
+
+Simulates a 2-pod training fleet where pod-1 thermally throttles to 40%
+mid-run.  The DynamicScheduler re-fits pod throughput from measured step
+times and re-splits the global batch; step time recovers to near the
+post-throttle optimum instead of being dragged down by the straggler.
+
+    PYTHONPATH=src python examples/straggler_mitigation.py
+"""
+import numpy as np
+
+from repro.distributed.hetero import HeteroBatchScheduler, PodProfile
+
+GLOBAL_BATCH = 256
+SEQ = 4096
+FLOPS_PER_TOKEN = 6 * 12e9       # ~12B-param model
+STEPS = 30
+THROTTLE_AT = 10
+THROTTLE = 0.4
+
+
+def true_step_time(pod_idx: int, rows: int, step: int) -> float:
+    """Ground-truth simulator: pod1 throttles to 40% at THROTTLE_AT."""
+    eff = 197e12 * 0.4            # 40% MFU
+    if pod_idx == 1 and step >= THROTTLE_AT:
+        eff *= THROTTLE
+    return rows * SEQ * FLOPS_PER_TOKEN / (256 * eff) + 2e-3
+
+
+def main():
+    pods = [PodProfile("pod0", 256, 197e12, grain=16),
+            PodProfile("pod1", 256, 197e12, grain=16)]
+    sched = HeteroBatchScheduler(pods, flops_per_token=FLOPS_PER_TOKEN,
+                                 seq_len=SEQ, dynamic=True)
+    static = HeteroBatchScheduler(pods, flops_per_token=FLOPS_PER_TOKEN,
+                                  seq_len=SEQ, dynamic=False)
+    static_split = static.plan(GLOBAL_BATCH)
+
+    print(f"{'step':>4} {'split':>9} {'step_time':>9} {'static':>9} "
+          f"{'saving':>7}")
+    dyn_times, static_times = [], []
+    for step in range(STEPS):
+        split = sched.plan(GLOBAL_BATCH)
+        times = [true_step_time(i, r, step)
+                 for i, r in enumerate(split.sizes)]
+        t_dyn = max(times)
+        t_static = max(true_step_time(i, r, step)
+                       for i, r in enumerate(static_split.sizes))
+        dyn_times.append(t_dyn)
+        static_times.append(t_static)
+        for i, (r, t) in enumerate(zip(split.sizes, times)):
+            sched.observe(i, r, t)
+        tag = " <- pod1 throttles to 40%" if step == THROTTLE_AT else ""
+        print(f"{step:>4} {split.sizes[0]:>4}/{split.sizes[1]:<4} "
+              f"{t_dyn*1e3:8.1f}ms {t_static*1e3:8.1f}ms "
+              f"{(1 - t_dyn/t_static)*100:6.1f}%{tag}")
+
+    after = slice(THROTTLE_AT + 3, STEPS)
+    save = 1 - np.mean(dyn_times[after]) / np.mean(static_times[after])
+    print(f"\nPOAS dynamic rebalancing saves {save*100:.0f}% of step time "
+          f"after the straggler appears (steady state)")
+    # ideal split under throttle: pod0/pod1 capacity 1 : 0.4 -> ~183/73
+    print(f"final split {sched.plan(GLOBAL_BATCH).sizes} "
+          f"(ideal ≈ [182, 74])")
+
+
+if __name__ == "__main__":
+    main()

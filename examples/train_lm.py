@@ -1,0 +1,39 @@
+"""End-to-end driver: train a reduced-config LM for a few hundred steps with
+checkpointing, an injected mid-run failure, and resume — the fault-tolerance
+path a real fleet exercises.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch stablelm-12b]
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        print("=== phase 1: train to step", args.steps // 2, "===")
+        train_main(["--arch", args.arch, "--tiny",
+                    "--steps", str(args.steps // 2),
+                    "--batch", "8", "--seq", "64",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "25",
+                    "--log-every", "25"])
+        print("\n=== phase 2: 'crash', then resume from checkpoint ===")
+        train_main(["--arch", args.arch, "--tiny",
+                    "--steps", str(args.steps),
+                    "--batch", "8", "--seq", "64",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "25",
+                    "--resume", "--log-every", "25"])
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

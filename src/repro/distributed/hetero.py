@@ -1,0 +1,110 @@
+"""POAS-driven heterogeneous data parallelism — the paper's scheduler as the
+framework's batch partitioner (DESIGN.md §3.2).
+
+Pods (or pod-slices) are POAS "devices": per-pod throughput is predicted by
+a linear model over tokens (``ops`` ≙ tokens × FLOPs/token), the min-makespan
+solver splits the global batch, and the Adapt phase rounds each share to the
+pod's shard grain (data_shards × microbatch).  The Dynamic scheduler re-fits
+from measured step times, so a straggling pod automatically sheds load —
+straggler mitigation without preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from ..core.device_model import DeviceProfile, LinearTimeModel, NO_COPY
+from ..core.optimize import solve_bisection
+from ..core.schedule import DynamicScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class PodProfile:
+    name: str
+    chips: int
+    peak_flops: float           # per chip
+    derate: float = 1.0         # thermal / generation derate
+    grain: int = 1              # batch rows must be a multiple (data shards)
+
+
+def pod_device(p: PodProfile, flops_per_token: float) -> DeviceProfile:
+    """A pod as a POAS device; 'ops' are tokens."""
+    tok_per_s = p.chips * p.peak_flops * p.derate * 0.4 / flops_per_token
+    return DeviceProfile(
+        p.name, "tpu-group",
+        LinearTimeModel(a=1.0 / tok_per_s, b=2e-3),
+        NO_COPY, align_m=p.grain)
+
+
+@dataclasses.dataclass
+class BatchSplit:
+    sizes: list[int]           # per-pod batch rows (sum == global batch)
+    predicted_step_s: float
+
+    def offsets(self) -> list[int]:
+        out, acc = [], 0
+        for s in self.sizes:
+            out.append(acc)
+            acc += s
+        return out
+
+
+class HeteroBatchScheduler:
+    """Static or dynamic POAS split of the global batch across pods."""
+
+    def __init__(self, pods: Sequence[PodProfile], *, flops_per_token: float,
+                 seq_len: int, dynamic: bool = True):
+        self.pods = list(pods)
+        self.seq_len = seq_len
+        self.flops_per_token = flops_per_token
+        devices = [pod_device(p, flops_per_token) for p in pods]
+        self.dyn = DynamicScheduler(devices, bus="independent") if dynamic \
+            else None
+        self.devices = devices
+
+    def _solve(self, global_batch: int) -> BatchSplit:
+        devices = self.dyn.devices if self.dyn else self.devices
+        tokens = float(global_batch * self.seq_len)
+        res = solve_bisection(devices, tokens, n=1, k=1, bus="independent")
+        # Adapt: tokens -> batch rows, rounded to each pod's grain
+        raw = [c / self.seq_len for c in res.ops]
+        sizes = [int(r // p.grain) * p.grain
+                 for r, p in zip(raw, self.pods)]
+        rem = global_batch - sum(sizes)
+        order = sorted(range(len(self.pods)),
+                       key=lambda i: -(raw[i] - sizes[i]))
+        j = 0
+        while rem > 0:
+            i = order[j % len(order)]
+            add = min(self.pods[i].grain, rem)
+            sizes[i] += add
+            rem -= add
+            j += 1
+        while rem < 0:
+            i = max(range(len(sizes)), key=lambda q: sizes[q])
+            take = min(self.pods[i].grain, sizes[i], -rem)
+            sizes[i] -= take
+            rem += take
+        pred = max(d.compute(s * self.seq_len)
+                   for d, s in zip(devices, sizes) if s > 0)
+        return BatchSplit(sizes=sizes, predicted_step_s=pred)
+
+    def plan(self, global_batch: int) -> BatchSplit:
+        return self._solve(global_batch)
+
+    def observe(self, pod_index: int, batch_rows: int, seconds: float):
+        """Feed a measured per-pod step time (dynamic mode)."""
+        if self.dyn is None:
+            return
+        self.dyn.observe(pod_index, float(batch_rows * self.seq_len), seconds)
+
+    def imbalance(self, split: BatchSplit) -> float:
+        """Predicted idle fraction of the fastest-finishing pod."""
+        devices = self.dyn.devices if self.dyn else self.devices
+        times = [d.compute(s * self.seq_len)
+                 for d, s in zip(devices, split.sizes) if s > 0]
+        if not times:
+            return 0.0
+        return 1.0 - min(times) / max(times)

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run everywhere:
+real MXU kernels on TPU, Python-interpreted (bit-accurate) on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .matmul import matmul_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "interpret"))
+def matmul(a, b, *, block_m: int = 256, block_n: int = 256,
+           block_k: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return matmul_pallas(a, b, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

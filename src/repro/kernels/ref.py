@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def ssd_chunk_ref(xdt: jax.Array, B: jax.Array, C: jax.Array,
+                  cum: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the intra-chunk SSD kernel.
+
+    xdt: (b,NC,Q,nh,hp)   B,C: (b,NC,Q,G,ds)   cum: (b,NC,Q,nh)
+    Returns y_intra (b,NC,Q,nh,hp) and states (b,NC,nh,ds,hp).
+    """
+    b, nc, Q, nh, hp = xdt.shape
+    G = B.shape[3]
+    hg = nh // G
+    Bh = jnp.repeat(B, hg, axis=3).astype(jnp.float32)  # (b,NC,Q,nh,ds)
+    Ch = jnp.repeat(C, hg, axis=3).astype(jnp.float32)
+    x = xdt.astype(jnp.float32)
+    cum = cum.astype(jnp.float32)
+    cb = jnp.einsum("bnqhs,bnths->bnhqt", Ch, Bh)
+    diff = cum.transpose(0, 1, 3, 2)[..., None] - \
+        cum.transpose(0, 1, 3, 2)[..., None, :]         # (b,NC,nh,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(diff), 0.0)
+    y = jnp.einsum("bnhqt,bnthp->bnqhp", cb * decay, x)
+    seg_end = cum[:, :, -1, :]
+    w = jnp.exp(seg_end[:, :, None, :] - cum)           # (b,NC,Q,nh)
+    states = jnp.einsum("bnqhs,bnqhp->bnhsp", Bh * w[..., None], x)
+    return y.astype(xdt.dtype), states
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """Naive masked softmax attention with GQA head grouping."""
+    B, Sq, H, D = q.shape
+    _, Skv, KH, Dv = v.shape
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kx = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+"""Model stack: configs, layers, MoE, SSM, and the Model assembly."""
+from .config import ArchConfig, reduced
+from .transformer import Model
+
+__all__ = ["ArchConfig", "Model", "reduced"]

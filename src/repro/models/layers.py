@@ -1,0 +1,404 @@
+"""Model layers — pure-functional JAX (params are plain dict pytrees).
+
+Every layer has an ``init_*(key, cfg) -> params`` and an apply function.
+Stacked (per-layer-leading-dim) params are produced by the transformer via
+vmapped init, and consumed through ``jax.lax.scan``.
+
+Attention comes in three executable forms:
+* ``flash_attention`` — chunked online-softmax over KV blocks (the pure-JAX
+  oracle form; memory-bounded for 32k prefill). The Pallas TPU kernel in
+  ``repro.kernels.flash_attention`` implements the same contract for real
+  hardware; this module is what the CPU dry-run lowers.
+* ``decode_attention`` — one query step against a (possibly windowed) cache.
+* MLA variants (latent-compressed KV, absorbed-matmul decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Params = dict
+F32 = jnp.float32
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    h = x.astype(F32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (llama-style half rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(F32) * freqs        # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (online softmax over KV blocks)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def _no_window(window) -> bool:
+    """True iff window is statically known to mean 'full attention'."""
+    return window is None or (isinstance(window, (int, float)) and window <= 0)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    kv_chunk: int = 1024, scale: float | None = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Memory-bounded attention.
+
+    q: (B, Sq, H, Dk)   k: (B, Skv, KH, Dk)   v: (B, Skv, KH, Dv)
+    H must be a multiple of KH (GQA).  Never materializes (Sq, Skv) scores —
+    scans over KV chunks with a running (max, denom, acc) triple.
+    ``window`` > 0 restricts each query to the last ``window`` keys.
+    ``q_offset`` is the absolute position of q[0] (for chunked prefill).
+    """
+    B, Sq, H, Dk = q.shape
+    _, Skv, KH, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dk)
+    nchunks = -(-Skv // kv_chunk)
+    pad = nchunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, KH, Dk)
+    vc = v.reshape(B, nchunks, kv_chunk, KH, Dv)
+
+    qg = q.reshape(B, Sq, KH, G, Dk)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ci, k_i, v_i = inputs
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        # scores: (B, KH, G, Sq, C) — operands stay in model dtype (bf16);
+        # the MXU accumulates in f32 via preferred_element_type, so no
+        # explicit f32 upcast copies of Q/K hit HBM (§Perf iteration 1)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k_i,
+                       preferred_element_type=F32) * scale
+        mask = jnp.ones((Sq, kv_chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= k_pos[None, :] < Skv  # padding
+        if not _no_window(window):
+            # traced window: 0 means "full attention" (branchless for scans
+            # over layers with heterogeneous windows, e.g. hymba)
+            w_eff = jnp.where(jnp.asarray(window) > 0, window,
+                              Skv + Sq + q_offset + 1)
+            mask &= k_pos[None, :] > q_pos[:, None] - w_eff
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        # P is cast down to the V dtype for the PV matmul (what TPU flash
+        # kernels do); accumulation stays f32
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(v_i.dtype), v_i,
+                        preferred_element_type=F32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Sq), NEG_INF, dtype=F32)
+    l0 = jnp.zeros((B, KH, G, Sq), dtype=F32)
+    a0 = jnp.zeros((B, KH, G, Sq, Dv), dtype=F32)
+    # named_scope tags the lowered while-loop: on a TPU deployment this loop
+    # IS the Pallas flash kernel (scores/probs/carries stay in VMEM), so the
+    # roofline accounting separates its HBM traffic (see launch/hlo_costs).
+    with jax.named_scope("flash_attention"):
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.arange(nchunks), jnp.moveaxis(kc, 1, 0),
+             jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)  # (B,KH,G,Sq,Dv)->(B,Sq,KH*G,Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *, window: int = 0,
+                     scale: float | None = None) -> jax.Array:
+    """One decode step.  q: (B, 1, H, Dk); caches: (B, S, KH, D*).
+
+    ``length`` = number of valid cache entries (the new token's K/V must
+    already be written).  Masked full-cache attention — O(S) per step.
+    """
+    B, _, H, Dk = q.shape
+    _, S, KH, _ = k_cache.shape
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, KH, G, Dk)
+    # Match q's sharding to the cache (KH or head_dim over "model") so the
+    # score contraction stays shard-local with a tiny psum of (B,KH,G,S)
+    # scores — otherwise XLA all-gathers + upcasts the whole KV cache per
+    # decode step (§Perf iteration 3).
+    from ..distributed.context import constrain, current_mesh
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        n = mesh.shape["model"]
+        if KH % n == 0 and KH >= n:
+            qg = constrain(qg, None, "model", None, None)
+        elif Dk % n == 0:
+            qg = constrain(qg, None, None, None, "model")
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=F32) * scale
+    pos = jnp.arange(S)
+    mask = pos < length
+    if not _no_window(window):
+        w_eff = jnp.where(jnp.asarray(window) > 0, window, S + 1)
+        mask = mask & (pos >= length - w_eff)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention block (covers MHA as KH == H)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    d, H, KH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 0.02
+    out_sc = 0.02 / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "wq": _init(ks[0], (d, H, hd), sc, dt),
+        "wk": _init(ks[1], (d, KH, hd), sc, dt),
+        "wv": _init(ks[2], (d, KH, hd), sc, dt),
+        "wo": _init(ks[3], (H, hd, d), out_sc, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype=dt)
+        p["bk"] = jnp.zeros((KH, hd), dtype=dt)
+        p["bv"] = jnp.zeros((KH, hd), dtype=dt)
+    return p
+
+
+def attention_qkv(p: Params, x: jax.Array, positions: jax.Array,
+                  cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                    window: int = 0, kv_chunk: int | None = None,
+                    return_kv: bool = False):
+    """Full-sequence (training / prefill) attention."""
+    B, S, _ = x.shape
+    kv_chunk = kv_chunk or cfg.attn_kv_chunk or S
+    positions = jnp.arange(S)[None, :]
+    q, k, v = attention_qkv(p, x, positions, cfg)
+    o = flash_attention(q, k, v, causal=True, window=window, kv_chunk=kv_chunk)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def attention_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig, *,
+                     window: int = 0) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d).  cache: {"k": (B,S,KH,hd), "v": ..., } + global "pos"."""
+    pos = cache["pos"]
+    positions = jnp.full((x.shape[0], 1), pos)
+    q, k, v = attention_qkv(p, x, positions, cfg)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+    o = decode_attention(q, kc, vc, pos + 1, window=window)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    sc = 0.02
+    out_sc = 0.02 / math.sqrt(2 * cfg.num_layers)
+    return {
+        "wq_a": _init(ks[0], (d, qr), sc, dt),                    # down
+        "wq_b": _init(ks[1], (qr, H, nope + rope), sc, dt),       # up
+        "wkv_a": _init(ks[2], (d, kvr + rope), sc, dt),           # latent + shared rope key
+        "wk_b": _init(ks[3], (kvr, H, nope), sc, dt),
+        "wv_b": _init(ks[4], (kvr, H, vdim), sc, dt),
+        "wo": _init(ks[5], (H, vdim, d), out_sc, dt),
+        "q_norm": init_rmsnorm(qr, dt),
+        "kv_norm": init_rmsnorm(kvr, dt),
+    }
+
+
+def _mla_q(p, x, positions, cfg: ArchConfig):
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, positions, cfg: ArchConfig):
+    kvr, rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rmsnorm(p["kv_norm"], kv[..., :kvr], cfg.norm_eps)
+    k_rope = kv[..., None, kvr:]                               # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return ckv, k_rope[..., 0, :]
+
+
+def mla_block(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              kv_chunk: int | None = None, return_kv: bool = False):
+    """Prefill/training MLA: expand latent to per-head K/V, flash over chunks.
+
+    K per head = [W_kb·c ; k_rope(shared)]; V per head = W_vb·c.
+    """
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kv_chunk = kv_chunk or cfg.attn_kv_chunk or S
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    ckv, k_rope = _mla_latent(p, x, positions, cfg)
+    # expanded keys/values (B,S,H,nope+rope) / (B,S,H,vdim)
+    k_nope = jnp.einsum("bsr,rhe->bshe", ckv, p["wk_b"])
+    v = jnp.einsum("bsr,rhe->bshe", ckv, p["wv_b"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk,
+                        scale=1.0 / math.sqrt(nope + rope))
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    if return_kv:
+        return out, {"ckv": ckv, "krope": k_rope}
+    return out
+
+
+def mla_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig
+               ) -> tuple[jax.Array, dict]:
+    """Absorbed-matmul MLA decode: score against the *latent* cache.
+
+    score = (q_nope·W_kb)·c + q_rope·k_rope ;  out = (attn·c)·W_vb — the
+    cache stores only (kv_lora + rope) per position (the MLA memory win).
+    """
+    B = x.shape[0]
+    pos = cache["pos"]
+    kvr, rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)       # (B,1,H,nope/rope)
+    ckv_t, k_rope_t = _mla_latent(p, x, positions, cfg)  # (B,1,kvr), (B,1,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope_t, pos, axis=1)
+    # absorb: q_lat (B,1,H,kvr)
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, p["wk_b"])
+    # keep the latent contraction shard-local (cache kvr dim is sharded
+    # over "model"); same reasoning as decode_attention (§Perf iteration 3)
+    from ..distributed.context import constrain, current_mesh
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        n = mesh.shape["model"]
+        if kvr % n == 0:
+            q_lat = constrain(q_lat, None, None, None, "model")
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv,
+                    preferred_element_type=F32)
+         + jnp.einsum("bqhe,bse->bhqs", q_rope, kr,
+                      preferred_element_type=F32))
+    s = s * (1.0 / math.sqrt(cfg.qk_nope_head_dim + rope))
+    S = ckv.shape[1]
+    mask = jnp.arange(S) < pos + 1
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(F32))  # (B,1,H,kvr)
+    o = jnp.einsum("bqhr,rhe->bqhe", o_lat.astype(x.dtype), p["wv_b"])
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, {"ckv": ckv, "krope": kr}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    dt = _dtype(cfg)
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_sc = 0.02 / math.sqrt(2 * cfg.num_layers)
+    return {
+        "wi": _init(ks[0], (d, ff), 0.02, dt),
+        "wg": _init(ks[1], (d, ff), 0.02, dt),
+        "wo": _init(ks[2], (ff, d), out_sc, dt),
+    }
+
+
+def mlp_block(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

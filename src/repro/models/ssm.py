@@ -1,0 +1,194 @@
+"""Mamba-2 / SSD (state-space duality) layer — chunked train/prefill scan and
+O(1)-per-token recurrent decode.  Pure JAX (einsum + associative_scan); the
+chunk-local quadratic part is MXU-friendly by construction (Q×Q matmuls).
+
+Follows "Transformers are SSDs" (arXiv:2405.21060) §6 chunked algorithm:
+  y = SSD(x, A, B, C) with per-head scalar decay A, grouped B/C (G groups).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, _init, _dtype, init_rmsnorm, rmsnorm
+
+F32 = jnp.float32
+
+
+def init_ssm(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    nh, ds, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * G * ds
+    ks = jax.random.split(key, 6)
+    out_sc = 0.02 / math.sqrt(2 * cfg.num_layers)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": _init(ks[0], (d, 2 * di + 2 * G * ds + nh), 0.02, dt),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_dim), 0.2, dt),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(F32),
+        "D": jnp.ones((nh,), dtype=F32),
+        "dt_bias": jnp.zeros((nh,), dtype=F32),
+        "norm": init_rmsnorm(di, dt),
+        "w_out": _init(ks[2], (di, d), out_sc, dt),
+    }
+
+
+def _split_proj(p: Params, x: jax.Array, cfg: ArchConfig):
+    di, ds, G, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * ds], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p: Params, xBC: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time; xBC: (B, S, conv_dim)."""
+    w = p["conv_w"].astype(F32)                     # (K, conv_dim)
+    K = w.shape[0]
+    xp = jnp.pad(xBC.astype(F32), ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"].astype(F32)).astype(xBC.dtype)
+
+
+def _heads(cfg: ArchConfig, xBC: jax.Array):
+    di, ds, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    xh, B, C = jnp.split(xBC, [di, di + G * ds], axis=-1)
+    b, s = xh.shape[:2]
+    xh = xh.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+    B = B.reshape(b, s, G, ds)
+    C = C.reshape(b, s, G, ds)
+    return xh, B, C
+
+
+def ssd_scan(xh, B, C, dt, A, *, chunk: int):
+    """Chunked SSD.  xh: (b,S,nh,hp)  B,C: (b,S,G,ds)  dt: (b,S,nh)  A: (nh,).
+
+    Heads are split evenly over the G groups.  Returns y: (b,S,nh,hp) and the
+    final state (b,nh,hp,ds).
+    """
+    b, S, nh, hp = xh.shape
+    G, ds = B.shape[2], B.shape[3]
+    hg = nh // G
+    Q = min(chunk, S)
+    NC = -(-S // Q)
+    pad = NC * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xc = xh.reshape(b, NC, Q, nh, hp).astype(F32)
+    Bc = B.reshape(b, NC, Q, G, ds).astype(F32)
+    Cc = C.reshape(b, NC, Q, G, ds).astype(F32)
+    dtc = dt.reshape(b, NC, Q, nh).astype(F32)
+
+    dA = dtc * A[None, None, None, :]                 # (b,NC,Q,nh) negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    seg_end = cum[:, :, -1, :]                        # (b,NC,nh)
+
+    # --- intra-chunk (quadratic within Q) ---
+    # decay L[q, t] = exp(cum_q - cum_t) for q >= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,NC,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bnqgs,bntgs->bnqtg", Cc, Bc)          # (b,NC,Q,Q,G)
+    CB = jnp.repeat(CB, hg, axis=-1)                       # (b,NC,Q,Q,nh)
+    M = CB * L
+    xdt = xc * dtc[..., None]                              # (b,NC,Q,nh,hp)
+    y_intra = jnp.einsum("bnqth,bnthp->bnqhp", M, xdt)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum)   # (b,NC,Q,nh)
+    Bc_h = jnp.repeat(Bc, hg, axis=3) if G != nh else Bc   # (b,NC,Q,nh,ds)
+    states = jnp.einsum("bnths,bnthp->bnhps",
+                        Bc_h, xdt * decay_to_end[..., None])
+
+    # --- inter-chunk recurrence: H_{c} = H_{c-1} * exp(seg_end_c) + S_c ---
+    seg_decay = jnp.exp(seg_end)                           # (b,NC,nh)
+
+    def combine(a, bb):
+        d1, s1 = a
+        d2, s2 = bb
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_scan, st_scan = jax.lax.associative_scan(
+        combine, (seg_decay, states), axis=1)
+    # H_prev for chunk c = state after chunk c-1
+    H_prev = jnp.concatenate(
+        [jnp.zeros_like(st_scan[:, :1]), st_scan[:, :-1]], axis=1)
+
+    # --- inter-chunk output: y_t += C_t · (exp(cum_t) * H_prev) ---
+    Cc_h = jnp.repeat(Cc, hg, axis=3) if G != nh else Cc   # (b,NC,Q,nh,ds)
+    y_inter = jnp.einsum("bnths,bnhps->bnthp", Cc_h,
+                         H_prev) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, NC * Q, nh, hp)[:, :S]
+    final_state = st_scan[:, -1]                           # (b,nh,hp,ds)
+    return y, final_state
+
+
+def ssm_block(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              return_state: bool = False):
+    """Training / prefill forward.  x: (B, S, d_model)."""
+    z, xBC_raw, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(p, xBC_raw)
+    xh, B, C = _heads(cfg, xBC)
+    A = -jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+    y, state = ssd_scan(xh, B, C, dt_s, A, chunk=cfg.ssm_chunk)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_state:
+        K = cfg.ssm_conv
+        conv_tail = xBC_raw[:, -(K - 1):, :]   # pre-activation window tail
+        if x.shape[1] < K - 1:
+            conv_tail = jnp.pad(
+                xBC_raw, ((0, 0), (K - 1 - x.shape[1], 0), (0, 0)))
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), dtype=F32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype=dtype),
+    }
+
+
+def ssm_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig
+               ) -> tuple[jax.Array, dict]:
+    """One-token recurrent step.  x: (B, 1, d_model)."""
+    b = x.shape[0]
+    nh, hp, ds, G = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                     cfg.ssm_groups)
+    z, xBC, dt = _split_proj(p, x, cfg)
+    # conv with rolling cache
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)   # (B, K, conv)
+    w = p["conv_w"].astype(F32)
+    conv_out = (window.astype(F32) * w[None]).sum(axis=1) + p["conv_b"].astype(F32)
+    xBC_t = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xh, B, C = _heads(cfg, xBC_t)
+    xh, B, C = xh[:, 0], B[:, 0], C[:, 0]                    # (B,nh,hp),(B,G,ds)
+    hg = nh // G
+    B_h = jnp.repeat(B, hg, axis=1).astype(F32)              # (B,nh,ds)
+    C_h = jnp.repeat(C, hg, axis=1).astype(F32)
+    A = -jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"])  # (B,nh)
+    dA = jnp.exp(dt_s * A[None])                             # (B,nh)
+    upd = jnp.einsum("bhp,bhs->bhps", xh.astype(F32) * dt_s[..., None], B_h)
+    state = cache["state"] * dA[..., None, None] + upd
+    y = jnp.einsum("bhps,bhs->bhp", state, C_h)
+    y = y + xh.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,439 @@
+"""Model assembly: embedding → scanned blocks → norm → chunked-xent loss,
+plus the KV-cache decode path.  One ``Model`` class covers all 10 assigned
+families (dense / MoE / SSM / hybrid / VLM / audio) — family differences are
+config-driven.
+
+Layers are *stacked* (leading ``num_layers`` dim on every leaf) and consumed
+by ``jax.lax.scan`` so a 95-layer model lowers as one block body — essential
+for the 80-compile dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import (batch_axes, constrain, constrain_batch,
+                                   constrain_tokens, current_mesh)
+from .config import ArchConfig
+from .layers import (Params, _dtype, _init, attention_block, attention_decode,
+                     init_attention, init_mla, init_mlp, init_rmsnorm,
+                     mla_block, mla_decode, mlp_block, rmsnorm)
+from .moe import capacity_for, init_moe, moe_block
+from .ssm import init_ssm, init_ssm_cache, ssm_block, ssm_decode
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model, dt)}
+    if cfg.attention == "mla":
+        p["attn"] = init_mla(ks[0], cfg)
+    elif cfg.attention in ("gqa", "swa"):
+        p["attn"] = init_attention(ks[0], cfg)
+    if cfg.uses_ssm:
+        p["ssm"] = init_ssm(ks[1], cfg)
+        if cfg.family == "hybrid":
+            p["ln_attn_out"] = init_rmsnorm(cfg.d_model, dt)
+            p["ln_ssm_out"] = init_rmsnorm(cfg.d_model, dt)
+    if cfg.uses_moe:
+        p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+        p["moe"] = init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+        p["mlp"] = init_mlp(ks[3], cfg)
+    return p
+
+
+def block_forward(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  window) -> jax.Array:
+    """window: 0/int for static, or a traced scalar (hybrid per-layer)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = attention_block(p["attn"], h, cfg, window=window)
+        s = ssm_block(p["ssm"], h, cfg)
+        a = rmsnorm(p["ln_attn_out"], a, cfg.norm_eps)
+        s = rmsnorm(p["ln_ssm_out"], s, cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+    elif cfg.uses_ssm:
+        x = x + ssm_block(p["ssm"], x=h, cfg=cfg)
+    elif cfg.attention == "mla":
+        x = x + mla_block(p["attn"], h, cfg)
+    else:
+        x = x + attention_block(p["attn"], h, cfg, window=window)
+    x = constrain_tokens(x, seq_shard=cfg.seq_shard_activations)
+    if cfg.uses_moe:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + moe_block(p["moe"], h2, cfg, mesh=current_mesh(),
+                          batch_axes=batch_axes() or ("data",))
+    elif cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_block(p["mlp"], h2)
+    return constrain_tokens(x, seq_shard=cfg.seq_shard_activations)
+
+
+def block_prefill(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  window) -> tuple[jax.Array, dict]:
+    """block_forward that also emits this layer's decode-cache entry."""
+    entry: dict = {}
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a, kv = attention_block(p["attn"], h, cfg, window=window,
+                                return_kv=True)
+        s, st = ssm_block(p["ssm"], h, cfg, return_state=True)
+        a = rmsnorm(p["ln_attn_out"], a, cfg.norm_eps)
+        s = rmsnorm(p["ln_ssm_out"], s, cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+        entry.update(kv)
+        entry.update(st)
+    elif cfg.uses_ssm:
+        s, st = ssm_block(p["ssm"], h, cfg, return_state=True)
+        x = x + s
+        entry.update(st)
+    elif cfg.attention == "mla":
+        a, kv = mla_block(p["attn"], h, cfg, return_kv=True)
+        x = x + a
+        entry.update(kv)
+    else:
+        a, kv = attention_block(p["attn"], h, cfg, window=window,
+                                return_kv=True)
+        x = x + a
+        entry.update(kv)
+    x = constrain_batch(x)
+    if cfg.uses_moe:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + moe_block(p["moe"], h2, cfg, mesh=current_mesh(),
+                          batch_axes=batch_axes() or ("data",))
+    elif cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_block(p["mlp"], h2)
+    return constrain_batch(x), entry
+
+
+def block_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig, *,
+                 window) -> tuple[jax.Array, dict]:
+    new_cache = dict(cache)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a, ac = attention_decode(p["attn"], h, cache, cfg, window=window)
+        s, sc = ssm_decode(p["ssm"], h, cache, cfg)
+        a = rmsnorm(p["ln_attn_out"], a, cfg.norm_eps)
+        s = rmsnorm(p["ln_ssm_out"], s, cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+        new_cache.update(ac)
+        new_cache.update(sc)
+    elif cfg.uses_ssm:
+        s, sc = ssm_decode(p["ssm"], h, cache, cfg)
+        x = x + s
+        new_cache.update(sc)
+    elif cfg.attention == "mla":
+        a, ac = mla_decode(p["attn"], h, cache, cfg)
+        x = x + a
+        new_cache.update(ac)
+    else:
+        a, ac = attention_decode(p["attn"], h, cache, cfg, window=window)
+        x = x + a
+        new_cache.update(ac)
+    if cfg.uses_moe:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + moe_block(p["moe"], h2, cfg, mesh=current_mesh(),
+                          batch_axes=batch_axes() or ("data",))
+    elif cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_block(p["mlp"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer window sizes: 0 = full attention."""
+    if cfg.attention != "swa" or not cfg.window:
+        return jnp.zeros((cfg.num_layers,), dtype=jnp.int32)
+    w = [0 if i in set(cfg.global_layers) else cfg.window
+         for i in range(cfg.num_layers)]
+    return jnp.asarray(w, dtype=jnp.int32)
+
+
+def _sub_cfgs(cfg: ArchConfig) -> list[ArchConfig]:
+    """Per-scan-step sub-layer configs (llama4: [dense, moe] per group)."""
+    if cfg.uses_moe and cfg.moe_every > 1:
+        dense = dataclasses.replace(cfg, num_experts=0, shared_expert_ff=0)
+        return [dense] * (cfg.moe_every - 1) + [cfg]
+    return [cfg]
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    g = len(_sub_cfgs(cfg))
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    return cfg.num_layers // g
+
+
+def init_group(key, cfg: ArchConfig) -> Params:
+    subs = _sub_cfgs(cfg)
+    if len(subs) == 1:
+        return init_block(key, cfg)
+    ks = jax.random.split(key, len(subs))
+    return {f"s{i}": init_block(k, sc) for i, (k, sc) in enumerate(zip(ks, subs))}
+
+
+def group_forward(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  window) -> jax.Array:
+    subs = _sub_cfgs(cfg)
+    if len(subs) == 1:
+        return block_forward(p, x, cfg, window=window)
+    for i, sc in enumerate(subs):
+        x = block_forward(p[f"s{i}"], x, sc, window=window)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init ------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_head, k_layers, k_front = jax.random.split(key, 4)
+        layer_keys = jax.random.split(k_layers, _n_groups(cfg))
+        layers = jax.vmap(lambda k: init_group(k, cfg))(layer_keys)
+        p: Params = {
+            "embed": _init(k_emb, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+            "final_norm": init_rmsnorm(cfg.d_model, dt),
+            "layers": layers,
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = _init(k_head, (cfg.d_model, cfg.vocab_size),
+                                 0.02, dt)
+        if cfg.frontend != "none":
+            p["adapter"] = _init(k_front, (cfg.d_model, cfg.d_model),
+                                 0.02, dt)
+        return p
+
+    # ---- forward ----------------------------------------------------------
+
+    def embed_inputs(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frontend != "none":
+            x = batch["embeds"].astype(_dtype(cfg))
+            x = jnp.einsum("bsd,de->bse", x, params["adapter"])
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return constrain_batch(x)
+
+    def hidden_states(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        swa = cfg.attention == "swa" and cfg.window > 0
+
+        def body(carry, xs):
+            if swa:
+                lp, w = xs
+            else:
+                lp, w = xs, 0
+            out = group_forward(lp, carry, cfg, window=w)
+            return out, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        xs = (params["layers"], _layer_windows(cfg)) if swa else params["layers"]
+        x, _ = jax.lax.scan(body, x, xs)
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    def unembed(self, params: Params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        """Chunked softmax cross-entropy (never materializes (T, V) logits)."""
+        cfg = self.cfg
+        h = self.hidden_states(params, batch)
+        B, S, d = h.shape
+        labels = batch["labels"]
+        w_head = self.unembed(params)
+        hf = h.reshape(B * S, d)
+        lf = labels.reshape(B * S)
+        chunk = min(cfg.loss_chunk, B * S)
+        n = -(-hf.shape[0] // chunk)
+        pad = n * chunk - hf.shape[0]
+        if pad:
+            hf = jnp.pad(hf, ((0, pad), (0, 0)))
+            lf = jnp.pad(lf, (0, pad), constant_values=-1)
+        hc = hf.reshape(n, chunk, d)
+        lc = lf.reshape(n, chunk)
+
+        def chunk_loss(carry, xs):
+            hx, lx = xs
+            # native-dtype operands + f32 accumulation: avoids converting
+            # the (d, V) head to f32 once per chunk (§Perf iteration 1)
+            logits = jnp.einsum("cd,dv->cv", hx, w_head,
+                                preferred_element_type=F32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            # label logit via masked sum — partitions cleanly when the vocab
+            # dim is sharded (take_along_axis would all-gather the logits)
+            vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            ll = jnp.sum(jnp.where(vocab_iota == lx[:, None], logits, 0.0),
+                         axis=-1)
+            valid = (lx >= 0).astype(F32)
+            loss_sum, count = carry
+            return (loss_sum + ((lse - ll) * valid).sum(),
+                    count + valid.sum()), None
+
+        body = jax.checkpoint(chunk_loss, prevent_cse=False)
+        (loss_sum, count), _ = jax.lax.scan(
+            body, (jnp.zeros((), F32), jnp.zeros((), F32)), (hc, lc))
+        return loss_sum / jnp.maximum(count, 1.0)
+
+    def logits(self, params: Params, batch: dict) -> jax.Array:
+        """Full logits — small inputs only (tests/examples)."""
+        h = self.hidden_states(params, batch)
+        return jnp.einsum("bsd,dv->bsv", h.astype(F32),
+                          self.unembed(params).astype(F32))
+
+    def prefill(self, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        """Process a prompt, returning (last-token logits (B,V), decode cache).
+
+        The cache length equals the prompt length; callers wanting headroom
+        pad via ``extend_cache``.  MLA caches the latent; SSM caches the
+        final recurrent state + conv tail — so decode continues exactly.
+        """
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        swa = cfg.attention == "swa" and cfg.window > 0
+        subs = _sub_cfgs(cfg)
+        g = len(subs)
+
+        def body(carry, xs):
+            if swa:
+                lp, w = xs
+            else:
+                lp, w = xs, 0
+            if g == 1:
+                out, entry = block_prefill(lp, carry, cfg, window=w)
+                return out, entry
+            out = carry
+            entries = []
+            for i, sc in enumerate(subs):
+                out, e = block_prefill(lp[f"s{i}"], out, sc, window=w)
+                entries.append(e)
+            entry = {kk: jnp.stack([e[kk] for e in entries])
+                     for kk in entries[0]}
+            return out, entry
+
+        xs = (params["layers"], _layer_windows(cfg)) if swa else params["layers"]
+        x, cache = jax.lax.scan(body, x, xs)
+        if g > 1:
+            cache = {kk: vv.reshape(vv.shape[0] * g, *vv.shape[2:])
+                     for kk, vv in cache.items()}
+        S = x.shape[1]
+        h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(F32),
+                            self.unembed(params).astype(F32))[:, 0]
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    @staticmethod
+    def extend_cache(cache: dict, extra: int) -> dict:
+        """Pad sequence-indexed cache entries by ``extra`` positions."""
+        out = {}
+        for kk, vv in cache.items():
+            if kk in ("k", "v", "ckv", "krope"):
+                pad = [(0, 0)] * vv.ndim
+                pad[2] = (0, extra)
+                out[kk] = jnp.pad(vv, pad)
+            else:
+                out[kk] = vv
+        return out
+
+    # ---- decode ------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        L = cfg.num_layers
+        cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.attention in ("gqa", "swa"):
+            kvh, hd = cfg.num_kv_heads, cfg.head_dim
+            cache["k"] = jnp.zeros((L, batch, max_len, kvh, hd), dtype=dt)
+            cache["v"] = jnp.zeros((L, batch, max_len, kvh, hd), dtype=dt)
+        elif cfg.attention == "mla":
+            cache["ckv"] = jnp.zeros((L, batch, max_len, cfg.kv_lora_rank),
+                                     dtype=dt)
+            cache["krope"] = jnp.zeros(
+                (L, batch, max_len, cfg.qk_rope_head_dim), dtype=dt)
+        if cfg.uses_ssm:
+            sc = init_ssm_cache(cfg, batch, dt)
+            cache["state"] = jnp.broadcast_to(
+                sc["state"], (L, *sc["state"].shape)).astype(F32)
+            cache["conv"] = jnp.broadcast_to(
+                sc["conv"], (L, *sc["conv"].shape)).astype(dt)
+        return cache
+
+    def decode_step(self, params: Params, cache: dict, batch: dict
+                    ) -> tuple[jax.Array, dict]:
+        """One token for every sequence.  batch: {"tokens": (B,1)} or
+        {"embeds": (B,1,d)}.  Returns (logits (B,V), new cache)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        swa = cfg.attention == "swa" and cfg.window > 0
+        pos = cache["pos"]
+        subs = _sub_cfgs(cfg)
+        g = len(subs)
+        ng = _n_groups(cfg)
+        layer_caches = {
+            kk: vv.reshape(ng, g, *vv.shape[1:]) if g > 1 else vv
+            for kk, vv in cache.items() if kk != "pos"}
+
+        def body(carry, xs):
+            if swa:
+                lp, lc, w = xs
+            else:
+                (lp, lc), w = xs, 0
+            if g == 1:
+                lc = dict(lc, pos=pos)
+                out, nc = block_decode(lp, carry, lc, cfg, window=w)
+                nc.pop("pos", None)
+                return out, nc
+            out = carry
+            ncs = []
+            for i, sc in enumerate(subs):
+                lci = {kk: vv[i] for kk, vv in lc.items()}
+                lci["pos"] = pos
+                out, nci = block_decode(lp[f"s{i}"], out, lci, sc, window=w)
+                nci.pop("pos", None)
+                ncs.append(nci)
+            nc = {kk: jnp.stack([c[kk] for c in ncs]) for kk in ncs[0]}
+            return out, nc
+
+        xs = ((params["layers"], layer_caches, _layer_windows(cfg)) if swa
+              else (params["layers"], layer_caches))
+        x, new_caches = jax.lax.scan(body, x, xs)
+        if g > 1:
+            new_caches = {kk: vv.reshape(ng * g, *vv.shape[2:])
+                          for kk, vv in new_caches.items()}
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(F32),
+                            self.unembed(params).astype(F32))[:, 0]
+        new_caches["pos"] = pos + 1
+        return logits, new_caches

@@ -1,0 +1,109 @@
+"""Batched serving engine with POAS request dispatch.
+
+``ServingEngine`` runs prefill + decode for batches of requests on one model
+replica.  ``PoasDispatcher`` splits an incoming request batch across device
+groups (model replicas with differing throughput) using the POAS pipeline:
+predicted prefill+decode time per group (linear in tokens), min-makespan
+split, grain rounding — the serving analogue of hgemms (DESIGN.md §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.device_model import DeviceProfile
+from ..core.optimize import solve_bisection
+from ..models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray          # (prompt_len,)
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+
+
+class ServingEngine:
+    """One replica: batched greedy decode with a shared-length KV cache."""
+
+    def __init__(self, model: Model, params):
+        self.model = model
+        self.params = params
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(model.decode_step)
+
+    def generate(self, requests: Sequence[Request]) -> list[Completion]:
+        if not requests:
+            return []
+        plen = max(len(r.tokens) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        B = len(requests)
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):   # left-pad with token 0
+            prompts[i, plen - len(r.tokens):] = r.tokens
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        cache = self.model.extend_cache(cache, max_new)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        outs = [logits.argmax(-1)]
+        t0 = time.perf_counter()
+        for _ in range(max_new - 1):
+            tok = outs[-1][:, None].astype(jnp.int32)
+            logits, cache = self._step(self.params, cache, {"tokens": tok})
+            outs.append(logits.argmax(-1))
+        jax.block_until_ready(outs[-1])
+        t_decode = time.perf_counter() - t0
+
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)
+        return [Completion(r.uid, gen[i, :r.max_new_tokens],
+                           t_prefill, t_decode)
+                for i, r in enumerate(requests)]
+
+
+class PoasDispatcher:
+    """Split a request batch across heterogeneous serving groups."""
+
+    def __init__(self, groups: Sequence[DeviceProfile], *, grain: int = 1):
+        self.groups = list(groups)
+        self.grain = grain
+
+    def split(self, requests: Sequence[Request]) -> list[list[Request]]:
+        if not requests:
+            return [[] for _ in self.groups]
+        # ops = tokens to process (prompt + generated) per request
+        tok = [len(r.tokens) + r.max_new_tokens for r in requests]
+        total = float(sum(tok))
+        res = solve_bisection(self.groups, total, n=1, k=1,
+                              bus="independent")
+        # Adapt: convert op shares to request counts (greedy largest-first)
+        order = np.argsort(tok)[::-1]
+        budgets = list(res.ops)
+        buckets: list[list[Request]] = [[] for _ in self.groups]
+        for idx in order:
+            g = int(np.argmax(budgets))
+            buckets[g].append(requests[idx])
+            budgets[g] -= tok[idx]
+        return buckets
+
+    def predicted_makespan(self, buckets: Sequence[Sequence[Request]]) -> float:
+        t = 0.0
+        for g, reqs in zip(self.groups, buckets):
+            ops = float(sum(len(r.tokens) + r.max_new_tokens for r in reqs))
+            t = max(t, g.compute(ops))
+        return t

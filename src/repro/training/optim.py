@@ -1,0 +1,174 @@
+"""Optimizers — AdamW (dtype-configurable states) and Adafactor-style
+factored second moment for the largest models, plus global-norm clipping and
+LR schedules.  Pure pytree transforms (no external deps); optimizer states
+inherit the parameter sharding specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(F32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 halves optimizer memory (400B archs)
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=self.state_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, F32)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+
+        def upd(g, m, v, p):
+            g = g.astype(F32) * scale
+            m_new = b1 * m.astype(F32) + (1 - b1) * g
+            v_new = b2 * v.astype(F32) + (1 - b2) * g * g
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(F32)
+            new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+            return new_p, m_new.astype(self.state_dtype), v_new.astype(self.state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-style factored second moment (for the 400B-class archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FactoredAdam:
+    """First moment in bf16, second moment factored over the two largest
+    dims of >=2D params (O(n+m) instead of O(nm) memory)."""
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def second(p):
+            if p.ndim < 2:
+                return {"v": jnp.zeros(p.shape, F32)}
+            return {"vr": jnp.zeros(p.shape[:-1], F32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params),
+            "v": jax.tree.map(second, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+        }
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, F32)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        lr = self._lr(step)
+        d = self.decay
+
+        def upd(g, m, v, p):
+            g = g.astype(F32) * scale
+            g2 = g * g + self.eps
+            if p.ndim < 2:
+                v_new = {"v": d * v["v"] + (1 - d) * g2}
+                precond = jax.lax.rsqrt(v_new["v"])
+            else:
+                vr = d * v["vr"] + (1 - d) * g2.mean(axis=-1)
+                vc = d * v["vc"] + (1 - d) * g2.mean(axis=-2)
+                v_new = {"vr": vr, "vc": vc}
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), self.eps))
+                cfac = jax.lax.rsqrt(vc)
+                precond = rfac[..., None] * cfac[..., None, :]
+            m_new = self.b1 * m.astype(F32) + (1 - self.b1) * g
+            delta = m_new * precond
+            if p.ndim >= 2 and self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(F32)
+            new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+            return new_p, m_new.astype(jnp.bfloat16), v_new
+
+        is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_v)[0]
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+        vtree = jax.tree_util.tree_structure(state["v"], is_leaf=is_v)
+        new_v = jax.tree_util.tree_unflatten(vtree, [o[2] for o in outs])
+        return new_params, {"step": step, "m": new_m, "v": new_v}, \
+            {"grad_norm": gnorm, "lr": lr}

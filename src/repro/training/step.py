@@ -1,0 +1,59 @@
+"""Train / serve step builders — the functions the dry-run lowers and the
+training loop executes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from ..models.config import ArchConfig
+from .optim import AdamW, FactoredAdam, cosine_schedule
+
+
+def default_optimizer(cfg: ArchConfig):
+    """bf16 AdamW states by default; factored second moment for ≥100B params
+    (the 400B-class archs can't hold full Adam states on one pod)."""
+    lr = cosine_schedule(3e-4, warmup=200, total=10_000)
+    if cfg.param_count() > 100e9:
+        return FactoredAdam(learning_rate=lr)
+    return AdamW(learning_rate=lr, state_dtype=jnp.bfloat16)
+
+
+def make_train_step(model: Model, optimizer) -> Callable:
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        new_params, new_opt, metrics = optimizer.update(
+            grads, state["opt"], state["params"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return serve_step
+
+
+def init_state(model: Model, optimizer, key) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params)}

@@ -1,0 +1,288 @@
+"""Unit + property tests for the POAS core (predict/optimize/adapt/schedule)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CopyModel, DeviceProfile, GemmWorkload, HGemms,
+                        LinearTimeModel, NO_COPY, DynamicScheduler,
+                        StaticScheduler, decompose_square, fit_linear,
+                        ops_to_mnk, paper_mach1, paper_mach2, priority_order,
+                        relative_error, rmse, simulate_timeline, squareness,
+                        solve_analytic, solve_bisection, solve_local_search,
+                        Profiler, simulated_runner, save_profiles,
+                        load_profiles)
+
+
+def _mk(name, tflops, bw=None, align=1, b=1e-4):
+    ops_per_s = tflops * 1e12 / 2
+    copy = NO_COPY if bw is None else CopyModel(bw, dtype_size=4)
+    return DeviceProfile(name, "gpu" if bw else "cpu",
+                         LinearTimeModel(a=1 / ops_per_s, b=b), copy,
+                         align_m=align)
+
+
+# ---------------------------------------------------------------- predict --
+
+def test_fit_linear_recovers_model():
+    truth = LinearTimeModel(a=2.5e-12, b=3e-3)
+    xs = np.linspace(1e9, 64e9, 20)
+    ys = [truth(x) for x in xs]
+    fit = fit_linear(xs, ys)
+    assert fit.a == pytest.approx(truth.a, rel=1e-9)
+    assert fit.b == pytest.approx(truth.b, rel=1e-6)
+
+
+def test_fit_linear_noise_robust():
+    rng = np.random.default_rng(0)
+    truth = LinearTimeModel(a=1e-12, b=1e-3)
+    xs = np.linspace(1e9, 27e9, 30)
+    ys = [truth(x) * (1 + 0.02 * rng.standard_normal()) for x in xs]
+    fit = fit_linear(xs, ys)
+    assert fit.a == pytest.approx(truth.a, rel=0.05)
+
+
+def test_profiler_simulated_roundtrip():
+    dev = _mk("sim", 10.0)
+    prof = Profiler(simulated_runner(dev, noise=0.01), repeats=5)
+    prof.run(range(1000, 2001, 100))
+    fit = prof.fit()
+    assert fit.a == pytest.approx(dev.compute.a, rel=0.1)
+
+
+def test_relative_error_and_rmse():
+    assert relative_error(95.0, 100.0) == pytest.approx(5.0)
+    assert rmse([3.0, 4.0]) == pytest.approx(math.sqrt(12.5))
+
+
+def test_profile_persistence(tmp_path):
+    devs = paper_mach1()
+    path = tmp_path / "profiles.json"
+    save_profiles(str(path), devs)
+    loaded = load_profiles(str(path))
+    assert [d.name for d in loaded] == [d.name for d in devs]
+    assert loaded[1].compute.a == pytest.approx(devs[1].compute.a)
+    assert loaded[1].copy.bandwidth_bytes_per_s == pytest.approx(
+        devs[1].copy.bandwidth_bytes_per_s)
+
+
+# --------------------------------------------------------------- optimize --
+
+def test_bisection_matches_analytic_linear():
+    devs = [_mk("cpu", 1.0), _mk("gpu", 10.0, bw=16e9), _mk("xpu", 40.0, bw=16e9)]
+    N, n, k = 8e12, 20000, 20000
+    b = solve_bisection(devs, N, n=n, k=k, bus="independent")
+    a = solve_analytic(devs, N, n=n, k=k)
+    assert b.makespan == pytest.approx(a.makespan, rel=1e-6)
+    for x, y in zip(b.ops, a.ops):
+        assert x == pytest.approx(y, rel=1e-4)
+
+
+def test_bisection_matches_local_search():
+    devs = paper_mach2()
+    N, n, k = 27e12, 30000, 30000
+    b = solve_bisection(devs, N, n=n, k=k, bus="serialized")
+    ls = solve_local_search(devs, N, n=n, k=k, bus="serialized")
+    # local search is approximate; bisection must be at least as good
+    assert b.makespan <= ls.makespan * 1.001
+    assert b.makespan == pytest.approx(ls.makespan, rel=0.02)
+
+
+def test_ops_conservation():
+    devs = paper_mach1()
+    N = 42e12
+    r = solve_bisection(devs, N, n=20000, k=35000, bus="serialized")
+    assert sum(r.ops) == pytest.approx(N, rel=1e-9)
+    assert all(c >= 0 for c in r.ops)
+
+
+def test_single_device_degenerates():
+    devs = [_mk("only", 5.0)]
+    r = solve_bisection(devs, 1e12, n=1000, k=1000)
+    assert r.ops[0] == pytest.approx(1e12)
+    assert r.makespan == pytest.approx(devs[0].compute(1e12), rel=1e-6)
+
+
+def test_faster_device_gets_more_work():
+    devs = [_mk("slow", 1.0), _mk("fast", 10.0)]
+    r = solve_bisection(devs, 1e13, n=10000, k=10000)
+    assert r.ops[1] > 5 * r.ops[0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(tf1=st.floats(0.5, 50), tf2=st.floats(0.5, 50),
+       npow=st.integers(10, 14))
+def test_bisection_optimality_property(tf1, tf2, npow):
+    """Property: no rebalancing of the bisection split improves the makespan
+    (checked against a dense sweep of alternative splits)."""
+    devs = [_mk("a", tf1), _mk("b", tf2, bw=16e9)]
+    N = float(2 ** npow) * 1e9
+    n = k = 4000
+    r = solve_bisection(devs, N, n=n, k=k, bus="independent")
+    best = min(max(devs[0].total_time(f * N, n, k),
+                   devs[1].total_time((1 - f) * N, n, k))
+               for f in np.linspace(0, 1, 2001))
+    assert r.makespan <= best * 1.001
+
+
+# ------------------------------------------------------------------ adapt --
+
+def test_ops_to_mnk_rows_conserved():
+    devs = paper_mach1()
+    m, n, k = 30000, 30000, 30000
+    r = solve_bisection(devs, float(m) * n * k, n=n, k=k, bus="serialized")
+    plan = ops_to_mnk(devs, r.ops, m, n, k)
+    assert plan.total_rows() == m
+    offs = 0
+    for a in plan.assignments:
+        assert a.row0 == offs
+        offs += a.m
+
+
+def test_ops_to_mnk_alignment():
+    devs = paper_mach1()  # xpu has align_m=8
+    m, n, k = 30001, 4096, 4096
+    r = solve_bisection(devs, float(m) * n * k, n=n, k=k)
+    plan = ops_to_mnk(devs, r.ops, m, n, k)
+    xpu = plan.assignments[2]
+    # alignment is best-effort: xpu rows must be a multiple of 8 unless the
+    # leftover forced a remainder packet
+    assert plan.total_rows() == m
+    assert xpu.m % 8 in (0, m % 8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(16, 5000), n=st.integers(16, 3000),
+       k=st.integers(16, 3000),
+       shares=st.lists(st.floats(0.01, 1.0), min_size=1, max_size=4))
+def test_ops_to_mnk_property(m, n, k, shares):
+    total = float(m) * n * k
+    ops = [s / sum(shares) * total for s in shares]
+    devs = [_mk(f"d{i}", 1.0 + i, align=1) for i in range(len(shares))]
+    plan = ops_to_mnk(devs, ops, m, n, k, decompose=False)
+    assert plan.total_rows() == m
+    assert all(a.m >= 0 for a in plan.assignments)
+
+
+def test_decompose_square_covers_slice():
+    tiles = decompose_square(1000, 2000, 500)
+    # tiles must exactly cover the (1000 x 2000) A-slice area
+    area = sum(t.m * t.k for t in tiles)
+    assert area == 1000 * 2000
+    # k' divides k
+    kps = {t.k for t in tiles if t.k0 + t.k < 2000 or 2000 % t.k == 0}
+    assert kps
+
+
+def test_decompose_square_prefers_square():
+    tiles = decompose_square(2000, 2000, 2000)
+    m0, k0 = tiles[0].m, tiles[0].k
+    assert 0.45 <= m0 / k0 <= 2.2  # near-square leading tile
+
+
+def test_squareness_heuristic():
+    # perfectly square beats skinny at equal volume
+    assert squareness([100], [100], 10) > squareness([1000], [10], 10)
+
+
+# --------------------------------------------------------------- schedule --
+
+def test_priority_order_fastest_first():
+    devs = paper_mach1()
+    order = priority_order(devs)
+    assert devs[order[0]].kind == "xpu"
+    assert devs[order[-1]].kind == "cpu"
+
+
+def test_timeline_bus_serialization():
+    devs = paper_mach2()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus="serialized")
+    tl = simulate_timeline(devs, r.ops, 30000, 30000)
+    copies = sorted([e for e in tl.events if e.kind == "copy_in"],
+                    key=lambda e: e.start)
+    # no two bus transfers overlap
+    for a, b in zip(copies, copies[1:]):
+        assert b.start >= a.end - 1e-12
+    # priority: xpu (fastest) copies first
+    assert copies[0].device == "2080ti-tensor"
+
+
+def test_timeline_compute_after_copy_in():
+    devs = paper_mach2()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus="serialized")
+    tl = simulate_timeline(devs, r.ops, 30000, 30000)
+    for d in devs:
+        evs = {e.kind: e for e in tl.device_events(d.name)}
+        if "copy_in" in evs and "compute" in evs:
+            assert evs["compute"].start >= evs["copy_in"].end - 1e-12
+
+
+def test_static_scheduler_end_to_end():
+    sched = StaticScheduler(paper_mach1())
+    s = sched.plan(27e12, n=30000, k=30000)
+    assert s.timeline.makespan > 0
+    assert sum(s.result.ops) == pytest.approx(27e12, rel=1e-9)
+
+
+def test_dynamic_scheduler_adapts_to_straggler():
+    devs = [_mk("a", 10.0), _mk("b", 10.0)]
+    dyn = DynamicScheduler(devs, bus="independent")
+    n = k = 4000
+    plan0 = dyn.plan(1e13, n=n, k=k)
+    share0 = plan0.result.shares()
+    assert share0[0] == pytest.approx(0.5, abs=0.05)
+    # device b suddenly runs 4x slower (straggler): feed observations
+    for ops in (1e12, 2e12, 3e12):
+        dyn.observe(0, ops, devs[0].compute(ops))
+        dyn.observe(1, ops, devs[1].compute(ops) * 4.0)
+    plan1 = dyn.plan(1e13, n=n, k=k)
+    share1 = plan1.result.shares()
+    assert share1[0] > 0.70  # healthy device now gets the bulk
+    assert plan1.result.makespan < plan0.result.makespan * 4.0
+
+
+# ----------------------------------------------------------------- hgemms --
+
+def test_hgemms_correctness_small():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 96)).astype(np.float32)
+    b = rng.standard_normal((96, 128)).astype(np.float32)
+    hg = HGemms(paper_mach1())
+    c, rep = hg.execute(a, b)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    assert rep.simulated_makespan > 0
+
+
+def test_hgemms_speedup_over_standalone():
+    hg = HGemms(paper_mach2())
+    m = n = k = 2048  # numerics small; timing model from ops regardless
+    plan = hg.plan(30000, 30000, 30000)
+    mk = plan.schedule.timeline.makespan
+    xpu_alone = hg.devices[2].total_time(27e12, 30000, 30000)
+    assert mk < xpu_alone  # co-execution beats the best single device
+    speedup = xpu_alone / mk
+    assert 1.1 < speedup < 1.8  # paper: up to 1.45x on mach2
+
+
+def test_hgemms_work_distribution_matches_paper():
+    """Table 6: mach1 ≈ 0.3% CPU / 21-27% GPU / 73-80% XPU."""
+    hg = HGemms(paper_mach1())
+    plan = hg.plan(30000, 30000, 30000)
+    shares = [a.ops for a in plan.adapted.assignments]
+    shares = [s / sum(shares) for s in shares]
+    assert shares[0] < 0.02          # CPU
+    assert 0.15 < shares[1] < 0.32   # GPU
+    assert 0.68 < shares[2] < 0.85   # XPU
+
+
+def test_hgemms_prediction_errors_low():
+    hg = HGemms(paper_mach2())
+    errs = hg.prediction_errors(30000, 30000, 30000, noise=0.03)
+    for dev, e in errs.items():
+        assert e["global"] < 15.0, (dev, e)
+
+
+def test_workload_total_ops():
+    w = GemmWorkload(30000, 30000, 30000)
+    assert w.total_ops() == 27e12

@@ -1,0 +1,63 @@
+"""Pallas matmul kernel vs pure-jnp oracle (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.ref import matmul_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),
+    (256, 512, 128),
+    (64, 384, 256),
+    (100, 130, 50),      # ragged (padding path)
+    (8, 128, 128),       # single sublane block
+    (512, 256, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_allclose(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    a = _rand(ka, (m, k), dtype)
+    b = _rand(kb, (k, n), dtype)
+    out = matmul_pallas(a, b, block_m=64, block_n=128, block_k=128,
+                        interpret=True)
+    ref = matmul_ref(a, b)
+    # f32: accumulation-order noise grows with k (different block reduction
+    # order than the XLA dot); bf16: input rounding dominates.
+    rtol, atol = (1e-4, 1e-3) if dtype == jnp.float32 else (2e-2, 2e-1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+def test_matmul_block_shape_independence():
+    """Result must not depend on the chosen tiling."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand(ka, (192, 256), jnp.float32)
+    b = _rand(kb, (256, 192), jnp.float32)
+    outs = [
+        matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
+                      interpret=True)
+        for bm, bn, bk in [(64, 128, 128), (192, 192, 256), (8, 128, 128)]
+    ]
+    for o in outs[1:]:
+        # different k-block counts reduce in different orders
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_f32_accumulation_in_bf16():
+    """bf16 inputs must accumulate in f32 (catches naive bf16 adds)."""
+    k = 4096
+    a = jnp.full((8, k), 0.01, jnp.bfloat16)
+    b = jnp.full((k, 128), 0.01, jnp.bfloat16)
+    out = matmul_pallas(a, b, interpret=True)
+    expected = k * 0.01 * 0.01  # ~0.4096; bf16 accumulation would collapse
+    rel = abs(float(out[0, 0]) - expected) / expected
+    assert rel < 0.02, rel

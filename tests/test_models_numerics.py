@@ -1,0 +1,149 @@
+"""Numerical correctness of model layers vs naive references (CPU, f32)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_rope, decode_attention,
+                                 flash_attention, rmsnorm, init_rmsnorm)
+from repro.models.ssm import ssd_scan
+
+jax.config.update("jax_enable_x64", False)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, scale=None):
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kx) * scale
+    qp, kp = jnp.arange(Sq)[:, None], jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+
+
+@pytest.mark.parametrize("Sq,Sk,H,KH,D,chunk", [
+    (32, 32, 4, 4, 16, 8),
+    (64, 64, 8, 2, 32, 16),
+    (17, 17, 4, 1, 8, 5),     # ragged: chunk does not divide S
+    (128, 128, 6, 3, 64, 128),  # single chunk
+])
+def test_flash_vs_naive(Sq, Sk, H, KH, D, chunk):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, Sq, H, D), jnp.float32)
+    k = jax.random.normal(kk, (2, Sk, KH, D), jnp.float32)
+    v = jax.random.normal(kv, (2, Sk, KH, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, kv_chunk=chunk)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_flash_window_vs_naive(window):
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 48, 4, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 48, 2, 16), jnp.float32)
+    v = jax.random.normal(kv, (2, 48, 2, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, kv_chunk=16)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_traced_window_matches_static():
+    key = jax.random.PRNGKey(2)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 32, 2, 8), jnp.float32)
+    k = jax.random.normal(kk, (1, 32, 2, 8), jnp.float32)
+    v = jax.random.normal(kv, (1, 32, 2, 8), jnp.float32)
+    st = flash_attention(q, k, v, window=8, kv_chunk=16)
+    tr = flash_attention(q, k, v, window=jnp.int32(8), kv_chunk=16)
+    full_tr = flash_attention(q, k, v, window=jnp.int32(0), kv_chunk=16)
+    full_st = flash_attention(q, k, v, window=0, kv_chunk=16)
+    np.testing.assert_allclose(st, tr, rtol=1e-6)
+    np.testing.assert_allclose(full_tr, full_st, rtol=1e-6)
+
+
+def test_decode_matches_prefill_last_token():
+    """Decode-step attention at position t == prefill attention row t."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, S, H, KH, D = 2, 24, 4, 2, 16
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KH, D), jnp.float32)
+    full = flash_attention(q, k, v, causal=True, kv_chunk=8)
+    # cache with padding beyond S
+    pad = 8
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dec = decode_attention(q[:, S - 1:S], kc, vc, jnp.int32(S))
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+def naive_ssd(xh, B, C, dt, A):
+    """O(S^2)-free sequential reference recurrence."""
+    b, S, nh, hp = xh.shape
+    G, ds = B.shape[2], B.shape[3]
+    hg = nh // G
+    Bh = jnp.repeat(B, hg, axis=2)
+    Ch = jnp.repeat(C, hg, axis=2)
+    h = jnp.zeros((b, nh, hp, ds))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None])                       # (b,nh)
+        upd = jnp.einsum("bhp,bhs->bhps", xh[:, t] * dt[:, t][..., None],
+                         Bh[:, t])
+        h = h * dA[..., None, None] + upd
+        ys.append(jnp.einsum("bhps,bhs->bhp", h, Ch[:, t]))
+    return jnp.stack(ys, axis=1), h
+
+
+@pytest.mark.parametrize("S,chunk,G", [(16, 4, 1), (24, 8, 2), (13, 5, 1)])
+def test_ssd_chunked_vs_sequential(S, chunk, G):
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 4)
+    b, nh, hp, ds = 2, 4, 8, 16
+    xh = jax.random.normal(ks[0], (b, S, nh, hp))
+    B = jax.random.normal(ks[1], (b, S, G, ds)) * 0.5
+    C = jax.random.normal(ks[2], (b, S, G, ds)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, S, nh)))
+    A = -jnp.exp(jnp.linspace(-1.0, 1.0, nh))
+    y, st = ssd_scan(xh, B, C, dt, A, chunk=chunk)
+    y_ref, st_ref = naive_ssd(xh, B, C, dt, A)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st, st_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on m - n."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, 32))
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.array([[m]]), 1e4)
+        kn = apply_rope(k, jnp.array([[n]]), 1e4)
+        return float(jnp.sum(qm * kn))
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-5)
+    assert dot_at(5, 3) != pytest.approx(dot_at(12, 3), rel=1e-3)
+
+
+def test_rmsnorm_unit_scale():
+    p = init_rmsnorm(16, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 16)) * 10
+    y = rmsnorm(p, x, 1e-6)
+    norm = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(norm, jnp.ones_like(norm), rtol=1e-3)

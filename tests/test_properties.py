@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system-level invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
+                        simulate_timeline, solve_bisection)
+from repro.core.adapt import decompose_square
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def _devs(tflops_list, bw=16e9):
+    out = []
+    for i, tf in enumerate(tflops_list):
+        ops = tf * 1e12 / 2
+        copy = NO_COPY if i == 0 else CopyModel(bw, dtype_size=4)
+        out.append(DeviceProfile(f"d{i}", "cpu" if i == 0 else "gpu",
+                                 LinearTimeModel(a=1 / ops, b=1e-4), copy))
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(tfs=st.lists(st.floats(0.5, 80), min_size=2, max_size=4),
+       mexp=st.integers(11, 13))
+def test_coexecution_never_slower_than_best_device(tfs, mexp):
+    """POAS invariant: co-execution makespan <= best standalone device."""
+    devs = _devs(tfs)
+    n = k = 2 ** mexp
+    N = float(n) * n * k
+    res = solve_bisection(devs, N, n=n, k=k, bus="serialized")
+    best_alone = min(d.total_time(N, n, k) for d in devs)
+    assert res.makespan <= best_alone * 1.0001
+
+
+@settings(max_examples=25, deadline=None)
+@given(tfs=st.lists(st.floats(0.5, 50), min_size=2, max_size=4))
+def test_timeline_events_well_formed(tfs):
+    devs = _devs(tfs)
+    n = k = 4096
+    res = solve_bisection(devs, float(n) * n * k, n=n, k=k, bus="serialized")
+    tl = simulate_timeline(devs, res.ops, n, k)
+    # events have non-negative durations and bus transfers never overlap
+    xfers = sorted((e for e in tl.events if e.kind != "compute"),
+                   key=lambda e: e.start)
+    for e in tl.events:
+        assert e.end >= e.start >= 0
+    for a, b in zip(xfers, xfers[1:]):
+        assert b.start >= a.end - 1e-9
+    # makespan is the max event end
+    assert tl.makespan == pytest.approx(max(e.end for e in tl.events))
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(8, 3000), k=st.integers(8, 3000),
+       n=st.integers(8, 1000))
+def test_decompose_square_tiles_partition_exactly(m, k, n):
+    tiles = decompose_square(m, k, n)
+    # exact cover: areas sum and no tile escapes the slice
+    assert sum(t.m * t.k for t in tiles) == m * k
+    cover = np.zeros((min(m, 64), min(k, 64)), dtype=int)
+    for t in tiles:
+        r0, c0 = min(t.row0, 64), min(t.k0, 64)
+        r1, c1 = min(t.row0 + t.m, 64), min(t.k0 + t.k, 64)
+        cover[r0:r1, c0:c1] += 1
+    assert (cover == 1).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 1000), seed=st.integers(0, 10))
+def test_data_stream_replayable_property(step, seed):
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=4, seed=seed)
+    a = SyntheticLM(cfg).batch(step)
+    b = SyntheticLM(cfg).batch(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    assert (a["tokens"] < 64).all() and (a["tokens"] >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(shares=st.lists(st.floats(0.05, 1.0), min_size=2, max_size=4),
+       gb=st.integers(2, 64))
+def test_hetero_split_monotone_in_speed(shares, gb):
+    """Faster pods never get fewer rows than slower ones."""
+    from repro.distributed.hetero import HeteroBatchScheduler, PodProfile
+    pods = [PodProfile(f"p{i}", 256, 197e12, derate=s, grain=1)
+            for i, s in enumerate(shares)]
+    sched = HeteroBatchScheduler(pods, flops_per_token=1e9, seq_len=128,
+                                 dynamic=False)
+    split = sched.plan(gb)
+    assert sum(split.sizes) == gb
+    order = np.argsort(shares)
+    for slow, fast in zip(order, order[1:]):
+        if shares[fast] > shares[slow] * 1.05:  # allow grain-rounding ties
+            assert split.sizes[fast] >= split.sizes[slow] - 1
