@@ -1,0 +1,57 @@
+"""PlanCache benchmark: repeated ``HGemms.plan`` calls must hit the cache.
+
+For each paper input, times the cold solve vs the cached call (acceptance:
+>= 10x faster), then verifies a ``DynamicScheduler.observe`` re-fit
+invalidates the cache and forces a re-solve under the new models.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import PAPER_INPUTS, emit, hgemms_for
+
+
+def run(machine: str) -> None:
+    hg = hgemms_for(machine)
+    for name, (m, n, k) in PAPER_INPUTS.items():
+        t0 = time.perf_counter()
+        hg.plan(m, n, k)
+        t_cold = time.perf_counter() - t0
+        best_hit = None
+        for _ in range(5):
+            t0 = time.perf_counter()
+            hg.plan(m, n, k)
+            dt = time.perf_counter() - t0
+            best_hit = dt if best_hit is None else min(best_hit, dt)
+        speedup = t_cold / best_hit if best_hit else float("inf")
+        emit(f"plan_cache_{machine}_{name}", best_hit * 1e6,
+             f"cold_us={t_cold*1e6:.1f};speedup={speedup:.0f}x;"
+             f"hit_10x={'PASS' if speedup >= 10 else 'FAIL'}")
+
+
+def invalidation(machine: str) -> None:
+    hg = hgemms_for(machine, dynamic=True)
+    m, n, k = PAPER_INPUTS["i1"]
+    p1 = hg.plan(m, n, k)
+    hg.plan(m, n, k)
+    hits_before = hg.plan_cache.hits
+    # device 1 slows 3x -> model re-fit -> cache flush
+    hg.dyn.observe(1, 1e12, hg.devices[1].compute(1e12) * 3.0)
+    t0 = time.perf_counter()
+    p2 = hg.plan(m, n, k)
+    t_resolve = time.perf_counter() - t0
+    ok = (len(hg.plan_cache) == 1 and p2.adapted is not p1.adapted
+          and hg.plan_cache.invalidations >= 1
+          and hg.plan_cache.hits == hits_before)
+    emit(f"plan_cache_invalidation_{machine}", t_resolve * 1e6,
+         f"resolved_after_refit={'PASS' if ok else 'FAIL'}")
+
+
+def main() -> None:
+    for machine in ("mach1", "mach2"):
+        run(machine)
+        invalidation(machine)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Sections:
   Table 7   — co-execution speedups        (speedup)
   Fig 3/4   — execution times + numerics   (exec_time)
   §Roofline — dry-run roofline terms       (roofline)
+  §Runtime  — plan-cache hit/invalidation  (plan_cache)
 """
 from __future__ import annotations
 
@@ -14,10 +15,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (exec_time, prediction_accuracy, roofline, speedup,
-                   work_distribution)
+    from . import (exec_time, plan_cache, prediction_accuracy, roofline,
+                   speedup, work_distribution)
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline):
+                roofline, plan_cache):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

@@ -11,7 +11,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import (HGemms, Profiler, paper_mach2, simulated_runner)
+from repro.core import (HGemms, Profiler, list_domains, paper_mach2,
+                        simulated_runner)
 
 
 def main():
@@ -29,9 +30,12 @@ def main():
         devices.append(dataclasses.replace(dev, compute=fitted))
 
     # ---- Optimize + Adapt + Schedule via the DS-POAS for GEMM ----
+    print(f"\nregistered POAS domains: {list_domains()}")
     hg = HGemms(devices)
     m = n = k = 30_000
     plan = hg.plan(m, n, k)
+    hg.plan(m, n, k)   # same geometry: served from the PlanCache
+    print(f"plan cache after repeat: {hg.plan_cache.stats()}")
     print(f"\n[optimize] makespan {plan.schedule.timeline.makespan:.3f}s "
           f"for {m}x{n}x{k} ({m*n*k/1e12:.1f} TOps)")
     for asg in plan.adapted.assignments:
@@ -44,6 +48,8 @@ def main():
               f"{ev.device:15s} {ev.kind}")
 
     # ---- Execute a real (small) co-executed GEMM on this host ----
+    # Partitions run through the overlapped runtime: thread per device,
+    # copies serialized on the shared bus in priority order.
     rng = np.random.default_rng(0)
     a = rng.standard_normal((1024, 512)).astype(np.float32)
     b = rng.standard_normal((512, 768)).astype(np.float32)
@@ -52,6 +58,9 @@ def main():
     print(f"\n[execute] real co-executed GEMM max|err|={err:.2e}  "
           f"speedup vs best single device: "
           f"{min(rep.speedups.values()):.2f}x-{max(rep.speedups.values()):.0f}x")
+    for ev in rep.measured.events:
+        print(f"[measured] {ev.start*1e3:8.2f}ms -> {ev.end*1e3:8.2f}ms  "
+              f"{ev.device:15s} {ev.kind}")
 
 
 if __name__ == "__main__":

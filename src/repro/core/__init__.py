@@ -6,7 +6,9 @@ Public API:
     solve_bisection, solve_analytic, solve_local_search, OptimizeResult
     ops_to_mnk, decompose_square, squareness, GemmPlan
     StaticScheduler, DynamicScheduler, simulate_timeline, Timeline
-    POAS, GemmWorkload, make_gemm_poas, HGemms
+    Domain, PlanCache, register_domain, get_domain, list_domains
+    OverlappedExecutor, DeviceTask
+    POAS, GemmWorkload, GemmDomain, make_gemm_poas, HGemms
 """
 from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            RooflineTimeModel, paper_mach1, paper_mach2,
@@ -20,7 +22,12 @@ from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
                     ops_to_mnk, squareness)
 from .schedule import (BusEvent, DynamicScheduler, Schedule, StaticScheduler,
                        Timeline, simulate_timeline)
-from .framework import GemmWorkload, POAS, POASPlan, make_gemm_poas
+from .domain import (Domain, FunctionDomain, PlanCache, Workload,
+                     device_signature, get_domain, list_domains,
+                     register_domain)
+from .executor import DeviceTask, OverlappedExecutor, TicketBus
+from .framework import (GemmDomain, GemmWorkload, POAS, POASPlan,
+                        make_gemm_poas)
 from .hgemms import ExecutionReport, HGemms
 
 __all__ = [
@@ -36,6 +43,9 @@ __all__ = [
     "ops_to_mnk", "squareness",
     "BusEvent", "DynamicScheduler", "Schedule", "StaticScheduler",
     "Timeline", "simulate_timeline",
-    "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
+    "Domain", "FunctionDomain", "PlanCache", "Workload", "device_signature",
+    "get_domain", "list_domains", "register_domain",
+    "DeviceTask", "OverlappedExecutor", "TicketBus",
+    "GemmDomain", "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
     "ExecutionReport", "HGemms",
 ]

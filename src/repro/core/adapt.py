@@ -210,3 +210,56 @@ def _cache_ops_bound(d: DeviceProfile, n: int) -> float:
 
 def plan_ops(plan: GemmPlan) -> list[float]:
     return [a.ops for a in plan.assignments]
+
+
+# ---------------------------------------------------------------------------
+# Generic adapt primitives (shared by the serving and train-step domains)
+# ---------------------------------------------------------------------------
+
+
+def pack_largest_first(weights: Sequence[float],
+                       budgets: Sequence[float]) -> list[list[int]]:
+    """Greedy largest-first packing of weighted items into budgeted buckets.
+
+    Items are placed heaviest-first into the bucket with the most remaining
+    budget, so bucket weight totals track the budgets (the solver's op
+    shares) to within one item.  Returns item *indices* per bucket.
+    """
+    remaining = [float(b) for b in budgets]
+    buckets: list[list[int]] = [[] for _ in budgets]
+    order = sorted(range(len(weights)), key=lambda i: -weights[i])
+    for idx in order:
+        g = max(range(len(remaining)), key=lambda j: remaining[j])
+        buckets[g].append(idx)
+        remaining[g] -= weights[idx]
+    return buckets
+
+
+def round_shares_to_grain(raw: Sequence[float], grains: Sequence[int],
+                          total: int) -> list[int]:
+    """Round fractional shares to per-bucket grains, conserving ``total``.
+
+    Floors each share to its grain, then hands out the remainder in
+    grain-sized packets by largest fractional shortfall; over-assignment is
+    trimmed from the largest bucket (it absorbs the change with the least
+    relative distortion).  The hetero-DP domain uses this for the paper's
+    hardware-adjustment step (§4.3.2) in batch-row coordinates.
+    """
+    grains = [max(int(g), 1) for g in grains]
+    sizes = [int(r // g) * g for r, g in zip(raw, grains)]
+    rem = total - sum(sizes)
+    order = sorted(range(len(raw)),
+                   key=lambda i: -(raw[i] - sizes[i]))
+    j = 0
+    while rem > 0:
+        i = order[j % len(order)]
+        add = min(grains[i], rem)
+        sizes[i] += add
+        rem -= add
+        j += 1
+    while rem < 0:
+        i = max(range(len(sizes)), key=lambda q: sizes[q])
+        take = min(grains[i], sizes[i], -rem)
+        sizes[i] -= take
+        rem += take
+    return sizes

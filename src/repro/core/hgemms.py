@@ -1,14 +1,18 @@
 """hgemms — the paper's DS-POAS for heterogeneous GEMM (§4).
 
 Splits an (m, n, k) GEMM's rows across heterogeneous devices per the POAS
-plan and executes the partitions.  On this container every partition runs as
-a real jitted JAX matmul on the host CPU; per-device *times* come from the
-device models (the simulated testbed), while the *numerics* are real — so
-correctness (C == A@B) and scheduling quality are both testable.
+plan and executes the partitions through the overlapped co-execution runtime
+(``core.executor``): one thread per device, input/output copies serialized
+on the shared bus in the planned priority order, compute overlapping other
+devices' copies.  On this container every partition runs as a real jitted
+JAX matmul on the host CPU; per-device *times* come from the device models
+(the simulated testbed), while the *numerics* are real — so correctness
+(C == A@B), scheduling quality, and the executor's event ordering are all
+testable.
 
 On a TPU deployment the per-partition compute is the Pallas MXU matmul
-kernel (``repro.kernels.matmul``); the executor below dispatches to it when
-the device kind is ``tpu-group`` and a TPU backend is present.
+kernel (``repro.kernels.matmul``); the executor dispatches to it when the
+device kind is ``tpu-group`` and a TPU backend is present.
 """
 from __future__ import annotations
 
@@ -20,6 +24,8 @@ import numpy as np
 
 from .adapt import GemmPlan
 from .device_model import DeviceProfile
+from .domain import PlanCache
+from .executor import DeviceTask, OverlappedExecutor
 from .framework import GemmWorkload, POASPlan, make_gemm_poas
 from .schedule import DynamicScheduler, Timeline, simulate_timeline
 
@@ -33,6 +39,7 @@ class ExecutionReport:
     wall_seconds: float            # actual host wall time of the partitions
     standalone: dict[str, float]   # predicted time if each device ran alone
     per_device_seconds: dict[str, float]
+    measured: Timeline | None = None   # executor's real per-stage intervals
 
     @property
     def speedups(self) -> dict[str, float]:
@@ -44,11 +51,16 @@ class HGemms:
     """Heterogeneous GEMM scheduler (paper §4)."""
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
-                 bus: str = "serialized", dynamic: bool = False):
+                 bus: str = "serialized", dynamic: bool = False,
+                 cache: bool = True):
         self.devices = list(devices)
         self.bus = bus
         self.poas, self.dyn = make_gemm_poas(self.devices, bus=bus,
-                                             dynamic=dynamic)
+                                             dynamic=dynamic, cache=cache)
+
+    @property
+    def plan_cache(self) -> PlanCache | None:
+        return self.poas.cache
 
     # -- planning ----------------------------------------------------------
 
@@ -57,50 +69,93 @@ class HGemms:
 
     # -- execution ---------------------------------------------------------
 
+    def _partition_tasks(self, a: np.ndarray, b: np.ndarray, c: np.ndarray,
+                         gplan: GemmPlan, planned: Timeline) -> list[DeviceTask]:
+        """One ``DeviceTask`` per device with work; stages mirror the planned
+        timeline (devices with no planned copy event compute in place)."""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def mm(x, y):
+            return x @ y
+
+        planned_kinds = {(e.device, e.kind) for e in planned.events}
+        tasks: list[DeviceTask] = []
+        for dev, asg in zip(self.devices, gplan.assignments):
+            if asg.m == 0:
+                continue
+            rows = slice(asg.row0, asg.row0 + asg.m)
+            state: dict = {}
+
+            def copy_in(state=state, rows=rows):
+                # host -> device: A row-slice + full B
+                state["a"] = jnp.asarray(a[rows])
+                state["b"] = jnp.asarray(b)
+
+            def compute(state=state, rows=rows):
+                if "a" not in state:      # no-copy device computes in place
+                    state["a"] = jnp.asarray(a[rows])
+                    state["b"] = jnp.asarray(b)
+                state["c"] = np.asarray(mm(state["a"], state["b"]))
+
+            def copy_out(state=state, rows=rows):
+                c[rows] = state["c"]
+
+            has_in = (dev.name, "copy_in") in planned_kinds
+            has_out = (dev.name, "copy_out") in planned_kinds
+            if not has_out:
+                # fold the C write into compute so the result still lands
+                def compute(state=state, rows=rows, inner=compute):
+                    inner()
+                    c[rows] = state["c"]
+            tasks.append(DeviceTask(
+                device=dev.name,
+                copy_in=copy_in if has_in else None,
+                compute=compute,
+                copy_out=copy_out if has_out else None))
+        return tasks
+
     def execute(self, a: np.ndarray, b: np.ndarray, *,
                 noise: float = 0.0, seed: int = 0,
                 plan: POASPlan | None = None) -> tuple[np.ndarray, ExecutionReport]:
         """Run the co-executed GEMM.  Returns (C, report).
 
-        Each device's partition is computed with a real jitted matmul; the
-        per-device *time* is taken from its model (optionally noised) so the
-        simulated testbed reproduces the paper's timing behaviour
-        deterministically on one CPU.
+        Partitions run concurrently through ``OverlappedExecutor`` (real
+        numerics, real overlap, bus order from the plan); the per-device
+        *time* is taken from its model (optionally noised) so the simulated
+        testbed reproduces the paper's timing behaviour deterministically on
+        one CPU.
         """
-        import jax
-        import jax.numpy as jnp
-
         m, k = a.shape
         k2, n = b.shape
         assert k == k2, (a.shape, b.shape)
         p = plan or self.plan(m, n, k)
         gplan: GemmPlan = p.adapted
 
-        @jax.jit
-        def mm(x, y):
-            return x @ y
-
         rng = np.random.default_rng(seed)
         c = np.zeros((m, n), dtype=np.result_type(a.dtype, b.dtype))
-        device_times: dict[str, float] = {}
+        planned = p.schedule.timeline
+        tasks = self._partition_tasks(a, b, c, gplan, planned)
+
         t0 = time.perf_counter()
+        measured = OverlappedExecutor(self.devices, planned).run(tasks)
+        wall = time.perf_counter() - t0
+
+        device_times: dict[str, float] = {}
         ops_list = []
-        for dev, asg in zip(self.devices, gplan.assignments):
+        for di, (dev, asg) in enumerate(zip(self.devices, gplan.assignments)):
             ops_list.append(asg.ops)
             if asg.m == 0:
                 device_times[dev.name] = 0.0
                 continue
-            rows = slice(asg.row0, asg.row0 + asg.m)
-            part = np.asarray(mm(jnp.asarray(a[rows]), jnp.asarray(b)))
-            c[rows] = part
             t = dev.total_time(asg.ops, n, k)
             if noise:
                 t *= 1.0 + noise * rng.standard_normal()
             device_times[dev.name] = t
             if self.dyn is not None:
-                self.dyn.observe(self.devices.index(dev), asg.ops,
+                self.dyn.observe(di, asg.ops,
                                  dev.compute(asg.ops) * (1.0 + (noise * rng.standard_normal() if noise else 0.0)))
-        wall = time.perf_counter() - t0
         tl = simulate_timeline(self.devices, ops_list, n, k)
         standalone = {d.name: d.total_time(float(m) * n * k, n, k)
                       for d in self.devices}
@@ -110,7 +165,8 @@ class HGemms:
             simulated_makespan=max(tl.makespan,
                                    max(device_times.values(), default=0.0)),
             wall_seconds=wall, standalone=standalone,
-            per_device_seconds=device_times)
+            per_device_seconds=device_times,
+            measured=measured)
         return c, rep
 
     # -- prediction accuracy experiment (paper §5.2) ------------------------

@@ -55,6 +55,10 @@ class Timeline:
     def device_events(self, name: str) -> list[BusEvent]:
         return [e for e in self.events if e.device == name]
 
+    def device_finish(self, name: str) -> float:
+        """When the device's last stage (usually copy_out) ends; 0 if idle."""
+        return max((e.end for e in self.device_events(name)), default=0.0)
+
     def idle_time(self, name: str) -> float:
         evs = sorted(self.device_events(name), key=lambda e: e.start)
         if not evs:
@@ -163,6 +167,19 @@ class DynamicScheduler:
         self.window = window
         self.min_obs = min_obs
         self._obs: list[list[_Obs]] = [[] for _ in devices]
+        self.epoch = 0  # bumped on every model re-fit
+        self._refit_listeners: list = []
+
+    def add_refit_listener(self, fn) -> None:
+        """``fn()`` is called after every model re-fit (PlanCache hooks in)."""
+        self._refit_listeners.append(fn)
+
+    def _refit(self, device_index: int, model) -> None:
+        d = self.devices[device_index]
+        self.devices[device_index] = dataclasses.replace(d, compute=model)
+        self.epoch += 1
+        for fn in self._refit_listeners:
+            fn()
 
     def observe(self, device_index: int, ops: float, seconds: float) -> None:
         buf = self._obs[device_index]
@@ -173,8 +190,7 @@ class DynamicScheduler:
         if len(buf) >= self.min_obs and len({o.ops for o in buf}) >= 2:
             model = fit_linear([o.ops for o in buf], [o.seconds for o in buf],
                                weights=[o.weight for o in buf])
-            d = self.devices[device_index]
-            self.devices[device_index] = dataclasses.replace(d, compute=model)
+            self._refit(device_index, model)
         elif buf:
             # single-size observations: rescale slope to match latest rate
             d = self.devices[device_index]
@@ -184,7 +200,7 @@ class DynamicScheduler:
                 ratio = latest.seconds / base
                 m = LinearTimeModel(a=d.compute.a * ratio,
                                     b=d.compute.b * ratio)
-                self.devices[device_index] = dataclasses.replace(d, compute=m)
+                self._refit(device_index, m)
 
     def plan(self, N: float, *, n: int, k: int) -> Schedule:
         res = solve_bisection(self.devices, N, n=n, k=k, bus=self.bus)

@@ -4,20 +4,27 @@ framework's batch partitioner (DESIGN.md §3.2).
 Pods (or pod-slices) are POAS "devices": per-pod throughput is predicted by
 a linear model over tokens (``ops`` ≙ tokens × FLOPs/token), the min-makespan
 solver splits the global batch, and the Adapt phase rounds each share to the
-pod's shard grain (data_shards × microbatch).  The Dynamic scheduler re-fits
-from measured step times, so a straggling pod automatically sheds load —
-straggler mitigation without preemption.
+pod's shard grain (data_shards × microbatch) via the core grain-rounding
+primitive.  All four phases are bound as the registered ``train-step``
+domain; ``HeteroBatchScheduler`` is a facade over it.  The Dynamic scheduler
+re-fits from measured step times — which invalidates the plan cache — so a
+straggling pod automatically sheds load: straggler mitigation without
+preemption.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Hashable, Sequence
 
 import numpy as np
 
-from ..core.device_model import DeviceProfile, LinearTimeModel, NO_COPY
-from ..core.optimize import solve_bisection
-from ..core.schedule import DynamicScheduler
+from ..core.adapt import round_shares_to_grain
+from ..core.device_model import (DeviceProfile, LinearTimeModel, NO_COPY,
+                                 priority_order)
+from ..core.domain import PlanCache, register_domain
+from ..core.framework import POAS
+from ..core.optimize import OptimizeResult, solve_bisection
+from ..core.schedule import DynamicScheduler, Schedule, simulate_timeline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,10 +45,27 @@ def pod_device(p: PodProfile, flops_per_token: float) -> DeviceProfile:
         NO_COPY, align_m=p.grain)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainStepWorkload:
+    """One data-parallel training step; ops are tokens."""
+
+    global_batch: int
+    seq_len: int
+
+    def total_ops(self) -> float:
+        return float(self.global_batch * self.seq_len)
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchSplit:
-    sizes: list[int]           # per-pod batch rows (sum == global batch)
+    """Frozen: instances are shared via the PlanCache, so caller mutation
+    would corrupt every future cache hit."""
+
+    sizes: tuple[int, ...]     # per-pod batch rows (sum == global batch)
     predicted_step_s: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "sizes", tuple(self.sizes))
 
     def offsets(self) -> list[int]:
         out, acc = [], 0
@@ -51,48 +75,86 @@ class BatchSplit:
         return out
 
 
-class HeteroBatchScheduler:
-    """Static or dynamic POAS split of the global batch across pods."""
+@register_domain("train-step")
+class TrainStepDomain:
+    """DS-POAS for the heterogeneous data-parallel training step."""
+
+    name = "train-step"
 
     def __init__(self, pods: Sequence[PodProfile], *, flops_per_token: float,
                  seq_len: int, dynamic: bool = True):
         self.pods = list(pods)
         self.seq_len = seq_len
         self.flops_per_token = flops_per_token
-        devices = [pod_device(p, flops_per_token) for p in pods]
-        self.dyn = DynamicScheduler(devices, bus="independent") if dynamic \
-            else None
-        self.devices = devices
+        self._devices = [pod_device(p, flops_per_token) for p in self.pods]
+        self.dyn = DynamicScheduler(self._devices, bus="independent") \
+            if dynamic else None
 
-    def _solve(self, global_batch: int) -> BatchSplit:
-        devices = self.dyn.devices if self.dyn else self.devices
-        tokens = float(global_batch * self.seq_len)
-        res = solve_bisection(devices, tokens, n=1, k=1, bus="independent")
-        # Adapt: tokens -> batch rows, rounded to each pod's grain
-        raw = [c / self.seq_len for c in res.ops]
-        sizes = [int(r // p.grain) * p.grain
-                 for r, p in zip(raw, self.pods)]
-        rem = global_batch - sum(sizes)
-        order = sorted(range(len(self.pods)),
-                       key=lambda i: -(raw[i] - sizes[i]))
-        j = 0
-        while rem > 0:
-            i = order[j % len(order)]
-            add = min(self.pods[i].grain, rem)
-            sizes[i] += add
-            rem -= add
-            j += 1
-        while rem < 0:
-            i = max(range(len(sizes)), key=lambda q: sizes[q])
-            take = min(self.pods[i].grain, sizes[i], -rem)
-            sizes[i] -= take
-            rem += take
-        pred = max(d.compute(s * self.seq_len)
-                   for d, s in zip(devices, sizes) if s > 0)
+    def predict(self) -> Sequence[DeviceProfile]:
+        return self.dyn.devices if self.dyn is not None else self._devices
+
+    def optimize(self, devices: Sequence[DeviceProfile],
+                 w: TrainStepWorkload) -> OptimizeResult:
+        return solve_bisection(devices, w.total_ops(), n=1, k=1,
+                               bus="independent")
+
+    def adapt(self, devices: Sequence[DeviceProfile], opt: OptimizeResult,
+              w: TrainStepWorkload) -> BatchSplit:
+        # tokens -> batch rows, rounded to each pod's grain
+        raw = [c / self.seq_len for c in opt.ops]
+        sizes = round_shares_to_grain(
+            raw, [p.grain for p in self.pods], w.global_batch)
+        pred = max((d.compute(s * self.seq_len)
+                    for d, s in zip(devices, sizes) if s > 0), default=0.0)
         return BatchSplit(sizes=sizes, predicted_step_s=pred)
 
+    def schedule(self, devices: Sequence[DeviceProfile], split: BatchSplit,
+                 w: TrainStepWorkload) -> Schedule:
+        ops = [float(s * self.seq_len) for s in split.sizes]
+        tl = simulate_timeline(devices, ops, 1, 1)
+        res = OptimizeResult(ops=ops, makespan=tl.makespan,
+                             finish_times=[tl.device_finish(d.name)
+                                           for d in devices],
+                             bus="independent")
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(list(devices)))
+
+    def cost_signature(self, w: TrainStepWorkload) -> Hashable:
+        return (w.global_batch, w.seq_len)
+
+
+class HeteroBatchScheduler:
+    """Static or dynamic POAS split of the global batch across pods.
+
+    Facade over the registered ``train-step`` domain; repeated ``plan``
+    calls for the same global batch are served from the ``PlanCache`` until
+    a measured observation re-fits a pod model.
+    """
+
+    def __init__(self, pods: Sequence[PodProfile], *, flops_per_token: float,
+                 seq_len: int, dynamic: bool = True, cache: bool = True):
+        self.pods = list(pods)
+        self.seq_len = seq_len
+        self.flops_per_token = flops_per_token
+        self.domain = TrainStepDomain(pods, flops_per_token=flops_per_token,
+                                      seq_len=seq_len, dynamic=dynamic)
+        self.poas = POAS(self.domain, cache=PlanCache() if cache else None)
+
+    @property
+    def dyn(self) -> DynamicScheduler | None:
+        return self.domain.dyn
+
+    @property
+    def devices(self) -> list[DeviceProfile]:
+        return list(self.domain.predict())
+
+    @property
+    def plan_cache(self) -> PlanCache | None:
+        return self.poas.cache
+
     def plan(self, global_batch: int) -> BatchSplit:
-        return self._solve(global_batch)
+        w = TrainStepWorkload(global_batch=global_batch, seq_len=self.seq_len)
+        return self.poas.plan(w).adapted
 
     def observe(self, pod_index: int, batch_rows: int, seconds: float):
         """Feed a measured per-pod step time (dynamic mode)."""
@@ -102,7 +164,7 @@ class HeteroBatchScheduler:
 
     def imbalance(self, split: BatchSplit) -> float:
         """Predicted idle fraction of the fastest-finishing pod."""
-        devices = self.dyn.devices if self.dyn else self.devices
+        devices = self.domain.predict()
         times = [d.compute(s * self.seq_len)
                  for d, s in zip(devices, split.sizes) if s > 0]
         if not times:

@@ -156,6 +156,8 @@ def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool, *,
             cost = compiled.cost_analysis() or {}
         except Exception:  # noqa: BLE001
             cost = {}
+        if isinstance(cost, (list, tuple)):  # jax <= 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # trip-count-aware HLO accounting (XLA's cost_analysis counts while
         # bodies once — wrong by ~num_layers for scanned models)

@@ -34,7 +34,6 @@ _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALL_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
 _COND_RE = re.compile(r"condition=(%[\w.\-]+)")
-_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -254,15 +253,27 @@ class HloCostModel:
 
     @staticmethod
     def _operands(rhs: str, op: str) -> list[str]:
-        # operands are in the first (...) right after the op name
+        # Operands are in the first (...) right after the op name.  Depending
+        # on the XLA version the list is either bare names ("dot(%a, %b)") or
+        # typed ("dot(f32[8,8]{1,0} %a, ...)" — types may themselves contain
+        # parenthesized tuple types), so scan to the balanced close paren and
+        # pull the %-prefixed names.
         i = rhs.find(op + "(")
         if i < 0:
             return []
-        seg = rhs[i + len(op):]
-        m = _OPERAND_RE.match(seg)
-        if not m or not m.group(1):
-            return []
-        return [s.strip() for s in m.group(1).split(",")]
+        start = i + len(op) + 1
+        depth, j = 1, start
+        while j < len(rhs) and depth:
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+            j += 1
+        inner = rhs[start:j - 1]
+        names = re.findall(r"%[\w.\-]+", inner)
+        if names:
+            return names
+        return [s.strip() for s in inner.split(",") if s.strip()]
 
     def _dot_flops(self, rhs: str, defs: dict[str, str], type_str: str
                    ) -> float:

@@ -50,8 +50,13 @@ def main(argv=None) -> int:
               for i in range(args.groups)]
     disp = PoasDispatcher(groups)
     buckets = disp.split(reqs)
-    print("dispatch:", [len(b) for b in buckets],
+    shares = (disp.last_plan.optimize.shares() if disp.last_plan
+              else [0.0] * len(groups))
+    print(f"dispatch[{disp.domain.name}]:", [len(b) for b in buckets],
+          f"shares {[f'{s:.2f}' for s in shares]} "
           f"predicted makespan {disp.predicted_makespan(buckets)*1e3:.2f}ms")
+    disp.split(reqs)   # identical batch geometry -> PlanCache hit
+    print(f"plan cache: {disp.poas.cache.stats()}")
 
     t0 = time.perf_counter()
     done = []

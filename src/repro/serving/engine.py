@@ -2,22 +2,28 @@
 
 ``ServingEngine`` runs prefill + decode for batches of requests on one model
 replica.  ``PoasDispatcher`` splits an incoming request batch across device
-groups (model replicas with differing throughput) using the POAS pipeline:
-predicted prefill+decode time per group (linear in tokens), min-makespan
-split, grain rounding — the serving analogue of hgemms (DESIGN.md §3.3).
+groups (model replicas with differing throughput) through the registered
+``serving-dispatch`` POAS domain: predicted prefill+decode time per group
+(linear in tokens), min-makespan split (core optimizer), largest-first
+bucket packing (core adapt primitive) — the serving analogue of hgemms
+(DESIGN.md §3.3).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Sequence
+from typing import Hashable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.device_model import DeviceProfile
-from ..core.optimize import solve_bisection
+from ..core.adapt import pack_largest_first
+from ..core.device_model import DeviceProfile, priority_order
+from ..core.domain import PlanCache, register_domain
+from ..core.framework import POAS, POASPlan
+from ..core.optimize import OptimizeResult, solve_bisection
+from ..core.schedule import Schedule, simulate_timeline
 from ..models import Model
 
 
@@ -76,30 +82,111 @@ class ServingEngine:
                 for i, r in enumerate(requests)]
 
 
-class PoasDispatcher:
-    """Split a request batch across heterogeneous serving groups."""
+@dataclasses.dataclass(frozen=True)
+class RequestBatch:
+    """A request batch as a POAS workload; ops = tokens to process
+    (prompt + generated) per request."""
 
-    def __init__(self, groups: Sequence[DeviceProfile], *, grain: int = 1):
+    requests: tuple[Request, ...]
+
+    def token_counts(self) -> list[int]:
+        return [len(r.tokens) + r.max_new_tokens for r in self.requests]
+
+    def total_ops(self) -> float:
+        return float(sum(self.token_counts()))
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Adapt-phase output: request *indices* per serving group.
+
+    Indices (not request objects) make the plan reusable from the
+    ``PlanCache``: any batch with the same ordered token geometry gets the
+    same packing applied to its own requests.  Frozen (tuple fields) because
+    instances are shared across cache hits.
+    """
+
+    index_buckets: tuple[tuple[int, ...], ...]
+    bucket_tokens: tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "index_buckets",
+                           tuple(tuple(b) for b in self.index_buckets))
+        object.__setattr__(self, "bucket_tokens", tuple(self.bucket_tokens))
+
+    def assign(self, requests: Sequence[Request]) -> list[list[Request]]:
+        return [[requests[i] for i in bucket] for bucket in self.index_buckets]
+
+
+@register_domain("serving-dispatch")
+class ServingDispatchDomain:
+    """DS-POAS for request dispatch across heterogeneous model replicas.
+
+    Optimize is the core min-makespan solver over token counts; Adapt is the
+    core largest-first packer (op shares -> request buckets); Schedule is the
+    standard priority timeline over bucket token totals.
+    """
+
+    name = "serving-dispatch"
+
+    def __init__(self, groups: Sequence[DeviceProfile]):
+        self._groups = list(groups)
+
+    def predict(self) -> Sequence[DeviceProfile]:
+        return self._groups
+
+    def optimize(self, groups: Sequence[DeviceProfile],
+                 batch: RequestBatch) -> OptimizeResult:
+        return solve_bisection(groups, batch.total_ops(), n=1, k=1,
+                               bus="independent")
+
+    def adapt(self, groups: Sequence[DeviceProfile], opt: OptimizeResult,
+              batch: RequestBatch) -> DispatchPlan:
+        tok = batch.token_counts()
+        packed = pack_largest_first(tok, opt.ops)
+        return DispatchPlan(
+            index_buckets=packed,
+            bucket_tokens=[float(sum(tok[i] for i in b)) for b in packed])
+
+    def schedule(self, groups: Sequence[DeviceProfile], plan: DispatchPlan,
+                 batch: RequestBatch) -> Schedule:
+        ops = plan.bucket_tokens
+        tl = simulate_timeline(groups, ops, 1, 1)
+        res = OptimizeResult(ops=ops, makespan=tl.makespan,
+                             finish_times=[tl.device_finish(g.name)
+                                           for g in groups],
+                             bus="independent")
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(list(groups)))
+
+    def cost_signature(self, batch: RequestBatch) -> Hashable:
+        return tuple(batch.token_counts())
+
+
+class PoasDispatcher:
+    """Split a request batch across heterogeneous serving groups.
+
+    A thin facade over the registered ``serving-dispatch`` domain: repeated
+    batches with identical token geometry hit the ``PlanCache`` and skip the
+    solve.
+    """
+
+    def __init__(self, groups: Sequence[DeviceProfile], *, grain: int = 1,
+                 cache: bool = True):
         self.groups = list(groups)
         self.grain = grain
+        self.domain = ServingDispatchDomain(self.groups)
+        self.poas = POAS(self.domain, cache=PlanCache() if cache else None)
+        self.last_plan: POASPlan | None = None
 
     def split(self, requests: Sequence[Request]) -> list[list[Request]]:
         if not requests:
+            self.last_plan = None      # never expose a previous batch's plan
             return [[] for _ in self.groups]
-        # ops = tokens to process (prompt + generated) per request
-        tok = [len(r.tokens) + r.max_new_tokens for r in requests]
-        total = float(sum(tok))
-        res = solve_bisection(self.groups, total, n=1, k=1,
-                              bus="independent")
-        # Adapt: convert op shares to request counts (greedy largest-first)
-        order = np.argsort(tok)[::-1]
-        budgets = list(res.ops)
-        buckets: list[list[Request]] = [[] for _ in self.groups]
-        for idx in order:
-            g = int(np.argmax(budgets))
-            buckets[g].append(requests[idx])
-            budgets[g] -= tok[idx]
-        return buckets
+        plan = self.poas.plan(RequestBatch(requests=tuple(requests)))
+        self.last_plan = plan
+        # apply the (possibly cached) index packing to THIS batch's requests
+        return plan.adapted.assign(requests)
 
     def predicted_makespan(self, buckets: Sequence[Sequence[Request]]) -> float:
         t = 0.0

@@ -3,7 +3,20 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must never hard-error (see requirements-dev)
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed "
+            "(pip install -r requirements-dev.txt)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # placeholder strategies; only consumed by decorator args
+        floats = integers = lists = staticmethod(lambda *a, **k: None)
 
 from repro.core import (CopyModel, DeviceProfile, GemmWorkload, HGemms,
                         LinearTimeModel, NO_COPY, DynamicScheduler,

@@ -103,9 +103,14 @@ x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4) / 100.0
 def body(xl, key):
     return compressed_psum_mean(xl[0], "pod", key, mode="int8")[None]
 
-out = jax.jit(jax.shard_map(body, mesh=mesh,
+if hasattr(jax, "shard_map"):          # jax >= 0.6 moved it to the top level
+    shard_map, kw = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map
+    kw = {"check_rep": False}
+out = jax.jit(shard_map(body, mesh=mesh,
     in_specs=(P("pod", None), P()), out_specs=P("pod", None),
-    check_vma=False))(x, jax.random.PRNGKey(0))
+    **kw))(x, jax.random.PRNGKey(0))
 expected = x.mean(axis=0)
 err = float(jnp.max(jnp.abs(out - expected[None])))
 assert err < 2e-3, err

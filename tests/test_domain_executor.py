@@ -1,0 +1,223 @@
+"""Domain registry, PlanCache, and overlapped-executor runtime tests."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DeviceTask, GemmWorkload, HGemms, OverlappedExecutor,
+                        PlanCache, POAS, Timeline, get_domain, list_domains,
+                        paper_mach1, paper_mach2, simulate_timeline)
+from repro.core.adapt import pack_largest_first, round_shares_to_grain
+from repro.core.domain import device_signature
+from repro.core.executor import TicketBus
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_builtin_domains_registered():
+    names = list_domains()
+    assert {"gemm", "serving-dispatch", "train-step"} <= set(names)
+
+
+def test_get_domain_builds_gemm():
+    dom = get_domain("gemm", paper_mach1())
+    plan = POAS(dom).plan(GemmWorkload(2048, 1024, 512))
+    assert plan.adapted.total_rows() == 2048
+
+
+def test_get_domain_unknown_raises():
+    with pytest.raises(KeyError, match="unknown POAS domain"):
+        get_domain("no-such-domain")
+
+
+# ---------------------------------------------------- schedule finish times --
+
+def test_schedule_finish_times_are_per_device():
+    hg = HGemms(paper_mach2())
+    plan = hg.plan(30000, 30000, 30000)
+    res, tl = plan.schedule.result, plan.schedule.timeline
+    # per-device finish times come from the timeline, not the makespan
+    for d, f in zip(hg.devices, res.finish_times):
+        assert f == pytest.approx(tl.device_finish(d.name))
+    busy = [f for f in res.finish_times if f > 0]
+    assert len(set(busy)) > 1          # devices finish at different times
+    assert max(res.finish_times) == pytest.approx(tl.makespan)
+
+
+# ---------------------------------------------------------------- executor --
+
+def _bus_events(tl: Timeline):
+    return sorted((e for e in tl.events if e.kind != "compute"),
+                  key=lambda e: e.start)
+
+
+def test_executor_matches_simulated_event_order():
+    """Acceptance: measured busy intervals preserve the planned bus
+    serialization and priority order of ``simulate_timeline``."""
+    hg = HGemms(paper_mach2())
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((1024, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 512)).astype(np.float32)
+    c, rep = hg.execute(a, b)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    assert rep.measured is not None
+
+    planned = rep.plan.schedule.timeline
+    measured = rep.measured
+    # 1. every planned stage ran exactly once
+    assert sorted((e.device, e.kind) for e in measured.events) == \
+        sorted((e.device, e.kind) for e in planned.events)
+    # 2. bus transfers never overlap and follow the planned order
+    plan_order = [(e.device, e.kind) for e in _bus_events(planned)]
+    meas = _bus_events(measured)
+    assert [(e.device, e.kind) for e in meas] == plan_order
+    for x, y in zip(meas, meas[1:]):
+        assert y.start >= x.end - 1e-9
+    # 3. per-device stage order: copy_in < compute < copy_out
+    for name in {e.device for e in measured.events}:
+        evs = {e.kind: e for e in measured.device_events(name)}
+        if "copy_in" in evs:
+            assert evs["compute"].start >= evs["copy_in"].end - 1e-9
+        if "copy_out" in evs:
+            assert evs["copy_out"].start >= evs["compute"].end - 1e-9
+
+
+def test_executor_overlaps_compute_with_copies():
+    """A lower-priority device's bus copy may only start after the
+    higher-priority copy ends, but high-priority compute runs meanwhile."""
+    devs = paper_mach2()
+    hg = HGemms(devs)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((2048, 512)).astype(np.float32)
+    b = rng.standard_normal((512, 256)).astype(np.float32)
+    _, rep = hg.execute(a, b)
+    meas = rep.measured
+    copies = [e for e in meas.events if e.kind == "copy_in"]
+    if len(copies) >= 2:
+        first = min(copies, key=lambda e: e.start)
+        comp = {e.kind: e for e in meas.device_events(first.device)}["compute"]
+        later = max(copies, key=lambda e: e.start)
+        # the first device's compute window may overlap the later copy
+        assert comp.start >= first.end - 1e-9
+        assert later.start >= first.end - 1e-9
+
+
+def test_executor_propagates_stage_errors():
+    devs = paper_mach1()
+    ops = [1e9] * len(devs)
+    planned = simulate_timeline(devs, ops, 1000, 1000)
+
+    def boom():
+        raise RuntimeError("stage failed")
+
+    tasks = [DeviceTask(device=devs[0].name, copy_in=None, compute=boom,
+                        copy_out=None)]
+    with pytest.raises(RuntimeError, match="stage failed"):
+        OverlappedExecutor(devs, planned).run(tasks)
+
+
+def test_executor_subset_task_list_does_not_hang():
+    """Tasks covering only some planned devices must release the unclaimed
+    bus tickets instead of wedging the grant sequence."""
+    devs = paper_mach2()
+    ops = [1e12] * len(devs)
+    planned = simulate_timeline(devs, ops, 4000, 4000)
+    ran = []
+    # only the *last*-priority copy device runs; its tickets sit behind the
+    # missing faster device's in the planned sequence
+    gpu = next(d for d in devs if d.name == "3090-cuda")
+    tasks = [DeviceTask(device=gpu.name,
+                        copy_in=lambda: ran.append("in"),
+                        compute=lambda: ran.append("compute"),
+                        copy_out=lambda: ran.append("out"))]
+    measured = OverlappedExecutor(devs, planned).run(tasks)
+    assert ran == ["in", "compute", "out"]
+    assert {e.device for e in measured.events} == {gpu.name}
+
+
+def test_ticket_bus_orders_grants():
+    seq = [("a", "copy_in"), ("b", "copy_in")]
+    bus = TicketBus(seq)
+    with pytest.raises(ValueError):
+        bus.acquire(("c", "copy_in"))
+    bus.acquire(("a", "copy_in"))   # first ticket is immediately grantable
+    bus.release(("a", "copy_in"))
+    bus.acquire(("b", "copy_in"))
+    bus.release(("b", "copy_in"))
+
+
+# --------------------------------------------------------------- plan cache --
+
+def test_plan_cache_hit_is_fast_and_identical():
+    hg = HGemms(paper_mach2())
+    m = n = k = 30000
+    t0 = time.perf_counter()
+    p1 = hg.plan(m, n, k)
+    t_solve = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    p2 = hg.plan(m, n, k)
+    t_hit = time.perf_counter() - t0
+    # memoized: the solved phases are shared, the workload is the caller's
+    assert p2.adapted is p1.adapted and p2.schedule is p1.schedule
+    assert p2.workload == p1.workload
+    assert hg.plan_cache.hits == 1
+    # acceptance: cached call >= 10x faster than the solve
+    assert t_hit < t_solve / 10.0, (t_solve, t_hit)
+
+
+def test_plan_cache_distinguishes_geometry():
+    hg = HGemms(paper_mach1())
+    hg.plan(2048, 1024, 512)
+    hg.plan(4096, 1024, 512)
+    assert hg.plan_cache.hits == 0
+    assert hg.plan_cache.misses == 2
+    assert len(hg.plan_cache) == 2
+
+
+def test_plan_cache_invalidated_by_dynamic_refit():
+    hg = HGemms(paper_mach1(), dynamic=True)
+    m = n = k = 20000
+    p1 = hg.plan(m, n, k)
+    assert hg.plan(m, n, k).adapted is p1.adapted
+    # a refit observation must flush the cache AND change the device key
+    sig0 = device_signature(hg.poas.domain.predict())
+    hg.dyn.observe(1, 1e12, hg.devices[1].compute(1e12) * 4.0)
+    assert len(hg.plan_cache) == 0
+    assert hg.plan_cache.invalidations >= 1
+    assert device_signature(hg.poas.domain.predict()) != sig0
+    p2 = hg.plan(m, n, k)
+    assert p2.adapted is not p1.adapted  # re-solved under re-fitted models
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(maxsize=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    cache.put("c", 3)
+    assert cache.get("a") is None      # evicted
+    assert cache.get("c") == 3
+
+
+# ------------------------------------------------------- adapt primitives --
+
+def test_pack_largest_first_tracks_budgets():
+    weights = [5, 3, 8, 1, 4, 2]
+    budgets = [15.0, 8.0]
+    buckets = pack_largest_first(weights, budgets)
+    assert sorted(i for b in buckets for i in b) == list(range(6))
+    tot = [sum(weights[i] for i in b) for b in buckets]
+    for t, budget in zip(tot, budgets):
+        assert abs(t - budget) <= max(weights)
+
+
+def test_round_shares_to_grain_conserves_total():
+    sizes = round_shares_to_grain([10.3, 21.7, 0.0], [8, 8, 8], 32)
+    assert sum(sizes) == 32
+    assert all(s % 8 == 0 for s in sizes)
+
+
+def test_round_shares_to_grain_handles_overassignment():
+    # floors (16 + 8) exceed the total; trimming must restore conservation
+    sizes = round_shares_to_grain([16.0, 8.0], [8, 8], 16)
+    assert sum(sizes) == 16
+    assert all(s % 8 == 0 for s in sizes)

@@ -13,7 +13,8 @@ REPO = pathlib.Path(__file__).parent.parent
 
 
 @pytest.mark.parametrize("arch,shapes", [
-    ("qwen2-72b", ["train_4k", "decode_32k"]),
+    pytest.param("qwen2-72b", ["train_4k", "decode_32k"],
+                 marks=pytest.mark.slow),
     ("dbrx-132b", ["train_4k"]),
     ("hymba-1_5b", ["long_500k"]),
 ])

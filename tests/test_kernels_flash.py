@@ -18,9 +18,11 @@ def _qkv(key, B, Sq, Skv, H, KH, D, dtype):
 
 @pytest.mark.parametrize("B,S,H,KH,D,bq,bk", [
     (1, 128, 4, 4, 64, 64, 64),
-    (2, 256, 8, 2, 64, 128, 64),     # GQA 4:1
+    pytest.param(2, 256, 8, 2, 64, 128, 64,      # GQA 4:1
+                 marks=pytest.mark.slow),
     (1, 96, 4, 1, 128, 32, 32),      # MQA, ragged blocks
-    (2, 128, 2, 2, 32, 128, 128),    # single block pair
+    pytest.param(2, 128, 2, 2, 32, 128, 128,     # single block pair
+                 marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_causal_allclose(B, S, H, KH, D, bq, bk, dtype):
@@ -34,7 +36,8 @@ def test_flash_causal_allclose(B, S, H, KH, D, bq, bk, dtype):
                                rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("window", [16, 64])
+@pytest.mark.parametrize("window", [
+    16, pytest.param(64, marks=pytest.mark.slow)])
 def test_flash_window(window):
     q, k, v = _qkv(jax.random.PRNGKey(0), 1, 128, 128, 4, 2, 32, jnp.float32)
     out = flash_attention_pallas(q, k, v, causal=True, window=window,

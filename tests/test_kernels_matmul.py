@@ -15,11 +15,11 @@ def _rand(key, shape, dtype):
 
 @pytest.mark.parametrize("m,k,n", [
     (128, 128, 128),
-    (256, 512, 128),
-    (64, 384, 256),
+    pytest.param(256, 512, 128, marks=pytest.mark.slow),
+    pytest.param(64, 384, 256, marks=pytest.mark.slow),
     (100, 130, 50),      # ragged (padding path)
     (8, 128, 128),       # single sublane block
-    (512, 256, 512),
+    pytest.param(512, 256, 512, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_matmul_allclose(m, k, n, dtype):

@@ -21,8 +21,10 @@ def _inputs(key, b, nc, Q, nh, G, hp, ds, dtype=jnp.float32):
 
 @pytest.mark.parametrize("b,nc,Q,nh,G,hp,ds", [
     (1, 2, 16, 4, 1, 16, 16),
-    (2, 3, 32, 4, 2, 32, 16),     # grouped B/C
-    (1, 1, 64, 8, 1, 64, 128),    # mamba2-like dims
+    pytest.param(2, 3, 32, 4, 2, 32, 16,      # grouped B/C
+                 marks=pytest.mark.slow),
+    pytest.param(1, 1, 64, 8, 1, 64, 128,     # mamba2-like dims
+                 marks=pytest.mark.slow),
 ])
 def test_ssd_chunk_allclose(b, nc, Q, nh, G, hp, ds):
     xdt, B, C, cum = _inputs(jax.random.PRNGKey(Q + nh), b, nc, Q, nh, G,

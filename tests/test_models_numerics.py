@@ -40,6 +40,7 @@ def naive_attention(q, k, v, *, causal=True, window=0, scale=None):
     (17, 17, 4, 1, 8, 5),     # ragged: chunk does not divide S
     (128, 128, 6, 3, 64, 128),  # single chunk
 ])
+@pytest.mark.slow
 def test_flash_vs_naive(Sq, Sk, H, KH, D, chunk):
     key = jax.random.PRNGKey(0)
     kq, kk, kv = jax.random.split(key, 3)
@@ -52,6 +53,7 @@ def test_flash_vs_naive(Sq, Sk, H, KH, D, chunk):
 
 
 @pytest.mark.parametrize("window", [4, 16])
+@pytest.mark.slow
 def test_flash_window_vs_naive(window):
     key = jax.random.PRNGKey(1)
     kq, kk, kv = jax.random.split(key, 3)
@@ -63,6 +65,7 @@ def test_flash_window_vs_naive(window):
     np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_flash_traced_window_matches_static():
     key = jax.random.PRNGKey(2)
     kq, kk, kv = jax.random.split(key, 3)
@@ -77,6 +80,7 @@ def test_flash_traced_window_matches_static():
     np.testing.assert_allclose(full_tr, full_st, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_last_token():
     """Decode-step attention at position t == prefill attention row t."""
     key = jax.random.PRNGKey(3)
@@ -113,6 +117,7 @@ def naive_ssd(xh, B, C, dt, A):
 
 
 @pytest.mark.parametrize("S,chunk,G", [(16, 4, 1), (24, 8, 2), (13, 5, 1)])
+@pytest.mark.slow
 def test_ssd_chunked_vs_sequential(S, chunk, G):
     key = jax.random.PRNGKey(4)
     ks = jax.random.split(key, 4)

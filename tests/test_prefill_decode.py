@@ -11,8 +11,13 @@ from repro.models import Model
 B, T = 2, 12
 
 
-@pytest.mark.parametrize("arch", ["stablelm-12b", "qwen2-72b", "minicpm3-4b",
-                                  "mamba2-2_7b", "hymba-1_5b", "dbrx-132b"])
+@pytest.mark.parametrize("arch", [
+    "stablelm-12b", "mamba2-2_7b",
+    pytest.param("qwen2-72b", marks=pytest.mark.slow),
+    pytest.param("minicpm3-4b", marks=pytest.mark.slow),
+    pytest.param("hymba-1_5b", marks=pytest.mark.slow),
+    pytest.param("dbrx-132b", marks=pytest.mark.slow),
+])
 def test_prefill_then_decode_matches_full(arch):
     cfg = get_tiny_config(arch)
     model = Model(cfg)

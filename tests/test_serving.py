@@ -70,3 +70,74 @@ def test_dispatcher_preserves_all_requests():
 def test_dispatcher_empty():
     disp = PoasDispatcher(_groups())
     assert disp.split([]) == [[], []]
+    assert disp.last_plan is None      # degenerate path never hits the solver
+
+
+def test_dispatcher_single_group_degenerate():
+    disp = PoasDispatcher([_groups()[0]])
+    reqs = [Request(uid=i, tokens=np.arange(1 + i % 5), max_new_tokens=3)
+            for i in range(9)]
+    buckets = disp.split(reqs)
+    assert len(buckets) == 1
+    assert sorted(r.uid for r in buckets[0]) == list(range(9))
+    res = disp.last_plan.optimize
+    assert res.shares() == pytest.approx([1.0])
+
+
+def test_dispatcher_bucket_tokens_track_optimize_shares():
+    """Bucket token totals follow OptimizeResult.shares() to within the
+    largest single request (greedy packing granularity)."""
+    disp = PoasDispatcher(_groups())
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i, tokens=rng.integers(1, 60, int(rng.integers(4, 40))),
+                    max_new_tokens=int(rng.integers(1, 32)))
+            for i in range(50)]
+    buckets = disp.split(reqs)
+    tok = [sum(len(r.tokens) + r.max_new_tokens for r in b) for b in buckets]
+    total = sum(tok)
+    biggest = max(len(r.tokens) + r.max_new_tokens for r in reqs)
+    for t, share in zip(tok, disp.last_plan.optimize.shares()):
+        assert abs(t - share * total) <= biggest
+
+
+def test_dispatcher_is_a_registered_domain():
+    from repro.core import list_domains
+    from repro.serving.engine import ServingDispatchDomain
+    assert "serving-dispatch" in list_domains()
+    disp = PoasDispatcher(_groups())
+    assert isinstance(disp.domain, ServingDispatchDomain)
+    assert disp.poas.domain is disp.domain
+
+
+def test_dispatcher_plan_cache_reuses_identical_geometry():
+    disp = PoasDispatcher(_groups())
+    reqs = [Request(uid=i, tokens=np.arange(8), max_new_tokens=4)
+            for i in range(10)]
+    b1 = disp.split(reqs)
+    b2 = disp.split(reqs)
+    assert disp.poas.cache.hits == 1
+    assert [[r.uid for r in b] for b in b1] == [[r.uid for r in b] for b in b2]
+
+
+def test_dispatcher_cache_does_not_pin_request_batches():
+    """Cached plans must not retain the request objects (memory leak in a
+    long-running dispatcher); only the index packing is memoized."""
+    disp = PoasDispatcher(_groups())
+    disp.split([Request(uid=0, tokens=np.arange(5), max_new_tokens=2)])
+    (entry,) = disp.poas.cache._entries.values()
+    assert entry.workload is None
+    assert disp.last_plan.workload is not None   # caller's copy keeps it
+
+
+def test_dispatcher_cached_plan_applies_to_fresh_requests():
+    """A cache hit must bucket the NEW batch's requests, not replay the old
+    request objects (same token geometry, different uids)."""
+    disp = PoasDispatcher(_groups())
+    mk = lambda base: [Request(uid=base + i, tokens=np.arange(8),
+                               max_new_tokens=4) for i in range(10)]
+    disp.split(mk(0))
+    fresh = mk(100)
+    buckets = disp.split(fresh)
+    assert disp.poas.cache.hits == 1
+    got = sorted(r.uid for b in buckets for r in b)
+    assert got == list(range(100, 110))
