@@ -8,6 +8,8 @@ Sections:
   Fig 3/4   — execution times + numerics   (exec_time)
   §Roofline — dry-run roofline terms       (roofline)
   §Runtime  — plan-cache hit/invalidation  (plan_cache)
+  §Timeline — solver/simulator agreement + pipelined-copy speedup
+              (timeline; writes BENCH_timeline.json — uploaded in CI)
 """
 from __future__ import annotations
 
@@ -16,9 +18,9 @@ import traceback
 
 def main() -> None:
     from . import (exec_time, plan_cache, prediction_accuracy, roofline,
-                   speedup, work_distribution)
+                   speedup, timeline, work_distribution)
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline, plan_cache):
+                roofline, plan_cache, timeline):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

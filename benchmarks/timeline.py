@@ -1,0 +1,81 @@
+"""Unified timeline engine benchmark — solver/simulator agreement and the
+chunked-pipelining win, emitted as ``BENCH_timeline.json`` (a CI artifact).
+
+Two sections per machine:
+
+* **agreement** — |max(solver finish) - simulated makespan| / makespan for
+  the paper inputs.  With the unified engine this gap is exactly zero; it
+  used to be 10-20 % (the solver charged no-copy devices for bus queue time
+  and let output copies overlap input copies).
+* **pipelining** — simulated makespan of the 4096^3 GEMM, unpipelined vs
+  chunked pipelined copies (C = 2/4/8), both re-solved so the split prices
+  the chunk boundaries.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import simulate_timeline, solve_bisection, with_pipeline
+from repro.core.optimize import _finish_times
+
+from .common import MACHINES, PAPER_INPUTS, emit, timed
+
+OUT_PATH = os.environ.get("BENCH_TIMELINE_PATH", "BENCH_timeline.json")
+CHUNK_COUNTS = (2, 4, 8)
+PIPELINE_SHAPE = (4096, 4096, 4096)
+
+
+def agreement_rows(machine: str) -> list[dict]:
+    rows = []
+    for name, (m, n, k) in PAPER_INPUTS.items():
+        devs = MACHINES[machine]()
+        N = float(m) * n * k
+        res = solve_bisection(devs, N, n=n, k=k, bus="serialized")
+        tl = simulate_timeline(devs, res.ops, n, k)
+        fin = _finish_times(devs, res.ops, n, k, "serialized")
+        gap = abs(max(fin) - tl.makespan) / tl.makespan if tl.makespan else 0.0
+        rows.append({"input": name, "m": m, "n": n, "k": k,
+                     "solver_makespan_s": max(fin),
+                     "simulated_makespan_s": tl.makespan,
+                     "relative_gap": gap})
+    return rows
+
+
+def pipelining_rows(machine: str) -> dict:
+    m, n, k = PIPELINE_SHAPE
+    N = float(m) * n * k
+    devs = MACHINES[machine]()
+    base = solve_bisection(devs, N, n=n, k=k, bus="serialized")
+    t0 = simulate_timeline(devs, base.ops, n, k).makespan
+    chunked = {}
+    for C in CHUNK_COUNTS:
+        dp = with_pipeline(MACHINES[machine](), C)
+        r = solve_bisection(dp, N, n=n, k=k, bus="serialized")
+        chunked[str(C)] = simulate_timeline(dp, r.ops, n, k).makespan
+    best = min(chunked.values())
+    return {"shape": list(PIPELINE_SHAPE),
+            "unpipelined_makespan_s": t0,
+            "pipelined_makespan_s": chunked,
+            "best_speedup": t0 / best if best else 0.0}
+
+
+def main() -> None:
+    report: dict = {"machines": {}}
+    for machine in MACHINES:
+        agree, t_agree = timed(agreement_rows, machine, repeats=1)
+        pipe, t_pipe = timed(pipelining_rows, machine, repeats=1)
+        report["machines"][machine] = {"agreement": agree,
+                                       "pipelining": pipe}
+        worst = max(r["relative_gap"] for r in agree)
+        emit(f"timeline_agreement_{machine}", t_agree * 1e6,
+             f"worst_gap={worst:.3e}")
+        emit(f"timeline_pipelining_{machine}", t_pipe * 1e6,
+             f"speedup={pipe['best_speedup']:.3f}x")
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("timeline_report", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,23 +5,27 @@ Public API:
     fit_linear, Profiler, relative_error, rmse
     solve_bisection, solve_analytic, solve_local_search, OptimizeResult
     ops_to_mnk, decompose_square, squareness, GemmPlan
+    Link, BusTopology, build_timeline, engine_finish_times, with_pipeline
     StaticScheduler, DynamicScheduler, simulate_timeline, Timeline
     Domain, PlanCache, register_domain, get_domain, list_domains
     OverlappedExecutor, DeviceTask
     POAS, GemmWorkload, GemmDomain, make_gemm_poas, HGemms
 """
+from .bus import (BusEvent, BusTopology, Link, Timeline, build_timeline,
+                  engine_finish_times)
 from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            RooflineTimeModel, paper_mach1, paper_mach2,
-                           priority_order, tpu_group, TPU_PEAK_FLOPS,
-                           TPU_HBM_BW, TPU_ICI_BW, TPU_VMEM_BYTES)
+                           priority_order, tpu_group, with_pipeline,
+                           TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW,
+                           TPU_VMEM_BYTES)
 from .predict import (Profiler, fit_linear, host_cpu_runner, load_profiles,
                       relative_error, rmse, save_profiles, simulated_runner)
 from .optimize import (OptimizeResult, solve_analytic, solve_bisection,
                        solve_local_search)
 from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
                     ops_to_mnk, squareness)
-from .schedule import (BusEvent, DynamicScheduler, Schedule, StaticScheduler,
-                       Timeline, simulate_timeline)
+from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
+                       simulate_timeline)
 from .domain import (Domain, FunctionDomain, PlanCache, Workload,
                      device_signature, get_domain, list_domains,
                      register_domain)
@@ -31,10 +35,12 @@ from .framework import (GemmDomain, GemmWorkload, POAS, POASPlan,
 from .hgemms import ExecutionReport, HGemms
 
 __all__ = [
+    "BusEvent", "BusTopology", "Link", "build_timeline",
+    "engine_finish_times",
     "CopyModel", "DeviceProfile", "LinearTimeModel", "NO_COPY",
     "RooflineTimeModel", "paper_mach1", "paper_mach2", "priority_order",
-    "tpu_group", "TPU_PEAK_FLOPS", "TPU_HBM_BW", "TPU_ICI_BW",
-    "TPU_VMEM_BYTES",
+    "tpu_group", "with_pipeline", "TPU_PEAK_FLOPS", "TPU_HBM_BW",
+    "TPU_ICI_BW", "TPU_VMEM_BYTES",
     "Profiler", "fit_linear", "host_cpu_runner", "load_profiles",
     "relative_error", "rmse", "save_profiles", "simulated_runner",
     "OptimizeResult", "solve_analytic", "solve_bisection",

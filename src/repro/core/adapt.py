@@ -115,6 +115,18 @@ class DeviceAssignment:
     row0: int           # starting row in the global C
     ops: float          # m * n * k actually assigned
     sub_products: list[SubProduct] = dataclasses.field(default_factory=list)
+    # Pipelined-copy row chunks (device ``pipeline_chunks`` mapped to
+    # contiguous align_m-sized row groups; sums to ``m``).  The runtime
+    # streams A/C chunk by chunk so compute on chunk 1 overlaps the
+    # transfer of chunk 2 (core.bus).
+    chunk_rows: tuple[int, ...] = ()
+
+    def chunk_offsets(self) -> list[int]:
+        out, acc = [], self.row0
+        for r in self.chunk_rows:
+            out.append(acc)
+            acc += r
+        return out
 
 
 @dataclasses.dataclass
@@ -189,9 +201,33 @@ def ops_to_mnk(devices: Sequence[DeviceProfile], ops: Sequence[float],
                                     ops_hi=min(hi, cache_hi))
         assignments.append(DeviceAssignment(
             device=d.name, m=rows, row0=row, ops=float(rows) * n * k,
-            sub_products=subs))
+            sub_products=subs,
+            chunk_rows=_row_chunks(rows, getattr(d, "pipeline_chunks", 1),
+                                   max(d.align_m, 1))))
         row += rows
     return GemmPlan(m=m, n=n, k=k, assignments=assignments)
+
+
+def _row_chunks(rows: int, chunks: int, grain: int) -> tuple[int, ...]:
+    """Split ``rows`` into up to ``chunks`` contiguous groups, each (except
+    possibly the last) a multiple of ``grain`` — the hardware-adjustment
+    rule (§4.3.2) applied at pipeline-chunk granularity.  Fewer chunks come
+    back when ``rows`` is too small to split at the grain."""
+    if rows <= 0:
+        return ()
+    chunks = max(1, int(chunks))
+    if chunks == 1:
+        return (rows,)
+    per = max(grain, -(-rows // (chunks * grain)) * grain)
+    out: list[int] = []
+    left = rows
+    while left > 0 and len(out) < chunks - 1:
+        take = min(per, left)
+        out.append(take)
+        left -= take
+    if left > 0:
+        out.append(left)
+    return tuple(out)
 
 
 def _cache_ops_bound(d: DeviceProfile, n: int) -> float:

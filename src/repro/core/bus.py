@@ -1,0 +1,423 @@
+"""The shared-bus timeline engine — ONE source of truth for solve/simulate/execute.
+
+The paper's co-execution speedup lives on the Fig. 2 timeline: input copies
+serialized on the host bus in priority order, compute overlapping other
+devices' copies, output copies serialized after compute.  Historically the
+repo carried three independent implementations of that timeline (the
+optimizer's finish-time model, ``simulate_timeline``, and the overlapped
+executor's bus order) which measurably disagreed; this module replaces all
+of them with a single event-graph builder (DESIGN.md §4).
+
+Two generalizations over the paper:
+
+* ``BusTopology`` — named serialization ``Link``s with optional bandwidth
+  caps; each device maps its copy_in/copy_out to a link (or to none — the
+  host CPU computes in place).  The paper's single serialized PCIe bus,
+  fully independent per-device links, and mixed topologies (CPU no-copy +
+  two GPUs sharing PCIe + a TPU group on its own ICI feed) are all
+  instances of the same engine.
+* **Chunked pipelined copies** — a device with ``pipeline_chunks = C > 1``
+  splits the per-op part of its input copy into C chunks so compute on
+  chunk 1 overlaps the transfer of chunk 2 (the overlap the paper leaves as
+  future work).  The shared operand (the full B panel for GEMM — the
+  c-independent part of the copy) still lands before the first compute
+  chunk; per-chunk launch overhead is charged by evaluating the compute
+  model at ``c/C`` per chunk and paying the copy launch latency once per
+  transfer, so over-chunking is priced, not free.
+  Chunks are priced equal-sized; the adapt phase's grain-rounded
+  ``chunk_rows`` are near-equal, and callers pass the *adapted* chunk
+  count (``len(chunk_rows)``) so a device capped below its nominal
+  ``pipeline_chunks`` by the alignment grain is never charged for chunks
+  that don't exist.
+
+``build_timeline`` emits the event graph; ``engine_finish_times`` runs the
+same control flow without materializing events (the optimizer's feasibility
+check calls it thousands of times per solve).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from .device_model import DeviceProfile, priority_order
+
+
+# ---------------------------------------------------------------------------
+# Events and timelines (moved here from core.schedule; re-exported there)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BusEvent:
+    device: str
+    kind: str       # "copy_in" | "compute" | "copy_out"
+    start: float
+    end: float
+    link: str | None = None   # serialization link the event occupied
+    chunk: int = 0            # pipeline chunk index (0 when unchunked)
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class Timeline:
+    events: list[BusEvent]
+
+    @property
+    def makespan(self) -> float:
+        return max((e.end for e in self.events), default=0.0)
+
+    def device_events(self, name: str) -> list[BusEvent]:
+        return [e for e in self.events if e.device == name]
+
+    def device_finish(self, name: str) -> float:
+        """When the device's last stage (usually copy_out) ends; 0 if idle."""
+        return max((e.end for e in self.device_events(name)), default=0.0)
+
+    def idle_time(self, name: str) -> float:
+        evs = sorted(self.device_events(name), key=lambda e: e.start)
+        if not evs:
+            return self.makespan
+        idle = evs[0].start
+        for a, b in zip(evs, evs[1:]):
+            idle += max(0.0, b.start - a.end)
+        idle += self.makespan - evs[-1].end
+        return idle
+
+    def bus_busy_time(self) -> float:
+        return sum(e.duration for e in self.events
+                   if e.kind in ("copy_in", "copy_out"))
+
+    def link_events(self, link: str) -> list[BusEvent]:
+        return sorted((e for e in self.events if e.link == link),
+                      key=lambda e: (e.start, e.end))
+
+    def _copy_tickets(self) -> list[tuple[str, tuple[str, str]]]:
+        """(link, (device, kind)) in grant order: copy events sorted by
+        start (ties: copy_in before copy_out, then chunk), chunk events
+        collapsed to one ticket per stage."""
+        out: list[tuple[str, tuple[str, str]]] = []
+        seen: set[tuple[str, str]] = set()
+        copies = sorted((e for e in self.events if e.kind != "compute"),
+                        key=lambda e: (e.start, 0 if e.kind == "copy_in"
+                                       else 1, e.chunk))
+        for e in copies:
+            ticket = (e.device, e.kind)
+            if ticket in seen:
+                continue
+            seen.add(ticket)
+            out.append((e.link or "bus", ticket))
+        return out
+
+    def link_ticket_order(self) -> dict[str, list[tuple[str, str]]]:
+        """Per-link grant order of (device, kind) tickets — this is what
+        the overlapped executor's per-link ticket buses replay."""
+        out: dict[str, list[tuple[str, str]]] = {}
+        for link, ticket in self._copy_tickets():
+            out.setdefault(link, []).append(ticket)
+        return out
+
+    def ticket_order(self) -> list[tuple[str, str]]:
+        """Flat grant order across all links (per-link truth above)."""
+        return [ticket for _, ticket in self._copy_tickets()]
+
+
+# ---------------------------------------------------------------------------
+# Links and topologies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One serialization domain (PCIe bus, NVLink, an ICI feed...).
+
+    ``bandwidth_bytes_per_s = None`` means the link never caps a device —
+    copy times come from the device's own ``CopyModel``.  A finite value
+    caps the effective bandwidth at ``min(device bw, link bw)``.
+    """
+
+    name: str
+    bandwidth_bytes_per_s: float | None = None
+
+
+def _has_copy(d: DeviceProfile) -> bool:
+    return not math.isinf(d.copy.bandwidth_bytes_per_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class BusTopology:
+    """Which link (if any) each device's copy_in / copy_out serializes on.
+
+    ``attach`` rows are ``(device_name, in_link, out_link)``; ``None`` link
+    means the stage does not serialize with anything (no-copy devices).  A
+    device with a copy model but no attach row gets an implicit private
+    link (the independent-bus behaviour).
+    """
+
+    links: tuple[Link, ...]
+    attach: tuple[tuple[str, str | None, str | None], ...]
+    spec: str = "custom"   # short tag carried into OptimizeResult.bus
+
+    def __post_init__(self) -> None:
+        by_name = {l.name: l for l in self.links}
+        in_map: dict[str, Link | None] = {}
+        out_map: dict[str, Link | None] = {}
+        for dev, lin, lout in self.attach:
+            for l in (lin, lout):
+                if l is not None and l not in by_name:
+                    raise ValueError(f"device {dev!r} attached to unknown "
+                                     f"link {l!r}; links: "
+                                     f"{sorted(by_name)}")
+            in_map[dev] = by_name[lin] if lin is not None else None
+            out_map[dev] = by_name[lout] if lout is not None else None
+        # resolved lookup tables (the engine queries these in the solver's
+        # feasibility hot path; frozen dataclass, so set via object.*)
+        object.__setattr__(self, "_in_map", in_map)
+        object.__setattr__(self, "_out_map", out_map)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def serialized(cls, devices: Sequence[DeviceProfile], *,
+                   link: Link | str = "pcie") -> "BusTopology":
+        """The paper's model: every copying device on one shared bus."""
+        lk = Link(link) if isinstance(link, str) else link
+        attach = tuple((d.name, lk.name, lk.name) if _has_copy(d)
+                       else (d.name, None, None) for d in devices)
+        return cls(links=(lk,), attach=attach, spec="serialized")
+
+    @classmethod
+    def independent(cls, devices: Sequence[DeviceProfile], *,
+                    prefix: str = "link") -> "BusTopology":
+        """Each copying device on its own private link (no contention)."""
+        links: list[Link] = []
+        attach: list[tuple[str, str | None, str | None]] = []
+        for d in devices:
+            if _has_copy(d):
+                lk = Link(f"{prefix}:{d.name}")
+                links.append(lk)
+                attach.append((d.name, lk.name, lk.name))
+            else:
+                attach.append((d.name, None, None))
+        return cls(links=tuple(links), attach=tuple(attach),
+                   spec="independent")
+
+    @classmethod
+    def custom(cls, links: Sequence[Link | str],
+               attach: Mapping[str, str | tuple[str | None, str | None] | None],
+               *, spec: str = "custom") -> "BusTopology":
+        """Mixed topologies: ``attach`` maps device name -> link name (both
+        directions), ``(in_link, out_link)``, or ``None`` (no link)."""
+        lks = tuple(Link(l) if isinstance(l, str) else l for l in links)
+        rows: list[tuple[str, str | None, str | None]] = []
+        for dev, spec_l in attach.items():
+            if spec_l is None:
+                rows.append((dev, None, None))
+            elif isinstance(spec_l, str):
+                rows.append((dev, spec_l, spec_l))
+            else:
+                rows.append((dev, spec_l[0], spec_l[1]))
+        return cls(links=lks, attach=tuple(rows), spec=spec)
+
+    @classmethod
+    def from_spec(cls, bus: "BusTopology | str | None",
+                  devices: Sequence[DeviceProfile]) -> "BusTopology":
+        """Resolve the legacy ``bus=`` strings (and None) to a topology."""
+        if isinstance(bus, BusTopology):
+            return bus
+        if bus is None or bus == "serialized":
+            return cls.serialized(devices)
+        if bus == "independent":
+            return cls.independent(devices)
+        raise ValueError(f"unknown bus spec {bus!r} "
+                         "(expected 'serialized', 'independent', or a "
+                         "BusTopology)")
+
+    # -- queries ------------------------------------------------------------
+
+    def link(self, name: str) -> Link:
+        for l in self.links:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def link_of(self, device: str, kind: str) -> Link | None:
+        """Link serializing ``device``'s ``copy_in``/``copy_out`` (or None).
+        Unattached devices return None; the engine gives them a private
+        link if they do copy."""
+        table = self._in_map if kind in ("in", "copy_in") else self._out_map
+        return table.get(device)
+
+    def is_contended(self) -> bool:
+        """True if any link serializes copies of two or more devices."""
+        users: dict[str, set[str]] = {}
+        for dev, lin, lout in self.attach:
+            for l in (lin, lout):
+                if l is not None:
+                    users.setdefault(l, set()).add(dev)
+        return any(len(v) > 1 for v in users.values())
+
+
+# ---------------------------------------------------------------------------
+# Copy times under a link (device CopyModel capped by link bandwidth)
+# ---------------------------------------------------------------------------
+
+
+def _in_time(d: DeviceProfile, link: Link | None, c: float,
+             n: int, k: int) -> float:
+    if link is None or link.bandwidth_bytes_per_s is None:
+        return d.copy.in_time(c, n, k)   # CopyModel is the source of truth
+    bw = min(d.copy.bandwidth_bytes_per_s, link.bandwidth_bytes_per_s)
+    if math.isinf(bw):
+        return 0.0
+    return d.copy.in_bytes(c, n, k) / bw + d.copy.latency_s
+
+
+def _out_time(d: DeviceProfile, link: Link | None, c: float,
+              n: int, k: int) -> float:
+    if link is None or link.bandwidth_bytes_per_s is None:
+        return d.copy.out_time(c, n, k)  # CopyModel is the source of truth
+    bw = min(d.copy.bandwidth_bytes_per_s, link.bandwidth_bytes_per_s)
+    if math.isinf(bw):
+        return 0.0
+    return d.copy.out_bytes(c, n, k) / bw
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _resolve_chunks(devices: Sequence[DeviceProfile],
+                    chunks: Sequence[int] | None) -> list[int]:
+    if chunks is None:
+        return [max(1, int(getattr(d, "pipeline_chunks", 1)))
+                for d in devices]
+    return [max(1, int(c)) for c in chunks]
+
+
+def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
+              n: int, k: int, topo: BusTopology, order: Sequence[int],
+              chunks: Sequence[int], events: list[BusEvent] | None
+              ) -> list[float]:
+    """One pass over the event graph.  Returns per-device finish times;
+    appends ``BusEvent``s when ``events`` is a list (None = fast path).
+
+    Semantics (Fig. 2, per link):
+      * input copies serialize on their link in priority order;
+      * a device with no input copy time starts computing at t = 0 (the
+        solver historically charged it for bus queue time — bug);
+      * compute chunk j starts at max(input chunk j landed, chunk j-1 done);
+      * output copies serialize on their link in priority order after ALL
+        input copies on that link (the link clock carries over — the solver
+        historically reset it to 0, letting outputs overlap inputs — bug);
+      * output chunk j additionally waits for compute chunk j.
+    """
+    finish = [0.0] * len(devices)
+    free: dict[str, float] = {}           # per-link clock
+    chunk_ends: dict[int, list[float]] = {}  # device -> compute chunk ends
+
+    # ---- input copies + compute, devices in priority order
+    for i in order:
+        d, c = devices[i], float(ops[i])
+        if c <= 0.0:
+            continue
+        C = chunks[i]
+        link = topo.link_of(d.name, "in")
+        t_total = _in_time(d, link, c, n, k)
+        t_cc = d.compute(c / C)
+        ends: list[float] = []
+        if t_total <= 0.0:
+            # no-copy device: compute immediately, chunks back to back
+            prev = 0.0
+            for j in range(C):
+                if events is not None:
+                    events.append(BusEvent(d.name, "compute", prev,
+                                           prev + t_cc, None, j))
+                prev += t_cc
+                ends.append(prev)
+        else:
+            lname = link.name if link is not None else f"~{d.name}"
+            t_shared = _in_time(d, link, 0.0, n, k)  # B panel + latency
+            t_chunk = (t_total - t_shared) / C
+            # each chunk is a separate transfer: chunks past the first pay
+            # the copy launch latency again (chunk 0's is in t_shared)
+            lat = d.copy.latency_s
+            start = free.get(lname, 0.0)
+            in_ends: list[float] = []
+            for j in range(C):
+                dur = t_chunk + (t_shared if j == 0 else lat)
+                if events is not None:
+                    events.append(BusEvent(d.name, "copy_in", start,
+                                           start + dur, lname, j))
+                start += dur
+                in_ends.append(start)
+            free[lname] = start
+            prev = 0.0
+            for j in range(C):
+                s = max(in_ends[j], prev)
+                if events is not None:
+                    events.append(BusEvent(d.name, "compute", s, s + t_cc,
+                                           None, j))
+                prev = s + t_cc
+                ends.append(prev)
+        chunk_ends[i] = ends
+        finish[i] = ends[-1]
+
+    # ---- output copies, devices in priority order, link clocks carried
+    for i in order:
+        d, c = devices[i], float(ops[i])
+        if c <= 0.0:
+            continue
+        C = chunks[i]
+        link = topo.link_of(d.name, "out")
+        t_out = _out_time(d, link, c, n, k)
+        if t_out <= 0.0:
+            continue
+        lname = link.name if link is not None else f"~{d.name}"
+        t_chunk = t_out / C
+        ends = chunk_ends[i]
+        t = free.get(lname, 0.0)
+        for j in range(C):
+            s = max(t, ends[j])
+            if events is not None:
+                events.append(BusEvent(d.name, "copy_out", s, s + t_chunk,
+                                       lname, j))
+            t = s + t_chunk
+        free[lname] = t
+        finish[i] = t
+    return finish
+
+
+def build_timeline(devices: Sequence[DeviceProfile], ops: Sequence[float],
+                   n: int, k: int, *,
+                   topology: BusTopology | str | None = None,
+                   order: Sequence[int] | None = None,
+                   chunks: Sequence[int] | None = None) -> Timeline:
+    """The unified event-graph timeline (what ``simulate_timeline`` returns,
+    what the solver's finish times are read from, and what the overlapped
+    executor's per-link ticket order is derived from)."""
+    topo = BusTopology.from_spec(topology, devices)
+    if order is None:
+        order = priority_order(devices)
+    events: list[BusEvent] = []
+    _simulate(devices, ops, n, k, topo, order, _resolve_chunks(devices, chunks),
+              events)
+    return Timeline(events)
+
+
+def engine_finish_times(devices: Sequence[DeviceProfile],
+                        ops: Sequence[float], n: int, k: int, *,
+                        topology: BusTopology | str | None = None,
+                        order: Sequence[int] | None = None,
+                        chunks: Sequence[int] | None = None) -> list[float]:
+    """Per-device finish times from the same control flow as
+    ``build_timeline``, without materializing events (solver hot path)."""
+    topo = BusTopology.from_spec(topology, devices)
+    if order is None:
+        order = priority_order(devices)
+    return _simulate(devices, ops, n, k, topo, order,
+                     _resolve_chunks(devices, chunks), None)

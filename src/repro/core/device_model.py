@@ -140,6 +140,10 @@ class DeviceProfile:
     align_m: int = 1  # row-count granularity (tensor cores: 8; MXU: 8*128 grain)
     align_k: int = 1
     cache_bytes: float = math.inf  # CPU LLC / TPU VMEM working-set bound
+    # Chunked pipelined copies (core.bus): split the input copy into C
+    # chunks so compute on chunk 1 overlaps the transfer of chunk 2.  The
+    # GEMM adapt phase maps this to row-chunks; 1 = unpipelined (paper).
+    pipeline_chunks: int = 1
 
     def total_time(self, c: float, n: int, k: int) -> float:
         """Compute + (non-serialized) copy time for ``c`` ops — paper Eq. 1 term."""
@@ -155,6 +159,16 @@ class DeviceProfile:
 def priority_order(devices: Sequence[DeviceProfile]) -> list[int]:
     """Paper §4.4: the faster the device, the higher the bus priority."""
     return sorted(range(len(devices)), key=lambda i: -devices[i].effective_speed)
+
+
+def with_pipeline(devices: Sequence[DeviceProfile],
+                  chunks: int) -> list[DeviceProfile]:
+    """Copies of ``devices`` with ``pipeline_chunks`` set on every device
+    that actually copies (no-copy devices gain nothing from chunking and
+    would only pay the per-chunk launch overhead)."""
+    return [dataclasses.replace(d, pipeline_chunks=max(1, int(chunks)))
+            if not math.isinf(d.copy.bandwidth_bytes_per_s) else d
+            for d in devices]
 
 
 # ---------------------------------------------------------------------------

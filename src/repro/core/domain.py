@@ -17,6 +17,7 @@ Three domains ship with the repo (see DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Protocol, Sequence, runtime_checkable
 
@@ -161,17 +162,25 @@ class PlanCache:
     ``DynamicScheduler`` re-fit changes the device signature *and* fires the
     registered invalidation hook, so stale entries can neither be served nor
     accumulate.
+
+    Thread-safe: ``PoasDispatcher.split`` / ``HGemms.plan`` may be called
+    concurrently from executor threads, and an ``OrderedDict`` being
+    reordered by ``move_to_end`` while another thread iterates or pops is
+    not — every access holds the lock (the critical sections are tiny
+    relative to a solve, so contention is negligible).
     """
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
         self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def key(self, domain: Domain, devices: Sequence[DeviceProfile],
             workload: Workload) -> Hashable:
@@ -179,26 +188,30 @@ class PlanCache:
                 device_signature(devices))
 
     def get(self, key: Hashable) -> Any | None:
-        entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
 
     def put(self, key: Hashable, plan: Any) -> None:
-        self._entries[key] = plan
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = plan
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
 
     def invalidate(self) -> None:
         """Drop every entry (called on model re-fits)."""
-        if self._entries:
-            self.invalidations += 1
-        self._entries.clear()
+        with self._lock:
+            if self._entries:
+                self.invalidations += 1
+            self._entries.clear()
 
     def stats(self) -> dict[str, int]:
-        return {"size": len(self._entries), "hits": self.hits,
-                "misses": self.misses, "invalidations": self.invalidations}
+        with self._lock:
+            return {"size": len(self._entries), "hits": self.hits,
+                    "misses": self.misses, "invalidations": self.invalidations}

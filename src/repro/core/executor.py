@@ -1,16 +1,18 @@
 """Overlapped co-execution runtime — replays a planned ``Timeline`` for real.
 
-``simulate_timeline`` (Fig. 2) *models* the schedule: input copies serialized
-on the shared bus in priority order, each device computing as soon as its
-inputs land (overlapping other devices' copies), output copies serialized in
-the same priority order.  This module *executes* it: one thread per device
-runs its copy_in → compute → copy_out stages, with a ticketed shared-bus
-lock granting bus access in exactly the planned event order.  Compute never
-takes the bus, so device A's compute overlaps device B's copies — the
-overlap the sequential loop this replaces could not express (DESIGN.md §4).
+The unified bus engine (``core.bus``, Fig. 2) *models* the schedule: copies
+serialized per link in priority order, each device computing as soon as its
+inputs land (overlapping other devices' copies).  This module *executes*
+it: one thread per device runs its copy_in → compute → copy_out stages,
+with one ticketed lock per topology link granting access in exactly the
+engine's per-link ticket order (``Timeline.link_ticket_order``).  Compute
+never takes a link, so device A's compute overlaps device B's copies — the
+overlap the paper's co-execution speedup comes from; copies on *different*
+links (a GPU's PCIe feed vs a TPU group's ICI feed) proceed concurrently
+(DESIGN.md §4).
 
 The executor records measured wall-clock intervals per stage as a
-``Timeline`` of ``BusEvent``s, so the same invariant checks (bus
+``Timeline`` of ``BusEvent``s, so the same invariant checks (per-link
 serialization, priority order, compute-after-copy) apply to a real run and
 to the simulation.
 """
@@ -21,19 +23,40 @@ import threading
 import time
 from typing import Callable, Sequence
 
+from .bus import BusEvent, Timeline
 from .device_model import DeviceProfile
-from .schedule import BusEvent, Timeline
 
 
 @dataclasses.dataclass
 class DeviceTask:
     """One device's three stages.  ``None`` stages are skipped (no-copy
-    devices such as the host CPU compute in place)."""
+    devices such as the host CPU compute in place).
+
+    Pipelined form: when ``compute_chunks`` is set, the per-chunk callables
+    replace the whole-stage ones and the executor streams them — the input
+    chunks run back-to-back under one bus ticket (the engine schedules a
+    device's chunks contiguously on its link) while a consumer thread
+    computes chunk j as soon as chunk j has landed, which is the real
+    copy/compute overlap the chunked timeline prices.  Output chunks run
+    after compute under the copy_out ticket."""
 
     device: str
     copy_in: Callable[[], None] | None
-    compute: Callable[[], None]
+    compute: Callable[[], None] | None
     copy_out: Callable[[], None] | None
+    copy_in_chunks: Sequence[Callable[[], None]] | None = None
+    compute_chunks: Sequence[Callable[[], None]] | None = None
+    copy_out_chunks: Sequence[Callable[[], None]] | None = None
+
+    @property
+    def pipelined(self) -> bool:
+        return bool(self.compute_chunks)
+
+    def has_copy_in(self) -> bool:
+        return self.copy_in is not None or bool(self.copy_in_chunks)
+
+    def has_copy_out(self) -> bool:
+        return self.copy_out is not None or bool(self.copy_out_chunks)
 
 
 class TicketBus:
@@ -82,25 +105,42 @@ class TicketBus:
 
 
 class OverlappedExecutor:
-    """Thread-per-device executor with a shared-bus lock.
+    """Thread-per-device executor with one ticketed lock per topology link.
 
     ``run`` returns the *measured* timeline.  Stage durations are whatever
-    the callables really take; the planned timeline only fixes the bus
+    the callables really take; the planned timeline only fixes each link's
     grant order, exactly as the paper's runtime does.
     """
 
     def __init__(self, devices: Sequence[DeviceProfile], planned: Timeline):
         self.devices = list(devices)
         self.planned = planned
-        self._bus = TicketBus(self.bus_sequence(planned))
+        self._buses: dict[str, TicketBus] = {}
+        self._ticket_link: dict[tuple[str, str], str] = {}
+        for link, seq in self.link_sequences(planned).items():
+            self._buses[link] = TicketBus(seq)
+            for ticket in seq:
+                self._ticket_link[ticket] = link
+
+    @staticmethod
+    def link_sequences(planned: Timeline) -> dict[str, list[tuple[str, str]]]:
+        """Per-link grant order of (device, kind) tickets, straight from the
+        engine's timeline (chunk events collapse to one ticket; events with
+        no link tag — e.g. measured timelines — share a single 'bus')."""
+        return planned.link_ticket_order()
 
     @staticmethod
     def bus_sequence(planned: Timeline) -> list[tuple[str, str]]:
-        """Bus grant order: the planned copy events sorted by start time
-        (ties broken copy_in first — inputs precede outputs in Fig. 2)."""
-        copies = [e for e in planned.events if e.kind != "compute"]
-        copies.sort(key=lambda e: (e.start, 0 if e.kind == "copy_in" else 1))
-        return [(e.device, e.kind) for e in copies]
+        """Flat grant order across all links (``Timeline.ticket_order``).
+        Kept for single-bus callers; ``link_sequences`` is the per-link
+        truth."""
+        return planned.ticket_order()
+
+    def _bus_for(self, ticket: tuple[str, str]) -> TicketBus:
+        link = self._ticket_link.get(ticket)
+        if link is None:
+            raise ValueError(f"ticket {ticket} not in bus schedule")
+        return self._buses[link]
 
     def run(self, tasks: Sequence[DeviceTask]) -> Timeline:
         # A task list may cover only a subset of the planned devices; release
@@ -108,22 +148,34 @@ class OverlappedExecutor:
         # forever (acquire has no timeout).
         provided: set[tuple[str, str]] = set()
         for t in tasks:
-            if t.copy_in is not None:
+            if t.compute is None and not t.compute_chunks:
+                raise ValueError(f"task {t.device!r} has neither compute "
+                                 "nor compute_chunks")
+            if t.has_copy_in():
                 provided.add((t.device, "copy_in"))
-            if t.copy_out is not None:
+            if t.has_copy_out():
                 provided.add((t.device, "copy_out"))
-        self._bus.retain(provided)
+        for bus in self._buses.values():
+            bus.retain(provided)
 
         events: list[BusEvent] = []
         lock = threading.Lock()
         errors: list[BaseException] = []
         t0 = time.perf_counter()
 
+        def record(device: str, kind: str, start: float, end: float,
+                   chunk: int = 0) -> None:
+            with lock:
+                events.append(BusEvent(device, kind, start, end,
+                                       self._ticket_link.get((device, kind)),
+                                       chunk))
+
         def stage(device: str, kind: str, fn: Callable[[], None],
                   on_bus: bool) -> None:
             ticket = (device, kind)
-            if on_bus:
-                self._bus.acquire(ticket)
+            bus = self._bus_for(ticket) if on_bus else None
+            if bus is not None:
+                bus.acquire(ticket)
             start = time.perf_counter() - t0
             try:
                 fn()
@@ -131,20 +183,102 @@ class OverlappedExecutor:
                 # stamp the end BEFORE releasing the bus: the next holder may
                 # start immediately, and measured bus events must not overlap
                 end = time.perf_counter() - t0
-                if on_bus:
-                    self._bus.release(ticket)
-            with lock:
-                events.append(BusEvent(device, kind, start, end))
+                if bus is not None:
+                    bus.release(ticket)
+            record(device, kind, start, end)
+
+        def run_pipelined(task: DeviceTask) -> None:
+            """Stream the chunked stages exactly as the engine prices them:
+            the copy feeder holds the copy_in ticket across its chunks (the
+            engine schedules them contiguously on the link) while the
+            consumer thread computes chunk j as soon as it lands, and the
+            output loop copies chunk j out as soon as chunk j is computed —
+            overlapping the remaining compute chunks, like the engine's
+            ``max(link_clock, compute_chunk_end)`` out-chunk starts."""
+            dev = task.device
+            in_chunks = list(task.copy_in_chunks or ())
+            comp_chunks = list(task.compute_chunks or ())
+            out_chunks = list(task.copy_out_chunks or ())
+            landed = threading.Semaphore(0)     # input chunk j copied
+            computed = threading.Semaphore(0)   # compute chunk j finished
+            aborted = threading.Event()
+            consumer_errs: list[BaseException] = []
+
+            def consume() -> None:
+                try:
+                    for j, fn in enumerate(comp_chunks):
+                        if in_chunks:
+                            landed.acquire()
+                            if aborted.is_set():
+                                return
+                        start = time.perf_counter() - t0
+                        fn()
+                        record(dev, "compute", start,
+                               time.perf_counter() - t0, chunk=j)
+                        computed.release()
+                except BaseException as exc:
+                    consumer_errs.append(exc)
+                finally:
+                    # on early exit, unblock an output loop waiting on
+                    # chunks that will never be computed (it re-checks
+                    # consumer_errs / aborted after each acquire)
+                    for _ in out_chunks:
+                        computed.release()
+
+            consumer = threading.Thread(target=consume, daemon=True)
+            if in_chunks:
+                ticket = (dev, "copy_in")
+                bus = self._bus_for(ticket)
+                bus.acquire(ticket)
+                consumer.start()
+                try:
+                    for j, fn in enumerate(in_chunks):
+                        start = time.perf_counter() - t0
+                        fn()
+                        record(dev, "copy_in", start,
+                               time.perf_counter() - t0, chunk=j)
+                        landed.release()
+                except BaseException:
+                    # unblock the consumer before surfacing the error
+                    aborted.set()
+                    landed.release()
+                    raise
+                finally:
+                    bus.release(ticket)
+            else:
+                consumer.start()
+            if out_chunks:
+                ticket = (dev, "copy_out")
+                bus = self._bus_for(ticket)
+                bus.acquire(ticket)
+                try:
+                    for j, fn in enumerate(out_chunks):
+                        computed.acquire()   # chunk j's matmul is done
+                        if consumer_errs or aborted.is_set():
+                            break
+                        start = time.perf_counter() - t0
+                        fn()
+                        record(dev, "copy_out", start,
+                               time.perf_counter() - t0, chunk=j)
+                finally:
+                    bus.release(ticket)
+            consumer.join()
+            if consumer_errs:
+                raise consumer_errs[0]
 
         def worker(task: DeviceTask) -> None:
             try:
+                if task.pipelined:
+                    run_pipelined(task)
+                    return
                 if task.copy_in is not None:
                     stage(task.device, "copy_in", task.copy_in, on_bus=True)
                 stage(task.device, "compute", task.compute, on_bus=False)
                 if task.copy_out is not None:
                     stage(task.device, "copy_out", task.copy_out, on_bus=True)
             except BaseException as exc:  # surfaced after join
-                self._bus.cancel_device(task.device)
+                for bus in self._buses.values():
+                    bus.cancel_device(task.device)
                 with lock:
                     errors.append(exc)
 

@@ -13,6 +13,7 @@ import dataclasses
 from typing import Any, Callable, Hashable, Sequence
 
 from .adapt import GemmPlan, ops_to_mnk
+from .bus import BusTopology
 from .device_model import DeviceProfile, priority_order
 from .domain import Domain, FunctionDomain, PlanCache, Workload, register_domain
 from .optimize import OptimizeResult, solve_bisection
@@ -98,11 +99,13 @@ class GemmDomain:
     name = "gemm"
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
-                 bus: str = "serialized", dynamic: bool = False):
+                 bus: str | BusTopology = "serialized",
+                 dynamic: bool = False):
         self._devices = list(devices)
-        self.bus = bus
-        self.dyn = DynamicScheduler(self._devices, bus=bus) if dynamic \
-            else None
+        self.topology = BusTopology.from_spec(bus, self._devices)
+        self.bus = self.topology.spec
+        self.dyn = DynamicScheduler(self._devices, bus=self.topology) \
+            if dynamic else None
 
     def predict(self) -> Sequence[DeviceProfile]:
         return self.dyn.devices if self.dyn is not None else self._devices
@@ -110,7 +113,7 @@ class GemmDomain:
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: GemmWorkload) -> OptimizeResult:
         return solve_bisection(devices, w.total_ops(), n=w.n, k=w.k,
-                               bus=self.bus)
+                               bus=self.topology)
 
     def adapt(self, devices: Sequence[DeviceProfile], opt: OptimizeResult,
               w: GemmWorkload) -> GemmPlan:
@@ -119,7 +122,11 @@ class GemmDomain:
     def schedule(self, devices: Sequence[DeviceProfile], plan: GemmPlan,
                  w: GemmWorkload) -> Schedule:
         ops = [float(a.m) * w.n * w.k for a in plan.assignments]
-        tl = simulate_timeline(devices, ops, w.n, w.k)
+        # price the chunk counts adapt actually produced (alignment grain
+        # can cap a device below its nominal pipeline_chunks)
+        chunks = [max(1, len(a.chunk_rows)) for a in plan.assignments]
+        tl = simulate_timeline(devices, ops, w.n, w.k,
+                               topology=self.topology, chunks=chunks)
         finish = [tl.device_finish(d.name) for d in devices]
         res = OptimizeResult(ops=ops, makespan=tl.makespan,
                              finish_times=finish, bus=self.bus)
@@ -131,7 +138,8 @@ class GemmDomain:
 
 
 def make_gemm_poas(devices: Sequence[DeviceProfile], *,
-                   bus: str = "serialized", dynamic: bool = False,
+                   bus: str | BusTopology = "serialized",
+                   dynamic: bool = False,
                    cache: bool = True) -> tuple[POAS, DynamicScheduler | None]:
     """Build the paper's DS-POAS for GEMM (hgemms uses this)."""
     domain = GemmDomain(devices, bus=bus, dynamic=dynamic)

@@ -23,7 +23,8 @@ from typing import Sequence
 import numpy as np
 
 from .adapt import GemmPlan
-from .device_model import DeviceProfile
+from .bus import BusTopology
+from .device_model import DeviceProfile, with_pipeline
 from .domain import PlanCache
 from .executor import DeviceTask, OverlappedExecutor
 from .framework import GemmWorkload, POASPlan, make_gemm_poas
@@ -51,12 +52,18 @@ class HGemms:
     """Heterogeneous GEMM scheduler (paper §4)."""
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
-                 bus: str = "serialized", dynamic: bool = False,
-                 cache: bool = True):
+                 bus: str | BusTopology = "serialized",
+                 dynamic: bool = False, cache: bool = True,
+                 pipeline_chunks: int | None = None):
         self.devices = list(devices)
-        self.bus = bus
+        if pipeline_chunks is not None:
+            # chunked pipelined copies (DESIGN.md §4): the adapt phase maps
+            # each copying device's chunk count to row-chunks of its A slice
+            self.devices = with_pipeline(self.devices, pipeline_chunks)
         self.poas, self.dyn = make_gemm_poas(self.devices, bus=bus,
                                              dynamic=dynamic, cache=cache)
+        self.bus = self.poas.domain.bus
+        self.topology = self.poas.domain.topology
 
     @property
     def plan_cache(self) -> PlanCache | None:
@@ -72,7 +79,10 @@ class HGemms:
     def _partition_tasks(self, a: np.ndarray, b: np.ndarray, c: np.ndarray,
                          gplan: GemmPlan, planned: Timeline) -> list[DeviceTask]:
         """One ``DeviceTask`` per device with work; stages mirror the planned
-        timeline (devices with no planned copy event compute in place)."""
+        timeline (devices with no planned copy event compute in place).
+        Devices with pipelined row chunks get per-chunk stage lists so the
+        executor streams them — chunk 1's matmul really overlaps chunk 2's
+        copy, the overlap the chunked plan prices."""
         import jax
         import jax.numpy as jnp
 
@@ -85,8 +95,14 @@ class HGemms:
         for dev, asg in zip(self.devices, gplan.assignments):
             if asg.m == 0:
                 continue
-            rows = slice(asg.row0, asg.row0 + asg.m)
+            has_in = (dev.name, "copy_in") in planned_kinds
+            has_out = (dev.name, "copy_out") in planned_kinds
             state: dict = {}
+            if has_in and len(asg.chunk_rows) > 1:
+                tasks.append(self._pipelined_task(
+                    mm, a, b, c, dev.name, asg, has_out, state))
+                continue
+            rows = slice(asg.row0, asg.row0 + asg.m)
 
             def copy_in(state=state, rows=rows):
                 # host -> device: A row-slice + full B
@@ -102,8 +118,6 @@ class HGemms:
             def copy_out(state=state, rows=rows):
                 c[rows] = state["c"]
 
-            has_in = (dev.name, "copy_in") in planned_kinds
-            has_out = (dev.name, "copy_out") in planned_kinds
             if not has_out:
                 # fold the C write into compute so the result still lands
                 def compute(state=state, rows=rows, inner=compute):
@@ -115,6 +129,40 @@ class HGemms:
                 compute=compute,
                 copy_out=copy_out if has_out else None))
         return tasks
+
+    @staticmethod
+    def _pipelined_task(mm, a: np.ndarray, b: np.ndarray, c: np.ndarray,
+                        device: str, asg, has_out: bool,
+                        state: dict) -> DeviceTask:
+        """Per-chunk stage lists from the adapt phase's ``chunk_rows``: the
+        shared B panel rides input chunk 0 (exactly how the engine prices
+        it), chunk j's matmul consumes its own A slice, chunk j's C slice
+        lands in the output stage (or inside compute for no-copy-out)."""
+        import jax.numpy as jnp
+
+        in_chunks, comp_chunks, out_chunks = [], [], []
+        for j, (r0, rr) in enumerate(zip(asg.chunk_offsets(),
+                                         asg.chunk_rows)):
+            def copy_in(j=j, r0=r0, rr=rr, state=state):
+                if j == 0:
+                    state["b"] = jnp.asarray(b)
+                state["a", j] = jnp.asarray(a[r0:r0 + rr])
+
+            def compute(j=j, r0=r0, rr=rr, state=state):
+                state["c", j] = np.asarray(mm(state["a", j], state["b"]))
+                if not has_out:
+                    c[r0:r0 + rr] = state["c", j]
+
+            def copy_out(j=j, r0=r0, rr=rr, state=state):
+                c[r0:r0 + rr] = state["c", j]
+
+            in_chunks.append(copy_in)
+            comp_chunks.append(compute)
+            out_chunks.append(copy_out)
+        return DeviceTask(
+            device=device, copy_in=None, compute=None, copy_out=None,
+            copy_in_chunks=in_chunks, compute_chunks=comp_chunks,
+            copy_out_chunks=out_chunks if has_out else None)
 
     def execute(self, a: np.ndarray, b: np.ndarray, *,
                 noise: float = 0.0, seed: int = 0,
@@ -156,7 +204,10 @@ class HGemms:
             if self.dyn is not None:
                 self.dyn.observe(di, asg.ops,
                                  dev.compute(asg.ops) * (1.0 + (noise * rng.standard_normal() if noise else 0.0)))
-        tl = simulate_timeline(self.devices, ops_list, n, k)
+        tl = simulate_timeline(self.devices, ops_list, n, k,
+                               topology=self.topology,
+                               chunks=[max(1, len(a.chunk_rows))
+                                       for a in gplan.assignments])
         standalone = {d.name: d.total_time(float(m) * n * k, n, k)
                       for d in self.devices}
         rep = ExecutionReport(

@@ -9,9 +9,12 @@ non-decreasing in ``c_x``, so we replace the external solver with:
 * ``solve_bisection`` — exact for *any* monotone time model (subsumes the
   paper's linear MILP): bisect on the makespan T; feasibility is "can the
   devices jointly absorb N ops, each finishing by T?", which decomposes
-  per-device because the objective is a max.  Supports the serialized
-  shared-bus model (paper §3.4.3/Fig. 2) via a greedy priority-ordered
-  feasibility check.
+  per-device on uncontended topologies.  On contended topologies (the
+  paper's serialized shared bus, §3.4.3/Fig. 2) the greedy priority-ordered
+  feasibility check prices every candidate against the *exact* unified
+  timeline engine (``core.bus``) — including chunked pipelined copies — so
+  the solver optimizes precisely what the simulator reports and the
+  executor replays.
 * ``solve_analytic`` — closed-form active-set LP for the linear,
   independent-bus case (for cross-checking, and it is what a CPLEX run of
   Eqs. 1–4 returns).
@@ -25,9 +28,11 @@ import dataclasses
 import math
 from typing import Sequence
 
+from .bus import BusTopology, engine_finish_times
 from .device_model import DeviceProfile, priority_order
 
 _EPS = 1e-12
+_TINY = 1e-30   # probe op count: prices fixed costs (B panel, launch) only
 
 
 @dataclasses.dataclass
@@ -35,7 +40,7 @@ class OptimizeResult:
     ops: list[float]                 # c_x per device (Σ = N)
     makespan: float                  # predicted total time
     finish_times: list[float]        # per-device predicted finish
-    bus: str                         # "independent" | "serialized"
+    bus: str                         # "independent" | "serialized" | custom
     iterations: int = 0
 
     def shares(self) -> list[float]:
@@ -45,68 +50,76 @@ class OptimizeResult:
 
 # ---------------------------------------------------------------------------
 # Feasibility: how many ops can each device absorb within makespan T?
+# Both checks price candidates on the unified timeline engine, so the
+# solver, the simulator, and the executor share one source of truth.
 # ---------------------------------------------------------------------------
 
 
-def _max_ops_independent(dev: DeviceProfile, T: float, n: int, k: int) -> float:
-    """Largest c with compute(c) + copy(c) <= T, independent bus."""
-    lo, hi = 0.0, 1.0
-    if dev.total_time(0.0, n, k) > T:
+def _max_ops_single(devices: Sequence[DeviceProfile], i: int, T: float,
+                    n: int, k: int, topo: BusTopology,
+                    order: Sequence[int], N: float) -> float:
+    """Largest c_i with device i's engine finish <= T, no contention."""
+    c = [0.0] * len(devices)
+
+    def fin(ci: float) -> float:
+        c[i] = ci
+        return engine_finish_times(devices, c, n, k, topology=topo,
+                                   order=order)[i]
+
+    if fin(_TINY) > T:      # fixed costs alone (B panel, launch) miss T
         return 0.0
-    # exponential search for an upper bound
-    while dev.total_time(hi, n, k) <= T and hi < 1e24:
-        hi *= 2.0
-    for _ in range(200):
+    if fin(float(N)) <= T:  # the whole workload fits
+        return float(N)
+    lo, hi = 0.0, float(N)
+    for _ in range(100):
         mid = 0.5 * (lo + hi)
-        if dev.total_time(mid, n, k) <= T:
+        if fin(mid) <= T:
             lo = mid
         else:
             hi = mid
-        if hi - lo <= max(1.0, lo) * 1e-12:
+        if hi - lo <= max(1.0, lo) * 1e-9:
             break
     return lo
 
 
 def _max_ops_serialized(devices: Sequence[DeviceProfile], order: Sequence[int],
-                        T: float, n: int, k: int) -> list[float]:
-    """Greedy priority-ordered assignment under the shared-bus model.
+                        T: float, n: int, k: int, topo: BusTopology,
+                        N: float) -> list[float]:
+    """Greedy priority-ordered assignment under a contended topology.
 
-    Copies serialize on one bus in priority order (paper Fig. 2): device i's
-    input copy starts when device i-1's finishes; compute overlaps other
-    devices' copies; output copies are likewise serialized in priority order
-    after compute.  We conservatively require, for each device,
-
-        bus_in_end_i + compute_i + out_copy_i <= T
-
-    and additionally that output copies, executed in priority order, all
-    finish by T.  Monotone in every c_i, so greedy-max per device in priority
-    order maximizes total absorbed ops for a given T.
+    Device i's candidate c_i is the largest value keeping the *whole*
+    partial timeline's makespan within T — evaluated on the exact engine,
+    so queueing on every link, compute overlap, no-copy devices starting at
+    t = 0, and pipelined chunk boundaries are all priced exactly (the old
+    linearized check both over-charged no-copy devices for bus time they
+    never wait on and let output copies overlap input copies).  The engine
+    makespan is monotone in every c_i, so greedy-max in priority order
+    maximizes the total absorbed ops for a given T.
     """
     c = [0.0] * len(devices)
-    bus_t = 0.0
-    # input copies serialized in priority order
     for i in order:
-        dev = devices[i]
-        # binary search largest c_i such that
-        #   bus_t + in_time(c_i) + compute(c_i) + out_time(c_i) <= T
-        def finish(ci: float) -> float:
-            return (bus_t + dev.copy.in_time(ci, n, k) + dev.compute(ci)
-                    + dev.copy.out_time(ci, n, k))
-        if finish(0.0) > T:
+
+        def span(ci: float) -> float:
+            c[i] = ci
+            return max(engine_finish_times(devices, c, n, k, topology=topo,
+                                           order=order))
+
+        if span(_TINY) > T:
+            c[i] = 0.0
             continue
-        lo, hi = 0.0, 1.0
-        while finish(hi) <= T and hi < 1e24:
-            hi *= 2.0
-        for _ in range(200):
+        if span(float(N)) <= T:
+            c[i] = float(N)
+            continue
+        lo, hi = 0.0, float(N)
+        for _ in range(100):
             mid = 0.5 * (lo + hi)
-            if finish(mid) <= T:
+            if span(mid) <= T:
                 lo = mid
             else:
                 hi = mid
-            if hi - lo <= max(1.0, lo) * 1e-12:
+            if hi - lo <= max(1.0, lo) * 1e-9:
                 break
         c[i] = lo
-        bus_t += dev.copy.in_time(lo, n, k)
     return c
 
 
@@ -116,33 +129,44 @@ def _max_ops_serialized(devices: Sequence[DeviceProfile], order: Sequence[int],
 
 
 def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
-                    n: int, k: int, bus: str = "independent",
+                    n: int, k: int,
+                    bus: str | BusTopology = "independent",
                     tol: float = 1e-9, polish: bool = True) -> OptimizeResult:
     """Minimize makespan by bisecting on T.
 
-    Exact for monotone time models on an independent bus.  For the serialized
-    shared bus the feasibility check uses the paper's conservative linearized
-    serialization (each device charged for the copies queued ahead of it);
-    the result is then *polished* by coordinate descent under the exact
-    Fig.-2 timeline, which closes the small gap the linearization leaves.
+    ``bus`` is a legacy spec string ("independent" | "serialized") or a
+    ``BusTopology``.  Feasibility prices every candidate on the exact
+    unified timeline engine, so the check is exact for any topology and for
+    chunked pipelined copies; the contended-topology result is additionally
+    *polished* by coordinate descent on the same engine (the greedy
+    priority-ordered assignment is not always the global optimum).
     """
+    spec = bus.spec if isinstance(bus, BusTopology) else bus
     if N <= 0:
         z = [0.0] * len(devices)
-        return OptimizeResult(z, 0.0, z, bus)
+        return OptimizeResult(z, 0.0, z, spec)
+    topo = BusTopology.from_spec(bus, devices)
     order = priority_order(devices)
+    contended = topo.is_contended()
 
     def capacity(T: float) -> list[float]:
-        if bus == "serialized":
-            return _max_ops_serialized(devices, order, T, n, k)
-        return [_max_ops_independent(d, T, n, k) for d in devices]
+        if contended:
+            return _max_ops_serialized(devices, order, T, n, k, topo, N)
+        return [_max_ops_single(devices, i, T, n, k, topo, order, N)
+                for i in range(len(devices))]
 
-    # bracket: T_hi = fastest single device doing everything
+    # bracket: every single-device assignment is feasible at its own engine
+    # makespan; on a contended topology the greedy may interleave devices,
+    # so the safe upper bound is the serial sum of those makespans.
+    def single(i: int) -> float:
+        one = [0.0] * len(devices)
+        one[i] = N
+        return max(engine_finish_times(devices, one, n, k, topology=topo,
+                                       order=order))
+
+    singles = [single(i) for i in range(len(devices))]
     t_lo = 0.0
-    t_hi = min(d.total_time(N, n, k) for d in devices)
-    if bus == "serialized":
-        t_hi = max(t_hi, sum(d.copy.in_time(N, n, k) for d in devices)
-                   + max(d.compute(N) for d in devices)
-                   + sum(d.copy.out_time(N, n, k) for d in devices))
+    t_hi = sum(singles) if contended else min(singles)
     iters = 0
     for _ in range(200):
         iters += 1
@@ -162,25 +186,25 @@ def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
         ops = [c * scale for c in caps]
     else:  # pragma: no cover - degenerate
         ops = [N / len(devices)] * len(devices)
-    if polish and bus == "serialized" and len(devices) > 1:
-        ops = _descend(devices, ops, n, k, bus, order,
+    if polish and contended and len(devices) > 1:
+        ops = _descend(devices, ops, n, k, topo, order,
                        step0=N / 64.0, max_evals=1500)
-    finish = _finish_times(devices, ops, n, k, bus, order)
-    best = OptimizeResult(ops, max(finish), finish, bus, iterations=iters)
+    finish = _finish_times(devices, ops, n, k, topo, order)
+    best = OptimizeResult(ops, max(finish), finish, spec, iterations=iters)
     # Degenerate single-device assignments are feasible points the split
     # can lose to on small workloads (copy overheads don't amortize — the
     # paper's §3.4.3 "significant amount of work" caveat).  Take the min.
     for i in range(len(devices)):
         one = [0.0] * len(devices)
         one[i] = N
-        f1 = _finish_times(devices, one, n, k, bus, order)
+        f1 = _finish_times(devices, one, n, k, topo, order)
         if max(f1) < best.makespan:
-            best = OptimizeResult(one, max(f1), f1, bus, iterations=iters)
+            best = OptimizeResult(one, max(f1), f1, spec, iterations=iters)
     return best
 
 
 def _descend(devices: Sequence[DeviceProfile], ops0: Sequence[float],
-             n: int, k: int, bus: str, order: Sequence[int], *,
+             n: int, k: int, bus: str | BusTopology, order: Sequence[int], *,
              step0: float, max_evals: int) -> list[float]:
     """Pairwise-transfer coordinate descent on the exact timeline makespan."""
     ops = list(ops0)
@@ -214,30 +238,18 @@ def _descend(devices: Sequence[DeviceProfile], ops0: Sequence[float],
 
 
 def _finish_times(devices: Sequence[DeviceProfile], ops: Sequence[float],
-                  n: int, k: int, bus: str,
+                  n: int, k: int, bus: str | BusTopology,
                   order: Sequence[int] | None = None) -> list[float]:
-    if bus == "independent":
-        return [d.total_time(c, n, k) if c > 0 else 0.0
-                for d, c in zip(devices, ops)]
-    order = list(order if order is not None else priority_order(devices))
-    finish = [0.0] * len(devices)
-    bus_t = 0.0
-    compute_end = {}
-    for i in order:
-        d, c = devices[i], ops[i]
-        if c <= 0:
-            continue
-        bus_t += d.copy.in_time(c, n, k)
-        compute_end[i] = bus_t + d.compute(c)
-    out_t = 0.0
-    for i in order:
-        d, c = devices[i], ops[i]
-        if c <= 0:
-            continue
-        out_start = max(out_t, compute_end[i])
-        out_t = out_start + d.copy.out_time(c, n, k)
-        finish[i] = out_t
-    return finish
+    """Per-device finish times — the unified engine, nothing else.
+
+    This used to be an independent re-implementation of the Fig. 2 timeline
+    that (a) charged no-copy devices for bus queue time they never wait on
+    and (b) reset the output-copy clock to 0, letting outputs overlap
+    inputs on the supposedly serialized bus; both made the solver optimize
+    a different objective than ``simulate_timeline`` measured.  Delegating
+    to ``engine_finish_times`` makes solver/simulator agreement exact by
+    construction."""
+    return engine_finish_times(devices, ops, n, k, topology=bus, order=order)
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +265,11 @@ def solve_analytic(devices: Sequence[DeviceProfile], N: float, *,
     intercepts), equalizing finish times gives
         T* = (N + Σ β_x/α_x) / (Σ 1/α_x)
     over the active set; devices whose β_x ≥ T* are dropped iteratively.
+
+    Zero-slope devices (``LinearTimeModel(a=0, b=...)`` — constant time
+    regardless of load) would divide by zero in the LP; they are held out
+    of the active set and compared as "hand it everything" candidates
+    (a zero-slope device finishes at β no matter how much it absorbs).
     """
     alphas, betas = [], []
     for d in devices:
@@ -260,17 +277,30 @@ def solve_analytic(devices: Sequence[DeviceProfile], N: float, *,
         t1 = d.total_time(1e9, n, k)
         alphas.append((t1 - t0) / 1e9)
         betas.append(t0)
-    active = list(range(len(devices)))
-    while True:
-        num = N + sum(betas[i] / alphas[i] for i in active)
-        den = sum(1.0 / alphas[i] for i in active)
-        T = num / den
-        drop = [i for i in active if betas[i] >= T - _EPS]
-        if not drop:
-            break
-        active = [i for i in active if i not in drop]
-        if not active:  # pragma: no cover
-            raise RuntimeError("no device can make progress")
+    zero = [i for i in range(len(devices)) if alphas[i] <= 0.0]
+    active = [i for i in range(len(devices)) if alphas[i] > 0.0]
+    T = math.inf
+    if active:
+        while True:
+            num = N + sum(betas[i] / alphas[i] for i in active)
+            den = sum(1.0 / alphas[i] for i in active)
+            T = num / den
+            drop = [i for i in active if betas[i] >= T - _EPS]
+            if not drop:
+                break
+            active = [i for i in active if i not in drop]
+            if not active:
+                T = math.inf
+                break
+    if zero:
+        j = min(zero, key=lambda i: betas[i])
+        if betas[j] <= T:   # constant-time device beats (or is) the LP
+            ops = [0.0] * len(devices)
+            ops[j] = N
+            finish = _finish_times(devices, ops, n, k, "independent")
+            return OptimizeResult(ops, max(finish), finish, "independent")
+    if not active:  # pragma: no cover
+        raise RuntimeError("no device can make progress")
     ops = [0.0] * len(devices)
     for i in active:
         ops[i] = (T - betas[i]) / alphas[i]
@@ -287,13 +317,14 @@ def solve_analytic(devices: Sequence[DeviceProfile], N: float, *,
 
 
 def solve_local_search(devices: Sequence[DeviceProfile], N: float, *,
-                       n: int, k: int, bus: str = "independent",
+                       n: int, k: int, bus: str | BusTopology = "independent",
                        iters: int = 4000, seed: int = 0) -> OptimizeResult:
     """Coordinate-descent on op shares.  Works for arbitrary monotone models;
     used as a CSP-style fallback and as an independent check of bisection."""
     import numpy as np
     rng = np.random.default_rng(seed)
     m = len(devices)
+    bus = BusTopology.from_spec(bus, devices)
     order = priority_order(devices)
 
     def makespan(ops):
@@ -320,4 +351,5 @@ def solve_local_search(devices: Sequence[DeviceProfile], N: float, *,
         if not improved:
             step *= 0.5
     finish = _finish_times(devices, list(ops), n, k, bus, order)
-    return OptimizeResult(list(ops), max(finish), finish, bus, iterations=it)
+    return OptimizeResult(list(ops), max(finish), finish, bus.spec,
+                          iterations=it)

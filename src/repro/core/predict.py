@@ -161,7 +161,8 @@ def save_profiles(path: str, devices: Sequence[DeviceProfile]) -> None:
     rows = []
     for d in devices:
         row = {"name": d.name, "kind": d.kind, "align_m": d.align_m,
-               "align_k": d.align_k, "cache_bytes": d.cache_bytes}
+               "align_k": d.align_k, "cache_bytes": d.cache_bytes,
+               "pipeline_chunks": d.pipeline_chunks}
         if isinstance(d.compute, LinearTimeModel):
             row["model"] = {"type": "linear", "a": d.compute.a, "b": d.compute.b}
         else:
@@ -200,5 +201,6 @@ def load_profiles(path: str) -> list[DeviceProfile]:
                           latency_s=c["latency_s"]))
         out.append(DeviceProfile(row["name"], row["kind"], compute, copy,
                                  align_m=row["align_m"], align_k=row["align_k"],
-                                 cache_bytes=row["cache_bytes"]))
+                                 cache_bytes=row["cache_bytes"],
+                                 pipeline_chunks=row.get("pipeline_chunks", 1)))
     return out

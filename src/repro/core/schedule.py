@@ -9,11 +9,13 @@ communication scheme (paper §3.4, §4.4, Fig. 2):
   devices' copies);
 * output copies (C) are serialized in the same priority order.
 
-``simulate_timeline`` produces the exact event timeline under this policy;
-``DynamicScheduler`` re-fits the per-device linear model from observed step
-times (EWMA-weighted regression) and re-plans — this is the paper's §3.4.2
-dynamic mode and doubles as the straggler mitigation of the distributed
-runtime.
+``simulate_timeline`` produces the exact event timeline under this policy —
+it is a thin front over the unified bus engine (``core.bus``), the same
+event graph the optimizer prices feasibility on and the overlapped executor
+derives its per-link ticket order from (DESIGN.md §4).  ``DynamicScheduler``
+re-fits the per-device linear model from observed step times (EWMA-weighted
+regression) and re-plans — this is the paper's §3.4.2 dynamic mode and
+doubles as the straggler mitigation of the distributed runtime.
 """
 from __future__ import annotations
 
@@ -22,92 +24,33 @@ from typing import Sequence
 
 import numpy as np
 
+from .bus import BusEvent, BusTopology, Timeline, build_timeline
 from .device_model import DeviceProfile, LinearTimeModel, priority_order
 from .optimize import OptimizeResult, solve_bisection
 from .predict import fit_linear
 
+__all__ = ["BusEvent", "Timeline", "simulate_timeline", "Schedule",
+           "StaticScheduler", "DynamicScheduler"]
+
 
 # ---------------------------------------------------------------------------
-# Timeline simulation (Fig. 2)
+# Timeline simulation (Fig. 2) — one engine, shared with solver and executor
 # ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class BusEvent:
-    device: str
-    kind: str       # "copy_in" | "compute" | "copy_out"
-    start: float
-    end: float
-
-    @property
-    def duration(self) -> float:
-        return self.end - self.start
-
-
-@dataclasses.dataclass
-class Timeline:
-    events: list[BusEvent]
-
-    @property
-    def makespan(self) -> float:
-        return max((e.end for e in self.events), default=0.0)
-
-    def device_events(self, name: str) -> list[BusEvent]:
-        return [e for e in self.events if e.device == name]
-
-    def device_finish(self, name: str) -> float:
-        """When the device's last stage (usually copy_out) ends; 0 if idle."""
-        return max((e.end for e in self.device_events(name)), default=0.0)
-
-    def idle_time(self, name: str) -> float:
-        evs = sorted(self.device_events(name), key=lambda e: e.start)
-        if not evs:
-            return self.makespan
-        idle = evs[0].start
-        for a, b in zip(evs, evs[1:]):
-            idle += max(0.0, b.start - a.end)
-        idle += self.makespan - evs[-1].end
-        return idle
-
-    def bus_busy_time(self) -> float:
-        return sum(e.duration for e in self.events
-                   if e.kind in ("copy_in", "copy_out"))
 
 
 def simulate_timeline(devices: Sequence[DeviceProfile], ops: Sequence[float],
-                      n: int, k: int) -> Timeline:
-    """Exact serialized-bus simulation of the Fig. 2 schedule."""
-    order = priority_order(devices)
-    events: list[BusEvent] = []
-    bus_free = 0.0
-    compute_end: dict[int, float] = {}
-    for i in order:
-        d, c = devices[i], ops[i]
-        if c <= 0:
-            continue
-        t_in = d.copy.in_time(c, n, k)
-        if t_in > 0:
-            events.append(BusEvent(d.name, "copy_in", bus_free, bus_free + t_in))
-            bus_free += t_in
-            start = bus_free
-        else:
-            start = 0.0
-        t_c = d.compute(c)
-        events.append(BusEvent(d.name, "compute", start, start + t_c))
-        compute_end[i] = start + t_c
-    # Output copies in priority order; they share the same bus, so each must
-    # wait for the bus to be free AND its own compute to be done.
-    for i in order:
-        d, c = devices[i], ops[i]
-        if c <= 0 or i not in compute_end:
-            continue
-        t_out = d.copy.out_time(c, n, k)
-        if t_out <= 0:
-            continue
-        start = max(bus_free, compute_end[i])
-        events.append(BusEvent(d.name, "copy_out", start, start + t_out))
-        bus_free = start + t_out
-    return Timeline(events)
+                      n: int, k: int, *,
+                      topology: BusTopology | str | None = None,
+                      order: Sequence[int] | None = None,
+                      chunks: Sequence[int] | None = None) -> Timeline:
+    """Exact simulation of the Fig. 2 schedule on the unified bus engine.
+
+    ``topology`` defaults to the paper's single serialized bus; pass a
+    ``BusTopology`` for independent or mixed link layouts, ``order`` to
+    override the priority order, and ``chunks`` to override each device's
+    ``pipeline_chunks``."""
+    return build_timeline(devices, ops, n, k, topology=topology, order=order,
+                          chunks=chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -126,13 +69,13 @@ class StaticScheduler:
     """Solve once, never re-plan (paper: 'gives excellent results' for GEMM)."""
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
-                 bus: str = "serialized"):
+                 bus: str | BusTopology = "serialized"):
         self.devices = list(devices)
         self.bus = bus
 
     def plan(self, N: float, *, n: int, k: int) -> Schedule:
         res = solve_bisection(self.devices, N, n=n, k=k, bus=self.bus)
-        tl = simulate_timeline(self.devices, res.ops, n, k)
+        tl = simulate_timeline(self.devices, res.ops, n, k, topology=self.bus)
         return Schedule(result=res, timeline=tl,
                         priorities=priority_order(self.devices))
 
@@ -159,7 +102,7 @@ class DynamicScheduler:
     """
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
-                 bus: str = "serialized", decay: float = 0.7,
+                 bus: str | BusTopology = "serialized", decay: float = 0.7,
                  window: int = 32, min_obs: int = 2):
         self.devices = list(devices)
         self.bus = bus
@@ -204,7 +147,7 @@ class DynamicScheduler:
 
     def plan(self, N: float, *, n: int, k: int) -> Schedule:
         res = solve_bisection(self.devices, N, n=n, k=k, bus=self.bus)
-        tl = simulate_timeline(self.devices, res.ops, n, k)
+        tl = simulate_timeline(self.devices, res.ops, n, k, topology=self.bus)
         return Schedule(result=res, timeline=tl,
                         priorities=priority_order(self.devices))
 

@@ -19,6 +19,7 @@ from typing import Hashable, Sequence
 import numpy as np
 
 from ..core.adapt import round_shares_to_grain
+from ..core.bus import BusTopology
 from ..core.device_model import (DeviceProfile, LinearTimeModel, NO_COPY,
                                  priority_order)
 from ..core.domain import PlanCache, register_domain
@@ -87,7 +88,10 @@ class TrainStepDomain:
         self.seq_len = seq_len
         self.flops_per_token = flops_per_token
         self._devices = [pod_device(p, flops_per_token) for p in self.pods]
-        self.dyn = DynamicScheduler(self._devices, bus="independent") \
+        # pods feed through their own interconnects, not a shared host bus:
+        # each gets an independent link in the topology (no contention)
+        self.topology = BusTopology.independent(self._devices)
+        self.dyn = DynamicScheduler(self._devices, bus=self.topology) \
             if dynamic else None
 
     def predict(self) -> Sequence[DeviceProfile]:
@@ -96,7 +100,7 @@ class TrainStepDomain:
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: TrainStepWorkload) -> OptimizeResult:
         return solve_bisection(devices, w.total_ops(), n=1, k=1,
-                               bus="independent")
+                               bus=self.topology)
 
     def adapt(self, devices: Sequence[DeviceProfile], opt: OptimizeResult,
               w: TrainStepWorkload) -> BatchSplit:
@@ -111,7 +115,7 @@ class TrainStepDomain:
     def schedule(self, devices: Sequence[DeviceProfile], split: BatchSplit,
                  w: TrainStepWorkload) -> Schedule:
         ops = [float(s * self.seq_len) for s in split.sizes]
-        tl = simulate_timeline(devices, ops, 1, 1)
+        tl = simulate_timeline(devices, ops, 1, 1, topology=self.topology)
         res = OptimizeResult(ops=ops, makespan=tl.makespan,
                              finish_times=[tl.device_finish(d.name)
                                            for d in devices],

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adapt import pack_largest_first
+from ..core.bus import BusTopology
 from ..core.device_model import DeviceProfile, priority_order
 from ..core.domain import PlanCache, register_domain
 from ..core.framework import POAS, POASPlan
@@ -131,6 +132,8 @@ class ServingDispatchDomain:
 
     def __init__(self, groups: Sequence[DeviceProfile]):
         self._groups = list(groups)
+        # replica groups don't share a host bus: one private link each
+        self.topology = BusTopology.independent(self._groups)
 
     def predict(self) -> Sequence[DeviceProfile]:
         return self._groups
@@ -138,7 +141,7 @@ class ServingDispatchDomain:
     def optimize(self, groups: Sequence[DeviceProfile],
                  batch: RequestBatch) -> OptimizeResult:
         return solve_bisection(groups, batch.total_ops(), n=1, k=1,
-                               bus="independent")
+                               bus=self.topology)
 
     def adapt(self, groups: Sequence[DeviceProfile], opt: OptimizeResult,
               batch: RequestBatch) -> DispatchPlan:
@@ -151,7 +154,7 @@ class ServingDispatchDomain:
     def schedule(self, groups: Sequence[DeviceProfile], plan: DispatchPlan,
                  batch: RequestBatch) -> Schedule:
         ops = plan.bucket_tokens
-        tl = simulate_timeline(groups, ops, 1, 1)
+        tl = simulate_timeline(groups, ops, 1, 1, topology=self.topology)
         res = OptimizeResult(ops=ops, makespan=tl.makespan,
                              finish_times=[tl.device_finish(g.name)
                                            for g in groups],

@@ -1,0 +1,540 @@
+"""The unified bus timeline engine: topologies, solver/simulator agreement,
+chunked pipelined copies, per-link executor ticket order, PlanCache safety.
+
+These are the regression nets for the historical solver/simulator
+disagreements: the solver charged no-copy devices for bus queue time they
+never wait on, and let output copies overlap input copies on the
+supposedly serialized bus.  Both are now impossible by construction — the
+solver's ``_finish_times`` and ``simulate_timeline`` are the same engine —
+and the tests here pin that equivalence for random device sets, priority
+orders, and chunk counts.
+"""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # collection must never hard-error
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed "
+            "(pip install -r requirements-dev.txt)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # placeholder strategies; only consumed by decorator args
+        floats = integers = lists = booleans = permutations = \
+            staticmethod(lambda *a, **k: None)
+
+from repro.core import (BusTopology, CopyModel, DeviceProfile, DeviceTask,
+                        HGemms, Link, LinearTimeModel, NO_COPY,
+                        OverlappedExecutor, PlanCache, build_timeline,
+                        engine_finish_times, ops_to_mnk, paper_mach1,
+                        paper_mach2, priority_order, simulate_timeline,
+                        solve_analytic, solve_bisection, with_pipeline)
+from repro.core.optimize import _finish_times
+
+
+def _mk(name, tflops, bw=None, align=1, b=1e-4, chunks=1):
+    ops_per_s = tflops * 1e12 / 2
+    copy = NO_COPY if bw is None else CopyModel(bw, dtype_size=4)
+    return DeviceProfile(name, "gpu" if bw else "cpu",
+                         LinearTimeModel(a=1 / ops_per_s, b=b), copy,
+                         align_m=align, pipeline_chunks=chunks)
+
+
+# -------------------------------------------------------------- topologies --
+
+def test_serialized_topology_single_link():
+    devs = paper_mach1()
+    topo = BusTopology.serialized(devs)
+    assert len(topo.links) == 1
+    assert topo.is_contended()
+    # the NO_COPY CPU is attached to no link at all
+    assert topo.link_of("xeon-e5", "copy_in") is None
+    assert topo.link_of("2080ti-cuda", "copy_in").name == "pcie"
+    assert topo.link_of("2080ti-cuda", "copy_out").name == "pcie"
+
+
+def test_independent_topology_private_links():
+    devs = paper_mach1()
+    topo = BusTopology.independent(devs)
+    assert not topo.is_contended()
+    gpu = topo.link_of("2080ti-cuda", "copy_in")
+    xpu = topo.link_of("2080ti-tensor", "copy_in")
+    assert gpu.name != xpu.name
+
+
+def test_custom_mixed_topology():
+    """CPU no-copy + two GPUs sharing PCIe + a TPU group on its own ICI."""
+    devs = [_mk("cpu", 1.0), _mk("gpu0", 10.0, bw=16e9),
+            _mk("gpu1", 12.0, bw=16e9), _mk("tpu", 40.0, bw=50e9)]
+    topo = BusTopology.custom(
+        ["pcie", Link("ici", bandwidth_bytes_per_s=45e9)],
+        {"cpu": None, "gpu0": "pcie", "gpu1": "pcie", "tpu": "ici"})
+    assert topo.is_contended()
+    assert topo.link_of("tpu", "copy_in").bandwidth_bytes_per_s == 45e9
+    tl = build_timeline(devs, [1e11] * 4, 4000, 4000, topology=topo)
+    # GPU copies serialize with each other, not with the TPU's ICI feed
+    pcie = tl.link_events("pcie")
+    ici = tl.link_events("ici")
+    assert {e.device for e in pcie} == {"gpu0", "gpu1"}
+    assert {e.device for e in ici} == {"tpu"}
+    for a, b in zip(pcie, pcie[1:]):
+        assert b.start >= a.end - 1e-12
+    # the ICI link's bandwidth cap slows the TPU below its own copy model
+    t_in = next(e for e in ici if e.kind == "copy_in")
+    assert t_in.duration > devs[3].copy.in_time(1e11, 4000, 4000) - 1e-15
+    # CPU computes from t=0 — attached to nothing
+    cpu = tl.device_events("cpu")
+    assert cpu[0].kind == "compute" and cpu[0].start == 0.0
+
+
+def test_from_spec_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown bus spec"):
+        BusTopology.from_spec("warp-drive", paper_mach1())
+
+
+def test_topology_rejects_unknown_link():
+    with pytest.raises(ValueError, match="unknown link"):
+        BusTopology.custom(["pcie"], {"gpu0": "nvlink"})
+
+
+# ------------------------------------------- solver/simulator agreement -----
+
+AGREEMENT_MATRIX = [
+    ("mach1", paper_mach1, "serialized"),
+    ("mach1", paper_mach1, "independent"),
+    ("mach2", paper_mach2, "serialized"),
+    ("mach2", paper_mach2, "independent"),
+]
+
+
+@pytest.mark.parametrize("name,mk,bus", AGREEMENT_MATRIX,
+                         ids=[f"{m}-{b}" for m, _, b in AGREEMENT_MATRIX])
+def test_solver_simulator_agreement(name, mk, bus):
+    """Acceptance: for every device set (incl. the NO_COPY CPU),
+    ``max(_finish_times(...)) == simulate_timeline(...).makespan`` to 1e-9
+    relative — the solver optimizes exactly what the simulator reports."""
+    devs = mk()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus=bus)
+    tl = simulate_timeline(devs, r.ops, 30000, 30000, topology=bus)
+    fin = _finish_times(devs, r.ops, 30000, 30000, bus)
+    assert max(fin) == pytest.approx(tl.makespan, rel=1e-9)
+    for d, f in zip(devs, fin):
+        assert f == pytest.approx(tl.device_finish(d.name), rel=1e-9, abs=0.0)
+
+
+def test_no_copy_device_not_charged_for_bus_time():
+    """Regression: the solver predicted the mach1 CPU finishing ~9.24 ms
+    (charged for GPU/XPU copies queued on a bus it never touches) where the
+    simulator said ~0.65 ms.  A no-copy device's finish is exactly its
+    compute time."""
+    devs = paper_mach1()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus="serialized")
+    fin = _finish_times(devs, r.ops, 30000, 30000, "serialized")
+    cpu = devs[0]
+    assert math.isinf(cpu.copy.bandwidth_bytes_per_s)
+    assert fin[0] == pytest.approx(cpu.compute(r.ops[0]), rel=1e-12)
+    tl = simulate_timeline(devs, r.ops, 30000, 30000)
+    assert tl.device_events(cpu.name)[0].start == 0.0
+
+
+def test_output_copies_never_overlap_input_copies():
+    """Regression: the solver reset the output-copy clock to 0, letting C
+    copies overlap A/B copies on the serialized bus (GPU finish 9.24 ms
+    solver vs 10.80 ms simulator).  On any one link, transfers in either
+    direction must never overlap."""
+    devs = paper_mach2()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus="serialized")
+    tl = simulate_timeline(devs, r.ops, 30000, 30000)
+    xfers = sorted((e for e in tl.events if e.kind != "compute"),
+                   key=lambda e: e.start)
+    for a, b in zip(xfers, xfers[1:]):
+        assert b.start >= a.end - 1e-12, (a, b)
+    # and the solver's finish equals the simulator's for every device
+    fin = _finish_times(devs, r.ops, 30000, 30000, "serialized")
+    for d, f in zip(devs, fin):
+        assert f == pytest.approx(tl.device_finish(d.name), rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tfs=st.lists(st.floats(0.2, 60), min_size=1, max_size=4),
+       copies=st.lists(st.booleans(), min_size=4, max_size=4),
+       shares=st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4),
+       seed=st.integers(0, 2 ** 31), chunked=st.booleans(),
+       serialized=st.booleans())
+def test_engine_equals_simulator_property(tfs, copies, shares, seed,
+                                          chunked, serialized):
+    """Property (the regression net for bugs 1-2): the unified engine's
+    finish times equal ``simulate_timeline``'s per-device finishes for
+    random device sets including NO_COPY devices, random op splits, random
+    priority orders, and random chunk counts."""
+    rng = np.random.default_rng(seed)
+    devs = [_mk(f"d{i}", tf, bw=None if not copies[i] else 12e9,
+                chunks=int(rng.integers(1, 5)) if chunked else 1)
+            for i, tf in enumerate(tfs)]
+    n = k = 2048
+    total = 16e9
+    s = sum(shares[:len(devs)]) or 1.0
+    ops = [x / s * total for x in shares[:len(devs)]]
+    order = list(rng.permutation(len(devs)))
+    bus = "serialized" if serialized else "independent"
+    fin = _finish_times(devs, ops, n, k, bus, order)
+    tl = simulate_timeline(devs, ops, n, k, topology=bus, order=order)
+    for d, f in zip(devs, fin):
+        assert f == pytest.approx(tl.device_finish(d.name), rel=1e-9,
+                                  abs=1e-15)
+    assert max(fin, default=0.0) == pytest.approx(tl.makespan, rel=1e-9,
+                                                  abs=1e-15)
+
+
+# ------------------------------------------------- chunked pipelining -------
+
+def test_chunks_of_one_match_legacy_timeline():
+    devs = paper_mach2()
+    r = solve_bisection(devs, 27e12, n=30000, k=30000, bus="serialized")
+    a = simulate_timeline(devs, r.ops, 30000, 30000)
+    b = simulate_timeline(devs, r.ops, 30000, 30000,
+                          chunks=[1] * len(devs))
+    assert [(e.device, e.kind, e.start, e.end) for e in a.events] == \
+        [(e.device, e.kind, e.start, e.end) for e in b.events]
+
+
+def test_chunked_events_well_formed():
+    devs = with_pipeline(paper_mach1(), 4)
+    ops = [0.0, 3e10, 4e10]
+    tl = simulate_timeline(devs, ops, 4096, 4096)
+    for name in ("2080ti-cuda", "2080ti-tensor"):
+        evs = tl.device_events(name)
+        ins = sorted((e for e in evs if e.kind == "copy_in"),
+                     key=lambda e: e.chunk)
+        comps = sorted((e for e in evs if e.kind == "compute"),
+                       key=lambda e: e.chunk)
+        outs = sorted((e for e in evs if e.kind == "copy_out"),
+                      key=lambda e: e.chunk)
+        assert len(ins) == len(comps) == len(outs) == 4
+        for j in range(4):
+            # chunk j computes only after its slice landed, copies out only
+            # after its compute — the pipelined overlap invariant
+            assert comps[j].start >= ins[j].end - 1e-12
+            assert outs[j].start >= comps[j].end - 1e-12
+        # the first input chunk carries the shared B panel: it is longest
+        assert ins[0].duration > ins[1].duration
+    # per-link serialization still holds with chunked transfers
+    xfers = sorted((e for e in tl.events if e.kind != "compute"),
+                   key=lambda e: e.start)
+    for a, b in zip(xfers, xfers[1:]):
+        assert b.start >= a.end - 1e-12
+
+
+def test_pipelining_reduces_makespan_mach1():
+    """Acceptance: chunked pipelined copies shorten the simulated
+    paper_mach1 4096^3 GEMM critical path vs the unpipelined plan."""
+    m = n = k = 4096
+    N = float(m) * n * k
+    base = solve_bisection(paper_mach1(), N, n=n, k=k, bus="serialized")
+    t0 = simulate_timeline(paper_mach1(), base.ops, n, k).makespan
+    piped = with_pipeline(paper_mach1(), 4)
+    r = solve_bisection(piped, N, n=n, k=k, bus="serialized")
+    t1 = simulate_timeline(piped, r.ops, n, k).makespan
+    assert t1 < t0 * 0.95
+    # and the solver priced the pipelined timeline exactly
+    assert r.makespan == pytest.approx(t1, rel=1e-9)
+
+
+def test_chunked_copies_pay_latency_per_transfer():
+    """Each chunk is a separate DMA: chunks past the first pay the copy
+    launch latency again, so latency-bearing profiles can't chunk for
+    free."""
+    lat = 2e-4
+    dev = DeviceProfile(
+        "gpu", "gpu", LinearTimeModel(a=1e-13, b=0.0),
+        CopyModel(16e9, dtype_size=4, latency_s=lat))
+    c, n, k = 1e10, 2048, 2048
+    t1 = build_timeline([dev], [c], n, k, chunks=[1])
+    t4 = build_timeline([dev], [c], n, k, chunks=[4])
+    in1 = sum(e.duration for e in t1.events if e.kind == "copy_in")
+    in4 = sum(e.duration for e in t4.events if e.kind == "copy_in")
+    assert in4 == pytest.approx(in1 + 3 * lat, rel=1e-9)
+
+
+def test_solver_prices_chunk_overhead():
+    """Over-chunking is not free: each chunk pays the compute model's
+    launch intercept, so the engine's makespan is monotone-increasing in C
+    for a no-copy device (nothing to overlap, pure overhead)."""
+    dev = [_mk("cpu", 1.0, b=1e-3)]
+    ops = [1e9]
+    t1 = engine_finish_times(dev, ops, 1000, 1000, chunks=[1])[0]
+    t8 = engine_finish_times(dev, ops, 1000, 1000, chunks=[8])[0]
+    assert t8 > t1
+    assert t8 == pytest.approx(t1 + 7 * 1e-3, rel=1e-6)
+
+
+def test_schedule_prices_adapted_chunk_counts():
+    """The scheduled timeline charges the chunk count adapt actually
+    produced, not the nominal pipeline_chunks — a device grain-capped to 2
+    chunks must not pay 8 launch intercepts."""
+    devs = [_mk("cpu", 0.01),
+            _mk("gpu", 10.0, bw=16e9, align=8, chunks=8)]
+    hg = HGemms(devs)
+    # small m: the GPU slice can only split into a few align-8 chunks
+    plan = hg.plan(48, 512, 512)
+    gpu_asg = plan.adapted.assignments[1]
+    assert gpu_asg.m > 0
+    n_chunks = max(1, len(gpu_asg.chunk_rows))
+    assert n_chunks < 8
+    tl = plan.schedule.timeline
+    comps = [e for e in tl.device_events("gpu") if e.kind == "compute"]
+    assert len(comps) == n_chunks
+
+
+def test_pipelined_execution_real_numerics_and_overlap():
+    """HGemms really streams the chunks: the co-executed GEMM is exact and
+    the measured timeline shows compute chunk 0 finishing before the last
+    input chunk was copied (the overlap the plan priced)."""
+    devs = with_pipeline(paper_mach1(), 4)
+    hg = HGemms(devs)
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((512, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 256)).astype(np.float32)
+    c, rep = hg.execute(a, b)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    meas = rep.measured
+    for name in {e.device for e in meas.events}:
+        evs = meas.device_events(name)
+        ins = sorted((e for e in evs if e.kind == "copy_in"),
+                     key=lambda e: e.chunk)
+        comps = sorted((e for e in evs if e.kind == "compute"),
+                       key=lambda e: e.chunk)
+        outs = sorted((e for e in evs if e.kind == "copy_out"),
+                      key=lambda e: e.chunk)
+        if len(ins) > 1:
+            # chunked device: every compute chunk starts after its own
+            # input chunk landed, and outputs follow their computes
+            assert len(ins) == len(comps)
+            for i_ev, c_ev in zip(ins, comps):
+                assert c_ev.start >= i_ev.end - 1e-9
+            for c_ev, o_ev in zip(comps, outs):
+                assert o_ev.start >= c_ev.end - 1e-9
+
+
+def test_adapt_maps_chunks_to_row_chunks():
+    devs = with_pipeline(paper_mach1(), 4)
+    m, n, k = 30000, 4096, 4096
+    r = solve_bisection(devs, float(m) * n * k, n=n, k=k, bus="serialized")
+    plan = ops_to_mnk(devs, r.ops, m, n, k)
+    for d, a in zip(devs, plan.assignments):
+        assert sum(a.chunk_rows) == a.m
+        if a.m == 0:
+            assert a.chunk_rows == ()
+            continue
+        assert len(a.chunk_rows) <= max(1, d.pipeline_chunks)
+        # all but the last chunk land on the device's alignment grain
+        for r_j in a.chunk_rows[:-1]:
+            assert r_j % max(d.align_m, 1) == 0
+        offs = a.chunk_offsets()
+        assert offs[0] == a.row0
+        assert offs[-1] + a.chunk_rows[-1] == a.row0 + a.m
+
+
+# --------------------------------------------------- executor ticket order --
+
+def test_executor_matches_engine_per_link_ticket_order():
+    """Acceptance: the overlapped executor's measured bus-event order
+    matches the engine's per-link ticket order, including on a multi-link
+    topology where two links grant concurrently."""
+    devs = [_mk("cpu", 1.0), _mk("gpu0", 10.0, bw=16e9),
+            _mk("gpu1", 12.0, bw=16e9), _mk("tpu", 40.0, bw=50e9)]
+    topo = BusTopology.custom(
+        ["pcie", "ici"],
+        {"cpu": None, "gpu0": "pcie", "gpu1": "pcie", "tpu": "ici"})
+    planned = build_timeline(devs, [5e9, 2e10, 2e10, 5e10], 2048, 2048,
+                             topology=topo)
+    tickets = planned.link_ticket_order()
+    assert set(tickets) == {"pcie", "ici"}
+
+    def nop():
+        pass
+
+    tasks = []
+    kinds = {(e.device, e.kind) for e in planned.events}
+    for d in devs:
+        tasks.append(DeviceTask(
+            device=d.name,
+            copy_in=nop if (d.name, "copy_in") in kinds else None,
+            compute=nop,
+            copy_out=nop if (d.name, "copy_out") in kinds else None))
+    measured = OverlappedExecutor(devs, planned).run(tasks)
+    for link, seq in tickets.items():
+        got = [(e.device, e.kind) for e in
+               sorted((e for e in measured.events if e.link == link),
+                      key=lambda e: e.start)]
+        assert got == seq
+        # per-link serialization of the measured run
+        evs = measured.link_events(link)
+        for a, b in zip(evs, evs[1:]):
+            assert b.start >= a.end - 1e-9
+
+
+def test_executor_streams_chunks_with_real_overlap():
+    """The pipelined task path realizes the overlap the engine prices:
+    compute chunk 0 runs while input chunk 1 streams, and output chunk 0
+    copies out while later compute chunks are still running."""
+    import time as _time
+    dev = [_mk("gpu", 10.0, bw=16e9, chunks=3)]
+    planned = build_timeline(dev, [1e10], 2048, 2048)
+
+    def sleeper(dt):
+        def fn():
+            _time.sleep(dt)
+        return fn
+
+    task = DeviceTask(
+        device="gpu", copy_in=None, compute=None, copy_out=None,
+        copy_in_chunks=[sleeper(0.05)] * 3,
+        compute_chunks=[sleeper(0.08)] * 3,
+        copy_out_chunks=[sleeper(0.01)] * 3)
+    measured = OverlappedExecutor(dev, planned).run(task and [task])
+    ins = sorted(measured.device_events("gpu"), key=lambda e: e.chunk)
+    ins = [e for e in ins if e.kind == "copy_in"]
+    comps = sorted((e for e in measured.device_events("gpu")
+                    if e.kind == "compute"), key=lambda e: e.chunk)
+    outs = sorted((e for e in measured.device_events("gpu")
+                   if e.kind == "copy_out"), key=lambda e: e.chunk)
+    assert len(ins) == len(comps) == len(outs) == 3
+    # compute chunk 0 started before the last input chunk finished
+    assert comps[0].start < ins[2].end
+    # output chunk 0 finished before the last compute chunk finished
+    assert outs[0].end < comps[2].end
+    # and each chunk still respects its own dependencies
+    for j in range(3):
+        assert comps[j].start >= ins[j].end - 1e-9
+        assert outs[j].start >= comps[j].end - 1e-9
+
+
+def test_executor_bus_sequence_collapses_chunks():
+    devs = with_pipeline(paper_mach2(), 3)
+    r = solve_bisection(devs, 1e12, n=4000, k=4000, bus="serialized")
+    planned = simulate_timeline(devs, r.ops, 4000, 4000)
+    seq = OverlappedExecutor.bus_sequence(planned)
+    assert len(seq) == len(set(seq))  # one ticket per (device, kind)
+    # single-bus topology: the flat order IS the per-link order
+    assert planned.link_ticket_order() == {"pcie": seq}
+
+
+# --------------------------------------------------------- plan cache lock --
+
+def test_plan_cache_concurrent_hammering():
+    """Regression: PlanCache mutated an OrderedDict with no lock; hammer
+    get/put/invalidate from many threads and check it stays coherent."""
+    cache = PlanCache(maxsize=32)
+    stop = threading.Event()
+    errors = []
+
+    def worker(tid):
+        try:
+            i = 0
+            while not stop.is_set():
+                key = (tid, i % 64)
+                cache.put(key, i)
+                got = cache.get(key)
+                assert got is None or isinstance(got, int)
+                cache.get((tid ^ 1, i % 64))
+                if i % 97 == 0:
+                    cache.invalidate()
+                len(cache), cache.stats()
+                i += 1
+        except BaseException as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors, errors
+    s = cache.stats()
+    assert s["size"] <= 32
+    assert s["hits"] + s["misses"] > 0
+
+
+def test_hgemms_concurrent_plan_and_refit():
+    """Concurrent plan() (cache get/put) against observe() (invalidate)
+    must not corrupt the cache or serve a stale plan type."""
+    hg = HGemms(paper_mach1(), dynamic=True)
+    errors = []
+    stop = threading.Event()
+
+    def planner():
+        try:
+            while not stop.is_set():
+                p = hg.plan(2048, 1024, 512)
+                assert p.adapted.total_rows() == 2048
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    def refitter():
+        try:
+            i = 0
+            while not stop.is_set():
+                hg.dyn.observe(1, 1e9 * (1 + i % 3),
+                               hg.devices[1].compute(1e9) * (1 + 0.1 * (i % 5)))
+                i += 1
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=planner) for _ in range(3)] + \
+        [threading.Thread(target=refitter)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(0.7)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors, errors
+
+
+# ------------------------------------------------- solve_analytic guard -----
+
+def test_solve_analytic_zero_slope_no_crash():
+    """Regression: LinearTimeModel(a=0, b=...) raised ZeroDivisionError."""
+    devs = [DeviceProfile("const", "cpu", LinearTimeModel(a=0.0, b=5e-3),
+                          NO_COPY),
+            DeviceProfile("lin", "gpu", LinearTimeModel(a=1e-12, b=1e-4),
+                          NO_COPY)]
+    r = solve_analytic(devs, 1e9, n=100, k=100)
+    assert sum(r.ops) == pytest.approx(1e9, rel=1e-9)
+    assert math.isfinite(r.makespan)
+
+
+def test_solve_analytic_zero_slope_device_wins_when_cheaper():
+    # constant 1 ms beats the linear device needing 10 ms: hand it all over
+    devs = [DeviceProfile("const", "cpu", LinearTimeModel(a=0.0, b=1e-3),
+                          NO_COPY),
+            DeviceProfile("lin", "gpu", LinearTimeModel(a=1e-11, b=0.0),
+                          NO_COPY)]
+    r = solve_analytic(devs, 1e9, n=100, k=100)
+    assert r.ops[0] == pytest.approx(1e9)
+    assert r.makespan == pytest.approx(1e-3)
+
+
+def test_solve_analytic_all_zero_slope():
+    devs = [DeviceProfile("c1", "cpu", LinearTimeModel(a=0.0, b=2e-3),
+                          NO_COPY),
+            DeviceProfile("c2", "cpu", LinearTimeModel(a=0.0, b=1e-3),
+                          NO_COPY)]
+    r = solve_analytic(devs, 1e9, n=100, k=100)
+    assert r.ops[1] == pytest.approx(1e9)  # cheaper constant device
+    assert r.makespan == pytest.approx(1e-3)
