@@ -10,6 +10,8 @@ Sections:
   §Runtime  — plan-cache hit/invalidation  (plan_cache)
   §Timeline — solver/simulator agreement + pipelined-copy speedup
               (timeline; writes BENCH_timeline.json — uploaded in CI)
+  §Stream   — feedback loop vs static plan, plan-carry-over overlap
+              (streaming; writes BENCH_streaming.json — uploaded in CI)
 """
 from __future__ import annotations
 
@@ -18,9 +20,9 @@ import traceback
 
 def main() -> None:
     from . import (exec_time, plan_cache, prediction_accuracy, roofline,
-                   speedup, timeline, work_distribution)
+                   speedup, streaming, timeline, work_distribution)
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline, plan_cache, timeline):
+                roofline, plan_cache, timeline, streaming):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

@@ -48,8 +48,9 @@ def main():
                        for i, r in enumerate(static_split.sizes))
         dyn_times.append(t_dyn)
         static_times.append(t_static)
-        for i, (r, t) in enumerate(zip(split.sizes, times)):
-            sched.observe(i, r, t)
+        # measured step times flow back through the shared observation pump
+        # (the same path the streaming runtime uses, DESIGN.md §9)
+        sched.feed_step(split, {p.name: t for p, t in zip(pods, times)})
         tag = " <- pod1 throttles to 40%" if step == THROTTLE_AT else ""
         print(f"{step:>4} {split.sizes[0]:>4}/{split.sizes[1]:<4} "
               f"{t_dyn*1e3:8.1f}ms {t_static*1e3:8.1f}ms "

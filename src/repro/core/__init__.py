@@ -11,7 +11,8 @@ Public API:
     OverlappedExecutor, DeviceTask
     POAS, GemmWorkload, GemmDomain, make_gemm_poas, HGemms
 """
-from .bus import (BusEvent, BusTopology, Link, Timeline, build_timeline,
+from .bus import (BusEvent, BusTopology, ClockState, Link, Timeline,
+                  TimelineSpec, build_timeline, carry_clocks,
                   engine_finish_times)
 from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            RooflineTimeModel, paper_mach1, paper_mach2,
@@ -29,10 +30,14 @@ from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
 from .domain import (Domain, FunctionDomain, PlanCache, Workload,
                      device_signature, get_domain, list_domains,
                      register_domain)
-from .executor import DeviceTask, OverlappedExecutor, TicketBus
+from .executor import (DeviceTask, JobHandle, OverlappedExecutor, StreamCore,
+                       TicketBus)
 from .framework import (GemmDomain, GemmWorkload, POAS, POASPlan,
                         make_gemm_poas)
 from .hgemms import ExecutionReport, HGemms
+from .runtime import (CoExecutionRuntime, ObservationPump, StreamJob,
+                      model_sleep_tasks, throttled, truth_from_profiles,
+                      verify_stream_invariants)
 
 __all__ = [
     "BusEvent", "BusTopology", "Link", "build_timeline",
@@ -51,7 +56,12 @@ __all__ = [
     "Timeline", "simulate_timeline",
     "Domain", "FunctionDomain", "PlanCache", "Workload", "device_signature",
     "get_domain", "list_domains", "register_domain",
-    "DeviceTask", "OverlappedExecutor", "TicketBus",
+    "DeviceTask", "JobHandle", "OverlappedExecutor", "StreamCore",
+    "TicketBus",
     "GemmDomain", "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
     "ExecutionReport", "HGemms",
+    "ClockState", "TimelineSpec", "carry_clocks",
+    "CoExecutionRuntime", "ObservationPump", "StreamJob",
+    "model_sleep_tasks", "throttled", "truth_from_profiles",
+    "verify_stream_invariants",
 ]

@@ -33,6 +33,12 @@ Two generalizations over the paper:
 ``build_timeline`` emits the event graph; ``engine_finish_times`` runs the
 same control flow without materializing events (the optimizer's feasibility
 check calls it thousands of times per solve).
+
+A third generalization backs the streaming runtime (DESIGN.md §9): a
+timeline may start from **carried-over clocks** (``ClockState``) instead of
+t = 0, so plan k+1's input copies queue behind plan k's tail on each link
+while its devices wait only for their *own* previous work — back-to-back
+plans overlap exactly the way a single plan's devices do.
 """
 from __future__ import annotations
 
@@ -123,6 +129,58 @@ class Timeline:
     def ticket_order(self) -> list[tuple[str, str]]:
         """Flat grant order across all links (per-link truth above)."""
         return [ticket for _, ticket in self._copy_tickets()]
+
+
+# ---------------------------------------------------------------------------
+# Carried-over clocks (streaming runtime, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockState:
+    """Where each link and device clock stands when a timeline starts.
+
+    ``links`` / ``devices`` map names to absolute times; anything absent
+    falls back to ``floor``.  ``ClockState()`` is the classic t = 0 start;
+    ``ClockState(floor=t)`` is a full barrier at ``t`` (what a runtime with
+    plan-carry-over disabled uses between plans); ``carry_clocks(timeline)``
+    is the overlapping hand-off — each link and device resumes exactly where
+    the previous plan left it.
+    """
+
+    links: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    devices: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    floor: float = 0.0
+
+    def link(self, name: str) -> float:
+        return max(self.links.get(name, self.floor), self.floor)
+
+    def device(self, name: str) -> float:
+        return max(self.devices.get(name, self.floor), self.floor)
+
+
+ZERO_CLOCKS = ClockState()
+
+
+def carry_clocks(timeline: Timeline,
+                 base: ClockState = ZERO_CLOCKS) -> ClockState:
+    """The ``ClockState`` a follow-on plan should start from: each link's
+    clock is its last transfer's end, each device's clock its last event's
+    end (so the next plan's copies overlap this plan's tail but a device
+    never runs two plans' stages at once).
+
+    ``base`` is the state this timeline itself started from; clocks are
+    max-merged into it, because a plan that never touched a link (or left a
+    device idle) must not rewind that clock — e.g. an all-CPU job between
+    two GPU jobs would otherwise reset the PCIe clock to zero and let the
+    next plan's copies time-travel under the earlier plan's transfers."""
+    links = dict(base.links)
+    devices = dict(base.devices)
+    for e in timeline.events:
+        if e.link is not None:
+            links[e.link] = max(links.get(e.link, base.floor), e.end)
+        devices[e.device] = max(devices.get(e.device, base.floor), e.end)
+    return ClockState(links=links, devices=devices, floor=base.floor)
 
 
 # ---------------------------------------------------------------------------
@@ -301,8 +359,8 @@ def _resolve_chunks(devices: Sequence[DeviceProfile],
 
 def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
               n: int, k: int, topo: BusTopology, order: Sequence[int],
-              chunks: Sequence[int], events: list[BusEvent] | None
-              ) -> list[float]:
+              chunks: Sequence[int], events: list[BusEvent] | None,
+              clocks: ClockState = ZERO_CLOCKS) -> list[float]:
     """One pass over the event graph.  Returns per-device finish times;
     appends ``BusEvent``s when ``events`` is a list (None = fast path).
 
@@ -315,6 +373,13 @@ def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
         input copies on that link (the link clock carries over — the solver
         historically reset it to 0, letting outputs overlap inputs — bug);
       * output chunk j additionally waits for compute chunk j.
+
+    ``clocks`` shifts the start of the world: each link's first transfer
+    begins at its carried clock and each device's first stage begins no
+    earlier than its carried clock (a device runs one plan's stages at a
+    time — the streaming runtime's per-device workers are sequential), so a
+    plan chained after another overlaps its predecessor's tail exactly as
+    the Fig. 2 schedule overlaps devices within one plan.
     """
     finish = [0.0] * len(devices)
     free: dict[str, float] = {}           # per-link clock
@@ -326,13 +391,14 @@ def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
         if c <= 0.0:
             continue
         C = chunks[i]
+        dev0 = clocks.device(d.name)
         link = topo.link_of(d.name, "in")
         t_total = _in_time(d, link, c, n, k)
         t_cc = d.compute(c / C)
         ends: list[float] = []
         if t_total <= 0.0:
             # no-copy device: compute immediately, chunks back to back
-            prev = 0.0
+            prev = dev0
             for j in range(C):
                 if events is not None:
                     events.append(BusEvent(d.name, "compute", prev,
@@ -346,7 +412,7 @@ def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
             # each chunk is a separate transfer: chunks past the first pay
             # the copy launch latency again (chunk 0's is in t_shared)
             lat = d.copy.latency_s
-            start = free.get(lname, 0.0)
+            start = max(free.get(lname, clocks.link(lname)), dev0)
             in_ends: list[float] = []
             for j in range(C):
                 dur = t_chunk + (t_shared if j == 0 else lat)
@@ -356,7 +422,7 @@ def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
                 start += dur
                 in_ends.append(start)
             free[lname] = start
-            prev = 0.0
+            prev = dev0
             for j in range(C):
                 s = max(in_ends[j], prev)
                 if events is not None:
@@ -380,7 +446,7 @@ def _simulate(devices: Sequence[DeviceProfile], ops: Sequence[float],
         lname = link.name if link is not None else f"~{d.name}"
         t_chunk = t_out / C
         ends = chunk_ends[i]
-        t = free.get(lname, 0.0)
+        t = free.get(lname, clocks.link(lname))
         for j in range(C):
             s = max(t, ends[j])
             if events is not None:
@@ -396,16 +462,19 @@ def build_timeline(devices: Sequence[DeviceProfile], ops: Sequence[float],
                    n: int, k: int, *,
                    topology: BusTopology | str | None = None,
                    order: Sequence[int] | None = None,
-                   chunks: Sequence[int] | None = None) -> Timeline:
+                   chunks: Sequence[int] | None = None,
+                   clocks: ClockState = ZERO_CLOCKS) -> Timeline:
     """The unified event-graph timeline (what ``simulate_timeline`` returns,
     what the solver's finish times are read from, and what the overlapped
-    executor's per-link ticket order is derived from)."""
+    executor's per-link ticket order is derived from).  ``clocks`` starts
+    the timeline from carried-over link/device clocks instead of t = 0
+    (streaming runtime)."""
     topo = BusTopology.from_spec(topology, devices)
     if order is None:
         order = priority_order(devices)
     events: list[BusEvent] = []
     _simulate(devices, ops, n, k, topo, order, _resolve_chunks(devices, chunks),
-              events)
+              events, clocks)
     return Timeline(events)
 
 
@@ -413,11 +482,53 @@ def engine_finish_times(devices: Sequence[DeviceProfile],
                         ops: Sequence[float], n: int, k: int, *,
                         topology: BusTopology | str | None = None,
                         order: Sequence[int] | None = None,
-                        chunks: Sequence[int] | None = None) -> list[float]:
+                        chunks: Sequence[int] | None = None,
+                        clocks: ClockState = ZERO_CLOCKS) -> list[float]:
     """Per-device finish times from the same control flow as
     ``build_timeline``, without materializing events (solver hot path)."""
     topo = BusTopology.from_spec(topology, devices)
     if order is None:
         order = priority_order(devices)
     return _simulate(devices, ops, n, k, topo, order,
-                     _resolve_chunks(devices, chunks), None)
+                     _resolve_chunks(devices, chunks), None, clocks)
+
+
+# ---------------------------------------------------------------------------
+# TimelineSpec — everything needed to re-price a planned timeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineSpec:
+    """The engine inputs a ``Schedule``'s timeline was built from.
+
+    Domains attach this to their ``Schedule`` so a runtime can *rebase* the
+    plan — rebuild the identical event graph from carried-over clocks, or
+    under different (e.g. ground-truth) device models — without knowing any
+    domain geometry.  ``order`` is the planned priority order; replaying a
+    plan under substituted models must keep it (the executor's ticket buses
+    grant in planned order, not in the substituted models' speed order).
+    """
+
+    devices: tuple[DeviceProfile, ...]
+    ops: tuple[float, ...]
+    n: int
+    k: int
+    topology: BusTopology
+    chunks: tuple[int, ...] | None = None
+    order: tuple[int, ...] | None = None
+
+    def rebase(self, clocks: ClockState = ZERO_CLOCKS, *,
+               devices: Sequence[DeviceProfile] | None = None) -> Timeline:
+        """Rebuild the timeline from ``clocks``; ``devices`` substitutes
+        ground-truth profiles (same names/positions) for the planned ones."""
+        devs = list(devices) if devices is not None else list(self.devices)
+        order = list(self.order) if self.order is not None \
+            else priority_order(list(self.devices))
+        return build_timeline(devs, list(self.ops), self.n, self.k,
+                              topology=self.topology, order=order,
+                              chunks=list(self.chunks) if self.chunks else None,
+                              clocks=clocks)
+
+    def ops_by_device(self) -> dict[str, float]:
+        return {d.name: float(c) for d, c in zip(self.devices, self.ops)}

@@ -46,6 +46,16 @@ class Domain(Protocol):
     ``cost_signature`` is a hashable key of everything about the *workload*
                  that the solved plan depends on (device models are keyed
                  separately by the cache).
+
+    Streaming conventions (DESIGN.md §9) — all shipped domains follow them:
+
+    * a dynamic domain exposes its ``DynamicScheduler`` as ``self.dyn``
+      (``None`` or absent = static).  ``POAS`` hooks the ``PlanCache``
+      invalidation to its re-fits, and ``CoExecutionRuntime`` pumps
+      measured timelines into it;
+    * ``schedule`` fills ``Schedule.spec`` (a ``TimelineSpec``) so the
+      runtime can rebase the plan onto carried-over clocks — or re-price
+      it under ground-truth models — without knowing domain geometry.
     """
 
     name: str

@@ -1,27 +1,35 @@
-"""Overlapped co-execution runtime — replays a planned ``Timeline`` for real.
+"""Overlapped co-execution — the threaded half of the streaming runtime.
 
 The unified bus engine (``core.bus``, Fig. 2) *models* the schedule: copies
 serialized per link in priority order, each device computing as soon as its
 inputs land (overlapping other devices' copies).  This module *executes*
-it: one thread per device runs its copy_in → compute → copy_out stages,
-with one ticketed lock per topology link granting access in exactly the
-engine's per-link ticket order (``Timeline.link_ticket_order``).  Compute
-never takes a link, so device A's compute overlaps device B's copies — the
-overlap the paper's co-execution speedup comes from; copies on *different*
-links (a GPU's PCIe feed vs a TPU group's ICI feed) proceed concurrently
+it, and since PR 3 it does so as a **stream**: ``StreamCore`` owns one
+long-lived worker thread per device and one ticketed lock per topology
+link, both of which survive across plans — each dispatched plan appends its
+per-link grant sequence to the live buses, so plan k+1's input copies are
+granted as soon as plan k's transfers drain a link, while plan k's tail is
+still computing (DESIGN.md §9).  Compute never takes a link, so device A's
+compute overlaps device B's copies — the overlap the paper's co-execution
+speedup comes from; copies on *different* links proceed concurrently
 (DESIGN.md §4).
 
-The executor records measured wall-clock intervals per stage as a
-``Timeline`` of ``BusEvent``s, so the same invariant checks (per-link
-serialization, priority order, compute-after-copy) apply to a real run and
-to the simulation.
+``OverlappedExecutor`` is the one-shot facade kept for single-plan callers
+(``HGemms.execute`` and the PR 1/2 test surface): it spins up a private
+``StreamCore``, dispatches the one plan, waits, and shuts the core down.
+
+Measured wall-clock intervals are recorded per stage as ``Timeline``s of
+``BusEvent``s — per job *and* for the whole stream — so the same invariant
+checks (per-link serialization, priority order, compute-after-copy) apply
+to a real run, to a whole job stream across plan boundaries, and to the
+simulation.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
 import threading
 import time
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 from .bus import BusEvent, Timeline
 from .device_model import DeviceProfile
@@ -62,17 +70,26 @@ class DeviceTask:
 class TicketBus:
     """Shared bus granting exclusive access in a fixed ticket order.
 
-    Tickets are ``(device, kind)`` pairs; the grant sequence is derived from
-    the planned timeline, so the measured run serializes transfers in the
-    same priority order the optimizer assumed.
+    Tickets are hashable tuples — ``(device, kind)`` for one-shot plans,
+    ``(job, device, kind)`` in the streaming runtime; the grant sequence is
+    derived from the planned timeline, so the measured run serializes
+    transfers in the same priority order the optimizer assumed.  ``extend``
+    appends a later plan's tickets while earlier ones are still draining —
+    this is what lets the bus survive across plans.
     """
 
-    def __init__(self, sequence: Sequence[tuple[str, str]]):
+    def __init__(self, sequence: Sequence[tuple] = ()):
         self._seq = list(sequence)
         self._pos = 0
         self._cv = threading.Condition()
 
-    def acquire(self, ticket: tuple[str, str]) -> None:
+    def extend(self, sequence: Sequence[tuple]) -> None:
+        """Append a later plan's grant sequence (streaming runtime)."""
+        with self._cv:
+            self._seq.extend(sequence)
+            self._cv.notify_all()
+
+    def acquire(self, ticket: tuple) -> None:
         with self._cv:
             if ticket not in self._seq:
                 raise ValueError(f"ticket {ticket} not in bus schedule")
@@ -80,32 +97,379 @@ class TicketBus:
                 lambda: self._pos < len(self._seq)
                 and self._seq[self._pos] == ticket)
 
-    def release(self, ticket: tuple[str, str]) -> None:
+    def release(self, ticket: tuple) -> None:
         with self._cv:
             assert self._seq[self._pos] == ticket, (self._seq, self._pos,
                                                     ticket)
             self._pos += 1
+            # prune the granted prefix: a persistent bus on a sustained
+            # stream must not retain every historical ticket (and acquire's
+            # membership scan must stay O(pending), not O(all history))
+            del self._seq[:self._pos]
+            self._pos = 0
+            self._cv.notify_all()
+
+    def cancel(self, pred: Callable[[tuple], bool]) -> None:
+        """Drop pending tickets matching ``pred`` so the bus never stalls
+        behind stages that will no longer run (crashed device, failed job)."""
+        with self._cv:
+            self._seq[self._pos:] = [t for t in self._seq[self._pos:]
+                                     if not pred(t)]
             self._cv.notify_all()
 
     def cancel_device(self, device: str) -> None:
-        """Drop a crashed device's pending tickets so the bus never stalls."""
-        with self._cv:
-            self._seq[self._pos:] = [t for t in self._seq[self._pos:]
-                                     if t[0] != device]
-            self._cv.notify_all()
+        """Drop a crashed device's pending tickets (any job)."""
+        self.cancel(lambda t: t[-2] == device)
 
-    def retain(self, tickets: set[tuple[str, str]]) -> None:
+    def retain(self, tickets: set[tuple]) -> None:
         """Keep only the given pending tickets (callers may legitimately run
         a subset of the planned devices; unclaimed tickets must not wedge
         the grant sequence)."""
-        with self._cv:
-            self._seq[self._pos:] = [t for t in self._seq[self._pos:]
-                                     if t in tickets]
-            self._cv.notify_all()
+        self.cancel(lambda t: t not in tickets)
+
+
+# ---------------------------------------------------------------------------
+# The persistent streaming core
+# ---------------------------------------------------------------------------
+
+
+class JobHandle:
+    """Completion handle for one dispatched plan: its measured events, its
+    error (if any), and a done event / callback hook."""
+
+    def __init__(self, job: str, devices: int):
+        self.job = job
+        self.events: list[BusEvent] = []
+        self.errors: list[BaseException] = []
+        self._remaining = devices
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+        self._callbacks: list[Callable[["JobHandle"], None]] = []
+        if devices == 0:   # a plan may assign every op to devices the task
+            self._done.set()   # list doesn't cover; nothing will ever run
+
+    def _device_done(self) -> None:
+        with self._lock:
+            self._remaining -= 1
+            if self._remaining > 0:
+                return
+            callbacks = list(self._callbacks)
+        # callbacks run BEFORE the done event (wait() must observe their
+        # errors) and never propagate: _device_done runs on a persistent
+        # device worker thread, and a raising callback would kill it —
+        # hanging every later job queued on that device
+        for fn in callbacks:
+            self._run_callback(fn)
+        self._done.set()
+
+    def _run_callback(self, fn: Callable[["JobHandle"], None]) -> None:
+        try:
+            fn(self)
+        except BaseException as exc:
+            with self._lock:
+                self.errors.append(exc)
+
+    def add_done_callback(self, fn: Callable[["JobHandle"], None]) -> None:
+        with self._lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: float | None = None) -> Timeline:
+        """Block until every device finished its stages; raise the first
+        stage error; return the job's measured timeline."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"job {self.job!r} still running")
+        if self.errors:
+            raise self.errors[0]
+        return self.timeline()
+
+    def timeline(self) -> Timeline:
+        with self._lock:
+            events = list(self.events)
+        return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
+
+
+class _DeviceWorker(threading.Thread):
+    """One long-lived worker per device: runs dispatched stage groups
+    strictly in dispatch order (a device executes one plan at a time)."""
+
+    def __init__(self, device: str):
+        super().__init__(name=f"poas-dev-{device}", daemon=True)
+        self.device = device
+        self.q: queue.SimpleQueue = queue.SimpleQueue()
+        self.start()
+
+    def run(self) -> None:
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            item()  # closures handle their own errors
+
+
+class StreamCore:
+    """Long-lived per-device worker threads + per-link ticket buses that
+    survive across plans — the persistent half of ``CoExecutionRuntime``.
+
+    ``dispatch`` is non-blocking: it appends the plan's tickets to the live
+    buses and enqueues each device's stage group on that device's worker, so
+    back-to-back plans overlap (plan k+1's copies start the moment plan k
+    drains each link, per-device order preserved by the worker queues).  All
+    measured events share one time origin (core creation), so the stream
+    timeline is one coherent axis across plan boundaries.
+    """
+
+    def __init__(self) -> None:
+        self._workers: dict[str, _DeviceWorker] = {}
+        self._buses: dict[str, TicketBus] = {}
+        self._lock = threading.Lock()
+        # the stream record: every job's measured events on one time axis.
+        # This is the observable product (stream_timeline / cross-plan
+        # invariant checks) and grows with the stream; long-lived callers
+        # that don't need the full history can snapshot and reset it.
+        self._events: list[BusEvent] = []
+        self._jobs = 0
+        self._closed = False
+        self._t0 = time.perf_counter()
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _worker(self, device: str) -> _DeviceWorker:
+        with self._lock:
+            w = self._workers.get(device)
+            if w is None:
+                w = self._workers[device] = _DeviceWorker(device)
+            return w
+
+    def _bus(self, link: str) -> TicketBus:
+        with self._lock:
+            b = self._buses.get(link)
+            if b is None:
+                b = self._buses[link] = TicketBus()
+            return b
+
+    def _record(self, handle: JobHandle, device: str, kind: str, link: str | None,
+                start: float, end: float, chunk: int = 0) -> None:
+        ev = BusEvent(device, kind, start, end, link, chunk)
+        with self._lock:
+            self._events.append(ev)
+        with handle._lock:
+            handle.events.append(ev)
+
+    def stream_timeline(self, *, reset: bool = False) -> Timeline:
+        """Every measured event of every job, one time axis — what the
+        cross-plan invariant checks run on.  ``reset=True`` hands the
+        record over and clears it (long-lived streams that checkpoint
+        their history instead of holding it forever)."""
+        with self._lock:
+            events = list(self._events)
+            if reset:
+                self._events.clear()
+        return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
+
+    def shutdown(self) -> None:
+        """Stop the worker threads after their queues drain."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            workers = list(self._workers.values())
+        for w in workers:
+            w.q.put(None)
+        for w in workers:
+            w.join(timeout=30)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def dispatch(self, tasks: Sequence[DeviceTask],
+                 link_order: Mapping[str, Sequence[tuple[str, str]]],
+                 *, job: str | None = None) -> JobHandle:
+        """Admit one plan: ``link_order`` is the engine's per-link grant
+        order (``Timeline.link_ticket_order``); tickets for stages the task
+        list does not provide are skipped up front so they can never wedge
+        a bus.  Returns immediately with a ``JobHandle``."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StreamCore is shut down")
+            jid = job if job is not None else f"job{self._jobs}"
+            self._jobs += 1
+        provided: set[tuple[str, str]] = set()
+        for t in tasks:
+            if t.compute is None and not t.compute_chunks:
+                raise ValueError(f"task {t.device!r} has neither compute "
+                                 "nor compute_chunks")
+            if t.has_copy_in():
+                provided.add((t.device, "copy_in"))
+            if t.has_copy_out():
+                provided.add((t.device, "copy_out"))
+        ticket_link: dict[tuple[str, str], str] = {}
+        for link, seq in link_order.items():
+            kept = [(jid,) + tuple(tk) for tk in seq if tuple(tk) in provided]
+            for _, dev, kind in kept:
+                ticket_link[(dev, kind)] = link
+            if kept:
+                self._bus(link).extend(kept)
+        handle = JobHandle(jid, len(tasks))
+        for t in tasks:
+            self._worker(t.device).q.put(
+                lambda t=t: self._run_task(handle, jid, t, ticket_link))
+        return handle
+
+    def run(self, tasks: Sequence[DeviceTask],
+            link_order: Mapping[str, Sequence[tuple[str, str]]],
+            *, job: str | None = None) -> Timeline:
+        """Dispatch one plan and block for its measured timeline."""
+        return self.dispatch(tasks, link_order, job=job).wait()
+
+    # -- per-device stage groups -------------------------------------------
+
+    def _acquire(self, jid: str, device: str, kind: str,
+                 ticket_link: Mapping[tuple[str, str], str]) -> tuple[TicketBus, tuple]:
+        link = ticket_link.get((device, kind))
+        if link is None:
+            raise ValueError(f"ticket {(device, kind)} not in bus schedule")
+        bus = self._bus(link)
+        ticket = (jid, device, kind)
+        bus.acquire(ticket)
+        return bus, ticket
+
+    def _run_task(self, handle: JobHandle, jid: str, task: DeviceTask,
+                  ticket_link: Mapping[tuple[str, str], str]) -> None:
+        try:
+            if task.pipelined:
+                self._run_pipelined(handle, jid, task, ticket_link)
+            else:
+                self._run_staged(handle, jid, task, ticket_link)
+        except BaseException as exc:  # surfaced via handle.wait()
+            # drop this device's remaining tickets *for this job* on every
+            # bus; later jobs' tickets stay (the worker thread survives)
+            with self._lock:
+                buses = list(self._buses.values())
+            for bus in buses:
+                bus.cancel(lambda t: t[0] == jid and t[1] == task.device)
+            with handle._lock:
+                handle.errors.append(exc)
+        finally:
+            handle._device_done()
+
+    def _run_staged(self, handle: JobHandle, jid: str, task: DeviceTask,
+                    ticket_link: Mapping[tuple[str, str], str]) -> None:
+        def stage(kind: str, fn: Callable[[], None], on_bus: bool) -> None:
+            bus = ticket = None
+            if on_bus:
+                bus, ticket = self._acquire(jid, task.device, kind, ticket_link)
+            start = time.perf_counter() - self._t0
+            try:
+                fn()
+            finally:
+                # stamp the end BEFORE releasing the bus: the next holder may
+                # start immediately, and measured bus events must not overlap
+                end = time.perf_counter() - self._t0
+                if bus is not None:
+                    bus.release(ticket)
+            self._record(handle, task.device, kind,
+                         ticket_link.get((task.device, kind)), start, end)
+
+        if task.copy_in is not None:
+            stage("copy_in", task.copy_in, on_bus=True)
+        stage("compute", task.compute, on_bus=False)
+        if task.copy_out is not None:
+            stage("copy_out", task.copy_out, on_bus=True)
+
+    def _run_pipelined(self, handle: JobHandle, jid: str, task: DeviceTask,
+                       ticket_link: Mapping[tuple[str, str], str]) -> None:
+        """Stream the chunked stages exactly as the engine prices them:
+        the copy feeder holds the copy_in ticket across its chunks (the
+        engine schedules them contiguously on the link) while the
+        consumer thread computes chunk j as soon as it lands, and the
+        output loop copies chunk j out as soon as chunk j is computed —
+        overlapping the remaining compute chunks, like the engine's
+        ``max(link_clock, compute_chunk_end)`` out-chunk starts."""
+        dev = task.device
+        t0 = self._t0
+        in_chunks = list(task.copy_in_chunks or ())
+        comp_chunks = list(task.compute_chunks or ())
+        out_chunks = list(task.copy_out_chunks or ())
+        landed = threading.Semaphore(0)     # input chunk j copied
+        computed = threading.Semaphore(0)   # compute chunk j finished
+        aborted = threading.Event()
+        consumer_errs: list[BaseException] = []
+
+        def consume() -> None:
+            try:
+                for j, fn in enumerate(comp_chunks):
+                    if in_chunks:
+                        landed.acquire()
+                        if aborted.is_set():
+                            return
+                    start = time.perf_counter() - t0
+                    fn()
+                    self._record(handle, dev, "compute", None, start,
+                                 time.perf_counter() - t0, chunk=j)
+                    computed.release()
+            except BaseException as exc:
+                consumer_errs.append(exc)
+            finally:
+                # on early exit, unblock an output loop waiting on
+                # chunks that will never be computed (it re-checks
+                # consumer_errs / aborted after each acquire)
+                for _ in out_chunks:
+                    computed.release()
+
+        consumer = threading.Thread(target=consume, daemon=True)
+        if in_chunks:
+            bus, ticket = self._acquire(jid, dev, "copy_in", ticket_link)
+            consumer.start()
+            try:
+                for j, fn in enumerate(in_chunks):
+                    start = time.perf_counter() - t0
+                    fn()
+                    self._record(handle, dev, "copy_in",
+                                 ticket_link.get((dev, "copy_in")), start,
+                                 time.perf_counter() - t0, chunk=j)
+                    landed.release()
+            except BaseException:
+                # unblock the consumer before surfacing the error
+                aborted.set()
+                landed.release()
+                raise
+            finally:
+                bus.release(ticket)
+        else:
+            consumer.start()
+        if out_chunks:
+            bus, ticket = self._acquire(jid, dev, "copy_out", ticket_link)
+            try:
+                for j, fn in enumerate(out_chunks):
+                    computed.acquire()   # chunk j's matmul is done
+                    if consumer_errs or aborted.is_set():
+                        break
+                    start = time.perf_counter() - t0
+                    fn()
+                    self._record(handle, dev, "copy_out",
+                                 ticket_link.get((dev, "copy_out")), start,
+                                 time.perf_counter() - t0, chunk=j)
+            finally:
+                bus.release(ticket)
+        consumer.join()
+        if consumer_errs:
+            raise consumer_errs[0]
+
+
+# ---------------------------------------------------------------------------
+# One-shot facade (single-plan callers and the PR 1/2 API surface)
+# ---------------------------------------------------------------------------
 
 
 class OverlappedExecutor:
-    """Thread-per-device executor with one ticketed lock per topology link.
+    """Thin one-shot facade over ``StreamCore``: executes a single planned
+    timeline with a private core, then shuts it down.
 
     ``run`` returns the *measured* timeline.  Stage durations are whatever
     the callables really take; the planned timeline only fixes each link's
@@ -115,12 +479,6 @@ class OverlappedExecutor:
     def __init__(self, devices: Sequence[DeviceProfile], planned: Timeline):
         self.devices = list(devices)
         self.planned = planned
-        self._buses: dict[str, TicketBus] = {}
-        self._ticket_link: dict[tuple[str, str], str] = {}
-        for link, seq in self.link_sequences(planned).items():
-            self._buses[link] = TicketBus(seq)
-            for ticket in seq:
-                self._ticket_link[ticket] = link
 
     @staticmethod
     def link_sequences(planned: Timeline) -> dict[str, list[tuple[str, str]]]:
@@ -136,158 +494,9 @@ class OverlappedExecutor:
         truth."""
         return planned.ticket_order()
 
-    def _bus_for(self, ticket: tuple[str, str]) -> TicketBus:
-        link = self._ticket_link.get(ticket)
-        if link is None:
-            raise ValueError(f"ticket {ticket} not in bus schedule")
-        return self._buses[link]
-
     def run(self, tasks: Sequence[DeviceTask]) -> Timeline:
-        # A task list may cover only a subset of the planned devices; release
-        # the unclaimed bus tickets up front or their successors would wait
-        # forever (acquire has no timeout).
-        provided: set[tuple[str, str]] = set()
-        for t in tasks:
-            if t.compute is None and not t.compute_chunks:
-                raise ValueError(f"task {t.device!r} has neither compute "
-                                 "nor compute_chunks")
-            if t.has_copy_in():
-                provided.add((t.device, "copy_in"))
-            if t.has_copy_out():
-                provided.add((t.device, "copy_out"))
-        for bus in self._buses.values():
-            bus.retain(provided)
-
-        events: list[BusEvent] = []
-        lock = threading.Lock()
-        errors: list[BaseException] = []
-        t0 = time.perf_counter()
-
-        def record(device: str, kind: str, start: float, end: float,
-                   chunk: int = 0) -> None:
-            with lock:
-                events.append(BusEvent(device, kind, start, end,
-                                       self._ticket_link.get((device, kind)),
-                                       chunk))
-
-        def stage(device: str, kind: str, fn: Callable[[], None],
-                  on_bus: bool) -> None:
-            ticket = (device, kind)
-            bus = self._bus_for(ticket) if on_bus else None
-            if bus is not None:
-                bus.acquire(ticket)
-            start = time.perf_counter() - t0
-            try:
-                fn()
-            finally:
-                # stamp the end BEFORE releasing the bus: the next holder may
-                # start immediately, and measured bus events must not overlap
-                end = time.perf_counter() - t0
-                if bus is not None:
-                    bus.release(ticket)
-            record(device, kind, start, end)
-
-        def run_pipelined(task: DeviceTask) -> None:
-            """Stream the chunked stages exactly as the engine prices them:
-            the copy feeder holds the copy_in ticket across its chunks (the
-            engine schedules them contiguously on the link) while the
-            consumer thread computes chunk j as soon as it lands, and the
-            output loop copies chunk j out as soon as chunk j is computed —
-            overlapping the remaining compute chunks, like the engine's
-            ``max(link_clock, compute_chunk_end)`` out-chunk starts."""
-            dev = task.device
-            in_chunks = list(task.copy_in_chunks or ())
-            comp_chunks = list(task.compute_chunks or ())
-            out_chunks = list(task.copy_out_chunks or ())
-            landed = threading.Semaphore(0)     # input chunk j copied
-            computed = threading.Semaphore(0)   # compute chunk j finished
-            aborted = threading.Event()
-            consumer_errs: list[BaseException] = []
-
-            def consume() -> None:
-                try:
-                    for j, fn in enumerate(comp_chunks):
-                        if in_chunks:
-                            landed.acquire()
-                            if aborted.is_set():
-                                return
-                        start = time.perf_counter() - t0
-                        fn()
-                        record(dev, "compute", start,
-                               time.perf_counter() - t0, chunk=j)
-                        computed.release()
-                except BaseException as exc:
-                    consumer_errs.append(exc)
-                finally:
-                    # on early exit, unblock an output loop waiting on
-                    # chunks that will never be computed (it re-checks
-                    # consumer_errs / aborted after each acquire)
-                    for _ in out_chunks:
-                        computed.release()
-
-            consumer = threading.Thread(target=consume, daemon=True)
-            if in_chunks:
-                ticket = (dev, "copy_in")
-                bus = self._bus_for(ticket)
-                bus.acquire(ticket)
-                consumer.start()
-                try:
-                    for j, fn in enumerate(in_chunks):
-                        start = time.perf_counter() - t0
-                        fn()
-                        record(dev, "copy_in", start,
-                               time.perf_counter() - t0, chunk=j)
-                        landed.release()
-                except BaseException:
-                    # unblock the consumer before surfacing the error
-                    aborted.set()
-                    landed.release()
-                    raise
-                finally:
-                    bus.release(ticket)
-            else:
-                consumer.start()
-            if out_chunks:
-                ticket = (dev, "copy_out")
-                bus = self._bus_for(ticket)
-                bus.acquire(ticket)
-                try:
-                    for j, fn in enumerate(out_chunks):
-                        computed.acquire()   # chunk j's matmul is done
-                        if consumer_errs or aborted.is_set():
-                            break
-                        start = time.perf_counter() - t0
-                        fn()
-                        record(dev, "copy_out", start,
-                               time.perf_counter() - t0, chunk=j)
-                finally:
-                    bus.release(ticket)
-            consumer.join()
-            if consumer_errs:
-                raise consumer_errs[0]
-
-        def worker(task: DeviceTask) -> None:
-            try:
-                if task.pipelined:
-                    run_pipelined(task)
-                    return
-                if task.copy_in is not None:
-                    stage(task.device, "copy_in", task.copy_in, on_bus=True)
-                stage(task.device, "compute", task.compute, on_bus=False)
-                if task.copy_out is not None:
-                    stage(task.device, "copy_out", task.copy_out, on_bus=True)
-            except BaseException as exc:  # surfaced after join
-                for bus in self._buses.values():
-                    bus.cancel_device(task.device)
-                with lock:
-                    errors.append(exc)
-
-        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
-                   for t in tasks]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
-        return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
+        core = StreamCore()
+        try:
+            return core.run(tasks, self.planned.link_ticket_order())
+        finally:
+            core.shutdown()

@@ -17,7 +17,8 @@ from .bus import BusTopology
 from .device_model import DeviceProfile, priority_order
 from .domain import Domain, FunctionDomain, PlanCache, Workload, register_domain
 from .optimize import OptimizeResult, solve_bisection
-from .schedule import Schedule, DynamicScheduler, simulate_timeline
+from .schedule import (Schedule, DynamicScheduler, make_spec,
+                       simulate_timeline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +109,7 @@ class GemmDomain:
             if dynamic else None
 
     def predict(self) -> Sequence[DeviceProfile]:
-        return self.dyn.devices if self.dyn is not None else self._devices
+        return self.dyn.snapshot() if self.dyn is not None else self._devices
 
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: GemmWorkload) -> OptimizeResult:
@@ -131,7 +132,9 @@ class GemmDomain:
         res = OptimizeResult(ops=ops, makespan=tl.makespan,
                              finish_times=finish, bus=self.bus)
         return Schedule(result=res, timeline=tl,
-                        priorities=priority_order(list(devices)))
+                        priorities=priority_order(list(devices)),
+                        spec=make_spec(devices, ops, w.n, w.k, self.topology,
+                                       chunks))
 
     def cost_signature(self, w: GemmWorkload) -> Hashable:
         return (w.m, w.n, w.k)

@@ -41,8 +41,13 @@ def fit_linear(ops: Sequence[float], seconds: Sequence[float],
     mx, my = (w * x).sum() / sw, (w * y).sum() / sw
     vx = (w * (x - mx) ** 2).sum()
     if vx == 0.0:
-        # Degenerate: single size — throughput-only model.
-        return LinearTimeModel(a=float(my / mx) if mx else 0.0, b=0.0)
+        # Degenerate: single size — throughput-only model.  Clamp the slope
+        # to the same positive floor as the main path: a zero-slope model
+        # ("free compute at any size") would make every downstream solver
+        # special-case it (solve_analytic holds zero-slope devices out of
+        # the LP; the bisection would hand it the whole workload).
+        a = max(float(my / mx) if mx else 0.0, 1e-18)
+        return LinearTimeModel(a=a, b=0.0)
     a = float((w * (x - mx) * (y - my)).sum() / vx)
     a = max(a, 1e-18)
     b = max(float(my - a * mx), 0.0)

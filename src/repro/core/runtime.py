@@ -1,0 +1,542 @@
+"""Persistent streaming co-execution runtime — plan → execute → observe →
+re-plan as one loop (DESIGN.md §9).
+
+The paper runs POAS once per application; its §3.4.2 dynamic mode, and any
+deployment serving sustained traffic, need a *continuous* loop instead.
+``CoExecutionRuntime`` keeps the whole pipeline alive across plans:
+
+* an **admission queue** of POAS workloads for any registered ``Domain``;
+* a planner thread running the four phases per job through the shared
+  ``POAS``/``PlanCache`` (a cache hit skips the solve entirely);
+* **plan-carry-over**: each plan's timeline is rebased onto the previous
+  plan's carried link/device clocks (``core.bus.ClockState``), so plan
+  k+1's input copies overlap plan k's tail instead of waiting for a global
+  barrier;
+* execution through the persistent ``StreamCore`` (long-lived per-device
+  workers + per-link ticket buses, ``core.executor``) or through a
+  deterministic **virtual-time** backend that prices the measured run on
+  ground-truth device models;
+* an **observation pump** converting each measured ``Timeline``'s compute
+  events into ``DynamicScheduler.observe`` calls, so model re-fits,
+  ``PlanCache`` invalidation, and re-planning happen automatically inside
+  the loop — a device that starts throttling mid-stream sheds load within
+  a few jobs without any caller wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Mapping, Sequence
+
+from .bus import ClockState, Timeline, carry_clocks
+from .device_model import (DeviceProfile, LinearTimeModel, RooflineTimeModel)
+from .domain import Domain, PlanCache, Workload
+from .executor import DeviceTask, StreamCore
+from .framework import POAS, POASPlan
+from .schedule import DynamicScheduler
+
+
+# ---------------------------------------------------------------------------
+# Observation pump — measured timelines feed the Predict phase
+# ---------------------------------------------------------------------------
+
+
+class ObservationPump:
+    """Converts measured timelines into ``DynamicScheduler.observe`` calls.
+
+    One pump is the single feedback path for every layer: the runtime feeds
+    each job's measured compute events (``feed``), the serving dispatcher
+    feeds per-bucket generation times, and the hetero train-step loop feeds
+    per-pod step times (both via ``observe``).  ``time_scale`` converts
+    measured wall seconds back to model seconds when execution is
+    deliberately time-scaled (sleep-based testbeds).
+    """
+
+    def __init__(self, dyn: DynamicScheduler,
+                 device_names: Sequence[str], *, time_scale: float = 1.0):
+        self.dyn = dyn
+        self.index = {name: i for i, name in enumerate(device_names)}
+        self.time_scale = time_scale
+        self.observations = 0
+
+    def observe(self, device: str, ops: float, seconds: float) -> None:
+        """One measured (ops, seconds) sample for a device, by name."""
+        self.dyn.observe(self.index[device], float(ops),
+                         float(seconds) / self.time_scale)
+        self.observations += 1
+
+    def feed(self, measured: Timeline,
+             ops_by_device: Mapping[str, float]) -> int:
+        """Pump every device's measured compute time (chunk durations
+        summed) into the scheduler; returns the number of observations."""
+        fed = 0
+        for name, ops in ops_by_device.items():
+            if name not in self.index or ops <= 0.0:
+                continue
+            seconds = sum(e.duration for e in measured.device_events(name)
+                          if e.kind == "compute")
+            if seconds > 0.0:
+                self.observe(name, ops, seconds)
+                fed += 1
+        return fed
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth helpers (testbeds: what the hardware *really* does)
+# ---------------------------------------------------------------------------
+
+
+def throttled(device: DeviceProfile, factor: float) -> DeviceProfile:
+    """Ground-truth profile computing ``factor``× slower than ``device``
+    (the paper's overheating scenario / a straggling pod)."""
+    m = device.compute
+    if isinstance(m, LinearTimeModel):
+        slow = LinearTimeModel(a=m.a * factor, b=m.b * factor)
+    elif isinstance(m, RooflineTimeModel):
+        slow = RooflineTimeModel(peak_ops_per_s=m.peak_ops_per_s / factor,
+                                 hbm_bytes_per_s=m.hbm_bytes_per_s / factor,
+                                 bytes_per_op=m.bytes_per_op,
+                                 overhead_s=m.overhead_s * factor)
+    else:  # pragma: no cover - exotic model
+        raise TypeError(f"cannot throttle {type(m).__name__}")
+    return dataclasses.replace(device, compute=slow)
+
+
+TruthFn = Callable[[int, DeviceProfile], DeviceProfile]
+"""(job uid, planned device) -> the profile the hardware really runs at.
+
+Must be anchored to FIXED ground-truth profiles: the planned device passed
+in may already carry a re-fitted model, and deriving the truth from it
+(e.g. ``throttled(planned, 2)``) compounds the slowdown on every re-fit —
+the model chases its own tail to infinity.  Use ``truth_from_profiles``.
+"""
+
+
+def truth_from_profiles(base: Sequence[DeviceProfile],
+                        slowdown: Callable[[int, str], float] | None = None
+                        ) -> TruthFn:
+    """A ``TruthFn`` pinned to fixed ground-truth ``base`` profiles.
+
+    ``slowdown(job_uid, device_name)`` returns the throttle factor in
+    effect for that job (1.0 = nominal) — e.g. a device overheating 2x
+    from job 8 onward is ``lambda uid, name: 2.0 if uid >= 8 and
+    name == "xpu" else 1.0``.
+    """
+    by_name = {d.name: d for d in base}
+
+    def fn(uid: int, planned: DeviceProfile) -> DeviceProfile:
+        d = by_name.get(planned.name, planned)
+        f = slowdown(uid, d.name) if slowdown is not None else 1.0
+        return throttled(d, f) if f != 1.0 else d
+
+    return fn
+
+
+def model_sleep_tasks(truth: TruthFn | None = None, *,
+                      time_scale: float = 1.0) -> "TaskFactory":
+    """Task factory whose stages sleep their ground-truth model durations —
+    the simulated-testbed execution backend for the threaded runtime.
+
+    ``truth`` substitutes what the device *really* does for what the plan
+    believes (e.g. a mid-stream throttle); it is evaluated at execution
+    time keyed on the job uid, so throttles are deterministic regardless of
+    thread timing.  ``time_scale`` shrinks the sleeps; pair it with the
+    runtime's ``time_scale`` so the pump converts back to model seconds.
+    """
+
+    def factory(job: "StreamJob", plan: POASPlan) -> list[DeviceTask]:
+        spec = plan.schedule.spec
+        if spec is None:
+            raise ValueError("model_sleep_tasks needs Schedule.spec "
+                             "(every shipped domain provides it)")
+        kinds = {(e.device, e.kind) for e in plan.schedule.timeline.events}
+        tasks: list[DeviceTask] = []
+        for d, c in zip(spec.devices, spec.ops):
+            if c <= 0.0:
+                continue
+
+            def true_dev(d=d) -> DeviceProfile:
+                return truth(job.uid, d) if truth is not None else d
+
+            def sleep_in(d=d, c=c):
+                time.sleep(true_dev(d).copy.in_time(c, spec.n, spec.k)
+                           * time_scale)
+
+            def sleep_compute(d=d, c=c):
+                time.sleep(true_dev(d).compute(c) * time_scale)
+
+            def sleep_out(d=d, c=c):
+                time.sleep(true_dev(d).copy.out_time(c, spec.n, spec.k)
+                           * time_scale)
+
+            has_in = (d.name, "copy_in") in kinds
+            has_out = (d.name, "copy_out") in kinds
+            tasks.append(DeviceTask(device=d.name,
+                                    copy_in=sleep_in if has_in else None,
+                                    compute=sleep_compute,
+                                    copy_out=sleep_out if has_out else None))
+        return tasks
+
+    return factory
+
+
+# ---------------------------------------------------------------------------
+# Stream jobs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamJob:
+    """One admitted workload's lifecycle through the loop."""
+
+    uid: int
+    workload: Workload
+    plan: POASPlan | None = None
+    planned: Timeline | None = None    # rebased onto carried clocks
+    measured: Timeline | None = None
+    error: BaseException | None = None
+    epoch_at_plan: int = 0             # DynamicScheduler.epoch when planned
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    def wait(self, timeout: float | None = None) -> "StreamJob":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"job {self.uid} still running")
+        if self.error is not None:
+            raise self.error
+        return self
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def start(self) -> float:
+        if self.measured is None:
+            return 0.0
+        return min((e.start for e in self.measured.events), default=0.0)
+
+    @property
+    def finish(self) -> float:
+        return self.measured.makespan if self.measured else 0.0
+
+    @property
+    def span(self) -> float:
+        """Measured latency of this job (first stage start → last end)."""
+        return self.finish - self.start
+
+
+TaskFactory = Callable[[StreamJob, POASPlan], Sequence[DeviceTask]]
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+
+class CoExecutionRuntime:
+    """Persistent plan→execute→observe→re-plan loop over one bound domain.
+
+    Parameters
+    ----------
+    domain:
+        any registered POAS ``Domain``.  If it carries a ``DynamicScheduler``
+        (``domain.dyn``) and ``feedback`` is on, measured timelines are
+        pumped back into it.
+    executor:
+        ``"threads"`` — the real ``StreamCore`` (long-lived per-device
+        workers, per-link ticket buses surviving across plans); stage
+        callables come from ``task_factory`` (default: ground-truth sleeps
+        via ``model_sleep_tasks``).
+        ``"virtual"`` — deterministic virtual time: the measured timeline is
+        the engine's pricing of the plan under the ground-truth profiles
+        (``truth``), chained on carried measured clocks.  Planning latency
+        does not pollute the stream, so throughput comparisons are exact.
+    carry_clocks:
+        rebase each plan onto the previous plan's carried link/device
+        clocks (overlapped back-to-back plans).  Off = a global barrier
+        between plans.
+    feedback:
+        pump measured compute events into ``domain.dyn`` after each job
+        (model re-fit → ``PlanCache`` invalidation → re-plan, automatically).
+    max_inflight:
+        how many jobs may be planned ahead of the oldest unfinished one.
+        In virtual mode this sets the observation lag (a plan dispatched
+        while k jobs are in flight cannot have seen their measurements).
+    """
+
+    def __init__(self, domain: Domain, *,
+                 executor: str = "threads",
+                 task_factory: TaskFactory | None = None,
+                 truth: TruthFn | None = None,
+                 cache: bool = True,
+                 feedback: bool = True,
+                 carry_clocks: bool = True,
+                 max_inflight: int = 2,
+                 time_scale: float = 1.0):
+        if executor not in ("threads", "virtual"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.domain = domain
+        self.poas = POAS(domain, cache=PlanCache() if cache else None)
+        self.dyn: DynamicScheduler | None = getattr(domain, "dyn", None)
+        self.carry = bool(carry_clocks)
+        self.max_inflight = max(1, int(max_inflight))
+        self.executor = executor
+        self.truth = truth
+        self.time_scale = time_scale
+        names = [d.name for d in domain.predict()]
+        self.pump: ObservationPump | None = None
+        if feedback and self.dyn is not None:
+            self.pump = ObservationPump(self.dyn, names,
+                                        time_scale=time_scale)
+        self.jobs: list[StreamJob] = []
+        self._task_factory = task_factory or model_sleep_tasks(
+            truth, time_scale=time_scale)
+        self._core = StreamCore() if executor == "threads" else None
+        self._plan_clocks = ClockState()
+        self._meas_clocks = ClockState()
+        self._virtual_events: list = []
+        self._pending_obs: list[StreamJob] = []   # virtual-mode obs lag
+        self._queue: queue.SimpleQueue = queue.SimpleQueue()
+        self._inflight = threading.Semaphore(self.max_inflight)
+        self._lock = threading.Lock()
+        self._closed = False
+        self._planner = threading.Thread(target=self._plan_loop,
+                                         name="poas-planner", daemon=True)
+        self._planner.start()
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, workload: Workload) -> StreamJob:
+        """Admit one workload; returns immediately with its ``StreamJob``."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("runtime is shut down")
+            job = StreamJob(uid=len(self.jobs), workload=workload)
+            self.jobs.append(job)
+        self._queue.put(job)
+        return job
+
+    def run_stream(self, workloads: Sequence[Workload],
+                   timeout: float | None = 120.0) -> list[StreamJob]:
+        """Submit every workload, wait for all of them, return their jobs."""
+        jobs = [self.submit(w) for w in workloads]
+        for j in jobs:
+            j.wait(timeout)
+        return jobs
+
+    def drain(self, timeout: float | None = 120.0) -> None:
+        with self._lock:
+            jobs = list(self.jobs)
+        for j in jobs:
+            j._done.wait(timeout)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._queue.put(None)
+        self._planner.join(timeout=60)
+        if self._core is not None:
+            self._core.shutdown()
+
+    def __enter__(self) -> "CoExecutionRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def plan_cache(self) -> PlanCache | None:
+        return self.poas.cache
+
+    def stream_timeline(self) -> Timeline:
+        """Every job's measured events on one time axis — the cross-plan
+        invariant surface."""
+        if self._core is not None:
+            return self._core.stream_timeline()
+        with self._lock:
+            events = list(self._virtual_events)
+        return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
+
+    def total_makespan(self) -> float:
+        return self.stream_timeline().makespan
+
+    def stats(self) -> dict:
+        with self._lock:
+            done = [j for j in self.jobs if j.done and j.error is None]
+        spans = sorted(j.span for j in done)
+        p = lambda q: spans[min(len(spans) - 1, int(q * len(spans)))] \
+            if spans else 0.0
+        return {
+            "jobs_done": len(done),
+            "total_makespan_s": self.total_makespan(),
+            "p50_job_span_s": p(0.50),
+            "p95_job_span_s": p(0.95),
+            "observations": self.pump.observations if self.pump else 0,
+            "refit_epoch": self.dyn.epoch if self.dyn else 0,
+            "plan_cache": self.poas.cache.stats() if self.poas.cache else {},
+        }
+
+    # -- the loop -----------------------------------------------------------
+
+    def _next_clocks(self, timeline: Timeline, clocks: ClockState) -> ClockState:
+        if self.carry:
+            return carry_clocks(timeline, clocks)
+        return ClockState(floor=max(timeline.makespan, clocks.floor))
+
+    def _plan_loop(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            self._inflight.acquire()
+            try:
+                self._plan_and_dispatch(job)
+            except BaseException as exc:
+                job.error = exc
+                job._done.set()
+                self._inflight.release()
+
+    def _plan_and_dispatch(self, job: StreamJob) -> None:
+        if self.executor == "virtual":
+            # flush observations old enough that a real pipeline would have
+            # seen them (jobs completed before this one was planned)
+            lag = self.max_inflight - 1
+            while self._pending_obs and self._pending_obs[0].uid <= job.uid - 1 - lag:
+                self._feed(self._pending_obs.pop(0))
+        if self.dyn is not None:
+            job.epoch_at_plan = self.dyn.epoch
+        plan = self.poas.plan(job.workload)
+        job.plan = plan
+        spec = plan.schedule.spec
+        if spec is not None:
+            job.planned = spec.rebase(self._plan_clocks)
+            self._plan_clocks = self._next_clocks(job.planned,
+                                                  self._plan_clocks)
+        else:
+            job.planned = plan.schedule.timeline
+        if self.executor == "virtual":
+            self._execute_virtual(job)
+        else:
+            self._execute_threads(job)
+
+    # -- virtual-time execution --------------------------------------------
+
+    def _execute_virtual(self, job: StreamJob) -> None:
+        spec = job.plan.schedule.spec
+        if spec is None:
+            raise ValueError("virtual execution needs Schedule.spec")
+        truth_devs = [self.truth(job.uid, d) if self.truth else d
+                      for d in spec.devices]
+        job.measured = spec.rebase(self._meas_clocks, devices=truth_devs)
+        self._meas_clocks = self._next_clocks(job.measured, self._meas_clocks)
+        with self._lock:
+            self._virtual_events.extend(job.measured.events)
+        self._pending_obs.append(job)
+        job._done.set()
+        self._inflight.release()
+
+    # -- threaded execution -------------------------------------------------
+
+    def _execute_threads(self, job: StreamJob) -> None:
+        tasks = self._task_factory(job, job.plan)
+        order = job.plan.schedule.timeline.link_ticket_order()
+        handle = self._core.dispatch(tasks, order, job=f"j{job.uid}")
+        handle.add_done_callback(lambda h: self._complete(job, h))
+
+    def _complete(self, job: StreamJob, handle) -> None:
+        # Runs as a JobHandle done-callback on a device worker thread: it
+        # must ALWAYS complete the job and free the in-flight slot, or one
+        # bad observation (pump -> observe -> refit listeners) would wedge
+        # the planner and every later job on that device.
+        try:
+            job.measured = handle.timeline()
+            if handle.errors:
+                job.error = handle.errors[0]
+            elif self.pump is not None:
+                self._feed(job)
+        except BaseException as exc:
+            if job.error is None:
+                job.error = exc
+        finally:
+            job._done.set()
+            self._inflight.release()
+
+    def _feed(self, job: StreamJob) -> None:
+        if self.pump is None or job.measured is None:
+            return
+        spec = job.plan.schedule.spec if job.plan else None
+        if spec is not None:
+            self.pump.feed(job.measured, spec.ops_by_device())
+
+
+# ---------------------------------------------------------------------------
+# Cross-plan invariant checks (tests + BENCH_streaming acceptance)
+# ---------------------------------------------------------------------------
+
+
+def verify_stream_invariants(jobs: Sequence[StreamJob], *,
+                             eps: float = 1e-9) -> list[str]:
+    """The Fig. 2 invariants, across plan boundaries.  Returns violations
+    (empty = pass):
+
+    * per link, ALL jobs' transfers serialize (no two copy events overlap,
+      even from different plans);
+    * per job and device, compute chunk j starts only after input chunk j
+      landed, and output chunk j only after compute chunk j;
+    * per job and link, the measured grant order equals the planned
+      priority/ticket order.
+    """
+    problems: list[str] = []
+    done = [j for j in jobs if j.measured is not None and j.error is None]
+
+    # per-link serialization across the whole stream
+    by_link: dict[str, list] = {}
+    for j in done:
+        for e in j.measured.events:
+            if e.kind != "compute" and e.link is not None:
+                by_link.setdefault(e.link, []).append(e)
+    for link, evs in by_link.items():
+        evs.sort(key=lambda e: (e.start, e.end))
+        for a, b in zip(evs, evs[1:]):
+            if b.start < a.end - eps:
+                problems.append(
+                    f"link {link}: {b.device}/{b.kind} starts {a.end - b.start:.3g}s "
+                    f"before {a.device}/{a.kind} ends")
+
+    for j in done:
+        # copy-before-compute-before-copy-out, chunk-wise
+        for name in {e.device for e in j.measured.events}:
+            evs = j.measured.device_events(name)
+            ins = sorted((e for e in evs if e.kind == "copy_in"),
+                         key=lambda e: e.chunk)
+            comps = sorted((e for e in evs if e.kind == "compute"),
+                           key=lambda e: e.chunk)
+            outs = sorted((e for e in evs if e.kind == "copy_out"),
+                          key=lambda e: e.chunk)
+            for i_ev, c_ev in zip(ins, comps):
+                if c_ev.start < i_ev.end - eps:
+                    problems.append(f"job {j.uid} {name}: compute chunk "
+                                    f"{c_ev.chunk} before its input landed")
+            for c_ev, o_ev in zip(comps, outs):
+                if o_ev.start < c_ev.end - eps:
+                    problems.append(f"job {j.uid} {name}: copy_out chunk "
+                                    f"{o_ev.chunk} before its compute ended")
+        # planned per-link grant order is replayed
+        if j.plan is None:
+            continue
+        planned = j.plan.schedule.timeline.link_ticket_order()
+        measured = j.measured.link_ticket_order()
+        for link, want in planned.items():
+            got = measured.get(link, [])
+            want = [t for t in want if t in set(got)]  # subset task lists
+            if got != want:
+                problems.append(f"job {j.uid} link {link}: grant order "
+                                f"{got} != planned {want}")
+    return problems

@@ -14,18 +14,20 @@ preemption.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Sequence
+from typing import Hashable, Mapping, Sequence
 
 import numpy as np
 
 from ..core.adapt import round_shares_to_grain
-from ..core.bus import BusTopology
+from ..core.bus import BusTopology, Timeline
 from ..core.device_model import (DeviceProfile, LinearTimeModel, NO_COPY,
                                  priority_order)
 from ..core.domain import PlanCache, register_domain
 from ..core.framework import POAS
 from ..core.optimize import OptimizeResult, solve_bisection
-from ..core.schedule import DynamicScheduler, Schedule, simulate_timeline
+from ..core.runtime import ObservationPump
+from ..core.schedule import (DynamicScheduler, Schedule, make_spec,
+                             simulate_timeline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,7 +97,7 @@ class TrainStepDomain:
             if dynamic else None
 
     def predict(self) -> Sequence[DeviceProfile]:
-        return self.dyn.devices if self.dyn is not None else self._devices
+        return self.dyn.snapshot() if self.dyn is not None else self._devices
 
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: TrainStepWorkload) -> OptimizeResult:
@@ -121,7 +123,8 @@ class TrainStepDomain:
                                            for d in devices],
                              bus="independent")
         return Schedule(result=res, timeline=tl,
-                        priorities=priority_order(list(devices)))
+                        priorities=priority_order(list(devices)),
+                        spec=make_spec(devices, ops, 1, 1, self.topology))
 
     def cost_signature(self, w: TrainStepWorkload) -> Hashable:
         return (w.global_batch, w.seq_len)
@@ -143,6 +146,12 @@ class HeteroBatchScheduler:
         self.domain = TrainStepDomain(pods, flops_per_token=flops_per_token,
                                       seq_len=seq_len, dynamic=dynamic)
         self.poas = POAS(self.domain, cache=PlanCache() if cache else None)
+        # the one feedback path (DESIGN.md §9): measured step times flow
+        # through the same ObservationPump the streaming runtime uses
+        self.pump: ObservationPump | None = None
+        if self.domain.dyn is not None:
+            self.pump = ObservationPump(self.domain.dyn,
+                                        [p.name for p in self.pods])
 
     @property
     def dyn(self) -> DynamicScheduler | None:
@@ -162,9 +171,31 @@ class HeteroBatchScheduler:
 
     def observe(self, pod_index: int, batch_rows: int, seconds: float):
         """Feed a measured per-pod step time (dynamic mode)."""
-        if self.dyn is None:
+        if self.pump is None:
             return
-        self.dyn.observe(pod_index, float(batch_rows * self.seq_len), seconds)
+        self.pump.observe(self.pods[pod_index].name,
+                          float(batch_rows * self.seq_len), seconds)
+
+    def feed_step(self, split: BatchSplit,
+                  measured: "Timeline | Mapping[str, float]") -> int:
+        """Feed one training step's measurements through the pump.
+
+        ``measured`` is either a measured ``Timeline`` (per-pod compute
+        events, e.g. from the streaming runtime) or a plain mapping of pod
+        name -> step seconds.  Returns the number of observations fed.
+        """
+        if self.pump is None:
+            return 0
+        ops = {p.name: float(s * self.seq_len)
+               for p, s in zip(self.pods, split.sizes) if s > 0}
+        if isinstance(measured, Timeline):
+            return self.pump.feed(measured, ops)
+        fed = 0
+        for name, seconds in measured.items():
+            if ops.get(name, 0.0) > 0.0:
+                self.pump.observe(name, ops[name], float(seconds))
+                fed += 1
+        return fed
 
     def imbalance(self, split: BatchSplit) -> float:
         """Predicted idle fraction of the fastest-finishing pod."""

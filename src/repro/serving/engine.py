@@ -7,10 +7,19 @@ groups (model replicas with differing throughput) through the registered
 (linear in tokens), min-makespan split (core optimizer), largest-first
 bucket packing (core adapt primitive) — the serving analogue of hgemms
 (DESIGN.md §3.3).
+
+Continuous batching (DESIGN.md §9): with ``dynamic=True`` the dispatcher
+keeps an admission queue — requests arriving while a batch is in flight are
+``admit``-ed and picked up by the next ``dispatch_pending`` — and routes
+per-bucket measured generation times through the shared ``ObservationPump``
+back into the group models, so the split adapts to replicas that slow down
+(and the ``PlanCache`` is invalidated on every re-fit, never serving a
+stale packing).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Hashable, Sequence
 
@@ -24,7 +33,9 @@ from ..core.device_model import DeviceProfile, priority_order
 from ..core.domain import PlanCache, register_domain
 from ..core.framework import POAS, POASPlan
 from ..core.optimize import OptimizeResult, solve_bisection
-from ..core.schedule import Schedule, simulate_timeline
+from ..core.runtime import ObservationPump
+from ..core.schedule import (DynamicScheduler, Schedule, make_spec,
+                             simulate_timeline)
 from ..models import Model
 
 
@@ -130,13 +141,16 @@ class ServingDispatchDomain:
 
     name = "serving-dispatch"
 
-    def __init__(self, groups: Sequence[DeviceProfile]):
+    def __init__(self, groups: Sequence[DeviceProfile], *,
+                 dynamic: bool = False):
         self._groups = list(groups)
         # replica groups don't share a host bus: one private link each
         self.topology = BusTopology.independent(self._groups)
+        self.dyn = DynamicScheduler(self._groups, bus=self.topology) \
+            if dynamic else None
 
     def predict(self) -> Sequence[DeviceProfile]:
-        return self._groups
+        return self.dyn.snapshot() if self.dyn is not None else self._groups
 
     def optimize(self, groups: Sequence[DeviceProfile],
                  batch: RequestBatch) -> OptimizeResult:
@@ -160,7 +174,8 @@ class ServingDispatchDomain:
                                            for g in groups],
                              bus="independent")
         return Schedule(result=res, timeline=tl,
-                        priorities=priority_order(list(groups)))
+                        priorities=priority_order(list(groups)),
+                        spec=make_spec(groups, ops, 1, 1, self.topology))
 
     def cost_signature(self, batch: RequestBatch) -> Hashable:
         return tuple(batch.token_counts())
@@ -172,15 +187,28 @@ class PoasDispatcher:
     A thin facade over the registered ``serving-dispatch`` domain: repeated
     batches with identical token geometry hit the ``PlanCache`` and skip the
     solve.
+
+    Continuous-batching mode (``dynamic=True``): requests arriving while a
+    batch is in flight are ``admit``-ed into a pending queue and picked up
+    by the next ``dispatch_pending``; per-bucket measured generation times
+    fed to ``complete`` flow through the shared ``ObservationPump`` into the
+    group models (re-fit → ``PlanCache`` invalidation → the next dispatch is
+    re-planned under the refreshed throughputs).
     """
 
     def __init__(self, groups: Sequence[DeviceProfile], *, grain: int = 1,
-                 cache: bool = True):
+                 cache: bool = True, dynamic: bool = False):
         self.groups = list(groups)
         self.grain = grain
-        self.domain = ServingDispatchDomain(self.groups)
+        self.domain = ServingDispatchDomain(self.groups, dynamic=dynamic)
         self.poas = POAS(self.domain, cache=PlanCache() if cache else None)
+        self.pump: ObservationPump | None = None
+        if self.domain.dyn is not None:
+            self.pump = ObservationPump(self.domain.dyn,
+                                        [g.name for g in self.groups])
         self.last_plan: POASPlan | None = None
+        self._pending: list[Request] = []
+        self._lock = threading.Lock()
 
     def split(self, requests: Sequence[Request]) -> list[list[Request]]:
         if not requests:
@@ -191,9 +219,48 @@ class PoasDispatcher:
         # apply the (possibly cached) index packing to THIS batch's requests
         return plan.adapted.assign(requests)
 
+    # -- continuous batching ------------------------------------------------
+
+    def admit(self, *requests: Request) -> None:
+        """Queue requests for the next dispatch (safe to call from serving
+        threads while a batch is in flight)."""
+        with self._lock:
+            self._pending.extend(requests)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def dispatch_pending(self) -> list[list[Request]]:
+        """Drain the admission queue into a planned dispatch (empty buckets
+        when nothing is pending)."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+        return self.split(batch)
+
+    def complete(self, group_index: int, requests: Sequence[Request],
+                 seconds: float) -> None:
+        """Report one bucket's measured generation time; in dynamic mode it
+        is pumped into that group's model (no-op for static dispatchers)."""
+        if self.pump is None or not requests:
+            return
+        tokens = float(sum(len(r.tokens) + r.max_new_tokens
+                           for r in requests))
+        self.pump.observe(self.groups[group_index].name, tokens, seconds)
+
+    # -- prediction ---------------------------------------------------------
+
     def predicted_makespan(self, buckets: Sequence[Sequence[Request]]) -> float:
-        t = 0.0
-        for g, reqs in zip(self.groups, buckets):
-            ops = float(sum(len(r.tokens) + r.max_new_tokens for r in reqs))
-            t = max(t, g.compute(ops))
-        return t
+        """Predicted completion of a bucketed dispatch on the *current*
+        (possibly re-fitted) group models — priced on the same timeline
+        engine the solver and simulator use, so copy/link time is included
+        for groups that have it (it used to price ``g.compute(ops)`` only,
+        disagreeing with the solver/simulator/executor contract)."""
+        groups = list(self.domain.predict())
+        ops = [float(sum(len(r.tokens) + r.max_new_tokens for r in reqs))
+               for g, reqs in zip(groups, buckets)]
+        ops += [0.0] * (len(groups) - len(ops))   # callers may pass fewer
+        tl = simulate_timeline(groups, ops, 1, 1,
+                               topology=self.domain.topology)
+        return tl.makespan

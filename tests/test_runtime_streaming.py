@@ -1,0 +1,455 @@
+"""Persistent streaming co-execution runtime: carried clocks, the
+plan→execute→observe→re-plan loop, continuous serving dispatch, and the
+cross-plan invariants (DESIGN.md §9)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BusTopology, ClockState, CoExecutionRuntime,
+                        CopyModel, DeviceProfile, GemmDomain, GemmWorkload,
+                        LinearTimeModel, NO_COPY, ObservationPump,
+                        build_timeline, carry_clocks, paper_mach1,
+                        simulate_timeline, throttled, truth_from_profiles,
+                        verify_stream_invariants)
+from repro.core.schedule import DynamicScheduler
+
+
+def _mk(name, tflops, bw=None, b=1e-4):
+    ops_per_s = tflops * 1e12 / 2
+    copy = NO_COPY if bw is None else CopyModel(bw, dtype_size=4)
+    return DeviceProfile(name, "gpu" if bw else "cpu",
+                         LinearTimeModel(a=1 / ops_per_s, b=b), copy)
+
+
+THROTTLE_AT = 6
+N_JOBS = 20
+SHAPE = GemmWorkload(4096, 4096, 4096)
+
+
+def _truth(factor=3.0, device="2080ti-tensor", at=THROTTLE_AT):
+    return truth_from_profiles(
+        paper_mach1(),
+        lambda uid, name: factor if uid >= at and name == device else 1.0)
+
+
+# ------------------------------------------------------- carried clocks -----
+
+def test_carried_clocks_default_is_t0():
+    devs = paper_mach1()
+    ops = [1e9, 2e10, 5e10]
+    a = build_timeline(devs, ops, 4096, 4096)
+    b = build_timeline(devs, ops, 4096, 4096, clocks=ClockState())
+    assert [(e.device, e.kind, e.start, e.end) for e in a.events] == \
+        [(e.device, e.kind, e.start, e.end) for e in b.events]
+
+
+def test_carried_clocks_chain_two_plans():
+    """Plan 2 built from plan 1's carried clocks: its first transfer on each
+    link starts exactly where plan 1 left that link, and each device's first
+    stage starts no earlier than its own plan-1 finish — but CAN start well
+    before plan 1's global makespan (the overlap)."""
+    devs = paper_mach1()
+    ops = [1e9, 2e10, 5e10]
+    t1 = build_timeline(devs, ops, 4096, 4096)
+    clocks = carry_clocks(t1)
+    t2 = build_timeline(devs, ops, 4096, 4096, clocks=clocks)
+    # per-link serialization holds across the boundary
+    evs = sorted((e for e in t1.events + t2.events if e.kind != "compute"),
+                 key=lambda e: (e.start, e.end))
+    for a, b in zip(evs, evs[1:]):
+        assert b.start >= a.end - 1e-12, (a, b)
+    # each device's plan-2 stages start only after its own plan-1 finish
+    for d in devs:
+        if not t1.device_events(d.name):
+            continue
+        fin1 = t1.device_finish(d.name)
+        first2 = min(e.start for e in t2.device_events(d.name))
+        assert first2 >= fin1 - 1e-12
+    # the overlap: at least one device starts plan 2 before plan 1's global
+    # makespan (this is what a barrier would forbid)
+    starts2 = [min(e.start for e in t2.device_events(d.name))
+               for d in devs if t2.device_events(d.name)]
+    assert min(starts2) < t1.makespan - 1e-9
+
+
+def test_carried_clocks_barrier_floor():
+    devs = paper_mach1()
+    ops = [1e9, 2e10, 5e10]
+    t1 = build_timeline(devs, ops, 4096, 4096)
+    t2 = build_timeline(devs, ops, 4096, 4096,
+                        clocks=ClockState(floor=t1.makespan))
+    assert min(e.start for e in t2.events) >= t1.makespan - 1e-12
+
+
+def test_carried_chain_beats_barrier_chain():
+    """Back-to-back plans overlap where they stress *different* devices: a
+    CPU-critical plan followed by an XPU-only plan — with carried clocks
+    the XPU's copies and compute run entirely under the CPU's tail, while a
+    barrier serializes the two plans.  (A stream of identical plans ties:
+    the slowest device chains on itself in both modes.)"""
+    devs = paper_mach1()
+    cpu_plan = [2e9, 0.0, 0.0]     # ~14 ms of host compute, bus idle
+    xpu_plan = [0.0, 0.0, 3e10]    # ~6 ms of copies + MXU compute
+    carried = ClockState()
+    barrier = ClockState()
+    total_c = total_b = 0.0
+    for ops in (cpu_plan, xpu_plan):
+        tc = build_timeline(devs, ops, 4096, 4096, clocks=carried)
+        carried = carry_clocks(tc)
+        total_c = max(total_c, tc.makespan)
+        tb = build_timeline(devs, ops, 4096, 4096, clocks=barrier)
+        barrier = ClockState(floor=tb.makespan)
+        total_b = max(total_b, tb.makespan)
+    assert total_c < total_b - 1e-9
+    # fully hidden: the XPU plan ends inside the CPU plan's compute tail
+    assert total_c == pytest.approx(devs[0].compute(cpu_plan[0]))
+
+
+def test_spec_rebase_reproduces_schedule_timeline():
+    dom = GemmDomain(paper_mach1(), bus="serialized")
+    from repro.core import POAS
+    plan = POAS(dom).plan(SHAPE)
+    spec = plan.schedule.spec
+    assert spec is not None
+    rb = spec.rebase()
+    assert [(e.device, e.kind, e.start, e.end) for e in rb.events] == \
+        [(e.device, e.kind, e.start, e.end)
+         for e in plan.schedule.timeline.events]
+
+
+def test_spec_rebase_with_truth_keeps_planned_order():
+    """Replaying a plan under ground-truth models must keep the planned
+    ticket order even when the substituted models would re-rank devices."""
+    dom = GemmDomain(paper_mach1(), bus="serialized")
+    from repro.core import POAS
+    plan = POAS(dom).plan(SHAPE)
+    spec = plan.schedule.spec
+    truth = [throttled(d, 50.0) if d.name == "2080ti-tensor" else d
+             for d in spec.devices]
+    rb = spec.rebase(devices=truth)
+    assert rb.link_ticket_order() == plan.schedule.timeline.link_ticket_order()
+
+
+# --------------------------------------------------- observation pump -------
+
+def test_pump_feeds_compute_events():
+    devs = [_mk("a", 1.0), _mk("b", 2.0)]
+    dyn = DynamicScheduler(devs, bus="independent")
+    pump = ObservationPump(dyn, ["a", "b"])
+    tl = simulate_timeline(devs, [1e9, 2e9], 1, 1, topology="independent")
+    fed = pump.feed(tl, {"a": 1e9, "b": 2e9})
+    assert fed == 2
+    assert pump.observations == 2
+    # devices with no ops are skipped
+    assert pump.feed(tl, {"a": 0.0}) == 0
+
+
+def test_pump_time_scale_converts_to_model_seconds():
+    devs = [_mk("a", 1.0)]
+    dyn = DynamicScheduler(devs, bus="independent", min_obs=1)
+    pump = ObservationPump(dyn, ["a"], time_scale=0.1)
+    true_s = devs[0].compute(1e9)
+    pump.observe("a", 1e9, true_s * 0.1)   # wall time at 10% scale
+    # the rescale path should see ratio 1.0 -> model unchanged
+    assert dyn.devices[0].compute(1e9) == pytest.approx(true_s, rel=1e-9)
+
+
+# ------------------------------------------------- the loop (virtual) -------
+
+def _run(feedback, carry, truth=None, n_jobs=N_JOBS, max_inflight=2):
+    dom = GemmDomain(paper_mach1(), bus="serialized", dynamic=feedback)
+    rt = CoExecutionRuntime(dom, executor="virtual",
+                            truth=truth or _truth(),
+                            feedback=feedback, carry_clocks=carry,
+                            max_inflight=max_inflight)
+    try:
+        jobs = rt.run_stream([SHAPE] * n_jobs)
+        return rt, dom, jobs
+    finally:
+        rt.shutdown()
+
+
+def test_feedback_loop_beats_static_plan():
+    """Acceptance: >= 20 streamed GEMMs on paper_mach1, one device throttled
+    mid-stream — the feedback loop's total makespan beats the static plan's."""
+    rt_fb, _, jobs_fb = _run(feedback=True, carry=True)
+    rt_st, _, jobs_st = _run(feedback=False, carry=True)
+    assert len(jobs_fb) == N_JOBS
+    assert rt_fb.total_makespan() < rt_st.total_makespan() - 1e-9
+    assert verify_stream_invariants(jobs_fb) == []
+    assert verify_stream_invariants(jobs_st) == []
+
+
+def test_throttled_device_sheds_load_within_bounded_iterations():
+    """After the 2x throttle at job 6, the runtime must re-fit and shed the
+    throttled device's share within 4 jobs — with PlanCache epoch bumps
+    (invalidations) asserted along the way."""
+    rt, dom, jobs = _run(feedback=True, carry=True)
+    xpu = 2   # 2080ti-tensor index in paper_mach1
+    share0 = jobs[THROTTLE_AT - 1].plan.optimize.shares()[xpu]
+    shed = [j.uid for j in jobs[THROTTLE_AT:]
+            if j.plan.optimize.shares()[xpu] < 0.75 * share0]
+    assert shed, "throttled device never shed load"
+    assert min(shed) <= THROTTLE_AT + 4, \
+        f"shed only at job {min(shed)} (throttle at {THROTTLE_AT})"
+    # feedback loop bookkeeping: re-fits bumped the epoch and invalidated
+    # the plan cache; later plans were solved under a newer epoch
+    assert dom.dyn.epoch > 0
+    assert dom.dyn.window_resets >= 1      # change-point reset fired
+    assert rt.plan_cache.invalidations >= 1
+    assert jobs[-1].epoch_at_plan > jobs[0].epoch_at_plan
+
+
+def test_carry_clocks_improves_stream_makespan():
+    rt_on, _, jobs_on = _run(feedback=False, carry=True)
+    rt_off, _, jobs_off = _run(feedback=False, carry=False)
+    assert rt_on.total_makespan() <= rt_off.total_makespan() + 1e-12
+    # measured timelines in both modes satisfy the invariants
+    assert verify_stream_invariants(jobs_on) == []
+    assert verify_stream_invariants(jobs_off) == []
+
+
+def test_virtual_stream_invariants_across_plan_boundaries():
+    rt, _, jobs = _run(feedback=True, carry=True)
+    assert verify_stream_invariants(jobs) == []
+    # the whole stream shares one time axis and strictly serializes pcie
+    stream = rt.stream_timeline()
+    pcie = stream.link_events("pcie")
+    assert len(pcie) > N_JOBS          # several transfers per job
+    for a, b in zip(pcie, pcie[1:]):
+        assert b.start >= a.end - 1e-9
+
+
+# ------------------------------------------------- the loop (threads) -------
+
+def test_threaded_runtime_streams_jobs_with_invariants():
+    """The real StreamCore: persistent per-device workers + per-link ticket
+    buses surviving across plans.  Measured (wall-clock) timelines must pass
+    the same invariants, across plan boundaries."""
+    dom = GemmDomain(paper_mach1(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="threads", truth=_truth(at=3),
+                            feedback=True, carry_clocks=True,
+                            max_inflight=2) as rt:
+        jobs = rt.run_stream([SHAPE] * 6)
+        assert all(j.error is None for j in jobs)
+        assert verify_stream_invariants(jobs) == []
+        # the pump really fed the scheduler from measured timelines
+        assert rt.pump.observations > 0
+        assert dom.dyn.epoch > 0
+
+
+def test_threaded_refit_lands_while_plan_executes():
+    """Thread-safety: observe() re-fits land from completion threads while
+    the planner thread is mid-plan.  Hammer both paths; nothing may crash,
+    and every job must complete."""
+    dom = GemmDomain(paper_mach1(), bus="serialized", dynamic=True)
+    errors = []
+    stop = threading.Event()
+
+    def hammer():
+        i = 0
+        try:
+            while not stop.is_set():
+                dom.dyn.observe(i % 3, 1e9 * (1 + i % 4), 1e-3 * (1 + i % 7))
+                i += 1
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    try:
+        with CoExecutionRuntime(dom, executor="threads", truth=_truth(at=2),
+                                feedback=True, carry_clocks=True) as rt:
+            jobs = rt.run_stream([SHAPE] * 5)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert not errors, errors
+    assert all(j.error is None and j.measured is not None for j in jobs)
+    assert dom.dyn.epoch > 0
+
+
+def test_failing_done_callback_does_not_kill_device_worker():
+    """Regression: a raising JobHandle done-callback (the runtime's own
+    _complete chains into pump/refit/user listeners) ran unguarded on the
+    persistent device worker thread — killing it and hanging every later
+    job on that device.  The error must land on the handle instead."""
+    from repro.core import DeviceTask, StreamCore
+    core = StreamCore()
+    try:
+        task = [DeviceTask("dev", None, lambda: None, None)]
+        h1 = core.dispatch(task, {})
+        h1.add_done_callback(lambda h: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            h1.wait(10)
+        # the worker survived: a second job on the same device completes
+        h2 = core.dispatch(task, {})
+        h2.wait(10)
+    finally:
+        core.shutdown()
+
+
+def test_observation_error_does_not_wedge_runtime():
+    """A blowing-up refit listener must fail that job, not the runtime."""
+    dom = GemmDomain(paper_mach1(), bus="serialized", dynamic=True)
+
+    def boom():
+        raise RuntimeError("listener exploded")
+
+    dom.dyn.add_refit_listener(boom)
+    with CoExecutionRuntime(dom, executor="threads", truth=_truth(at=0),
+                            feedback=True) as rt:
+        j1 = rt.submit(SHAPE)
+        with pytest.raises(RuntimeError, match="listener exploded"):
+            j1.wait(30)
+        # the loop keeps going: in-flight slots were released
+        j2 = rt.submit(SHAPE)
+        j2._done.wait(30)
+        assert j2.done
+
+
+def test_threaded_runtime_propagates_task_errors():
+    dom = GemmDomain(paper_mach1(), bus="serialized")
+
+    def bad_factory(job, plan):
+        def boom():
+            raise RuntimeError("stage failed")
+        spec = plan.schedule.spec
+        return [  # claim only the fastest device; its compute explodes
+            __import__("repro.core", fromlist=["DeviceTask"]).DeviceTask(
+                device=spec.devices[2].name, copy_in=lambda: None,
+                compute=boom, copy_out=lambda: None)]
+
+    with CoExecutionRuntime(dom, executor="threads",
+                            task_factory=bad_factory) as rt:
+        job = rt.submit(SHAPE)
+        with pytest.raises(RuntimeError, match="stage failed"):
+            job.wait(30)
+        # the runtime survives a failed job: the next one still runs
+        ok = rt.submit(SHAPE)
+        with pytest.raises(RuntimeError, match="stage failed"):
+            ok.wait(30)
+
+
+# --------------------------------------- serving: continuous batching -------
+
+def _groups():
+    return [DeviceProfile("fast", "tpu-group", LinearTimeModel(a=1e-6),
+                          NO_COPY),
+            DeviceProfile("slow", "tpu-group", LinearTimeModel(a=3e-6),
+                          NO_COPY)]
+
+
+def _reqs(n, base=0, tok=24):
+    from repro.serving.engine import Request
+    return [Request(uid=base + i, tokens=np.arange(tok), max_new_tokens=8)
+            for i in range(n)]
+
+
+def test_dispatcher_admit_while_batch_in_flight():
+    from repro.serving.engine import PoasDispatcher
+    disp = PoasDispatcher(_groups(), dynamic=True)
+    disp.admit(*_reqs(10))
+    b1 = disp.dispatch_pending()
+    assert sum(len(b) for b in b1) == 10
+    # requests arriving "while the batch is in flight"
+    disp.admit(*_reqs(4, base=100))
+    assert disp.pending == 4
+    b2 = disp.dispatch_pending()
+    assert sorted(r.uid for b in b2 for r in b) == [100, 101, 102, 103]
+    assert disp.pending == 0
+    assert disp.dispatch_pending() == [[], []]
+
+
+def test_dispatcher_measured_times_refit_group_models():
+    """Per-bucket measured times flow through the pump into group models:
+    a 'fast' replica that measures 4x slower sheds requests on the next
+    dispatch, and the PlanCache is invalidated (never serves the stale
+    packing)."""
+    from repro.serving.engine import PoasDispatcher
+    disp = PoasDispatcher(_groups(), dynamic=True)
+    disp.admit(*_reqs(30))
+    b1 = disp.dispatch_pending()
+    n_fast_1 = len(b1[0])
+    cache_inv0 = disp.poas.cache.invalidations
+    # the fast replica reports 4x its predicted bucket time, twice
+    for _ in range(2):
+        tok = sum(len(r.tokens) + r.max_new_tokens for r in b1[0])
+        disp.complete(0, b1[0], 4.0 * disp.groups[0].compute(tok))
+    assert disp.domain.dyn.epoch > 0
+    assert disp.poas.cache.invalidations > cache_inv0
+    disp.admit(*_reqs(30, base=200))
+    b2 = disp.dispatch_pending()
+    assert len(b2[0]) < n_fast_1      # shed load on the next dispatch
+
+
+def test_predicted_makespan_includes_copy_time():
+    """Satellite fix: predicted_makespan used to price g.compute(ops) only;
+    it must now agree with simulate_timeline on the domain topology (copy
+    time included for groups that have it)."""
+    from repro.serving.engine import PoasDispatcher
+    groups = [DeviceProfile("g0", "tpu-group", LinearTimeModel(a=1e-6),
+                            CopyModel(1e6, dtype_size=4)),   # slow feed
+              DeviceProfile("g1", "tpu-group", LinearTimeModel(a=1e-6),
+                            NO_COPY)]
+    disp = PoasDispatcher(groups)
+    reqs = _reqs(8)
+    buckets = disp.split(reqs)
+    pred = disp.predicted_makespan(buckets)
+    ops = [float(sum(len(r.tokens) + r.max_new_tokens for r in b))
+           for b in buckets]
+    tl = simulate_timeline(groups, ops, 1, 1,
+                           topology=disp.domain.topology)
+    assert pred == pytest.approx(tl.makespan, rel=1e-12)
+    # and it is strictly above the compute-only number when a bucket copies
+    compute_only = max(g.compute(c) for g, c in zip(groups, ops) if c > 0)
+    if ops[0] > 0:
+        assert pred > compute_only
+    # regression: callers may pass fewer buckets than groups (the old
+    # zip-based implementation tolerated it; the timeline path must too)
+    assert disp.predicted_makespan(buckets[:1]) <= pred
+
+
+def test_dispatcher_with_runtime_loop():
+    """The serving-dispatch domain streams through the same runtime as
+    GEMM: continuous batches, measured bucket times pumped back."""
+    from repro.serving.engine import RequestBatch, ServingDispatchDomain
+    dom = ServingDispatchDomain(_groups(), dynamic=True)
+    truth = truth_from_profiles(
+        _groups(), lambda uid, name: 3.0 if uid >= 3 and name == "fast"
+        else 1.0)
+    with CoExecutionRuntime(dom, executor="virtual", truth=truth,
+                            feedback=True, max_inflight=1) as rt:
+        jobs = rt.run_stream(
+            [RequestBatch(requests=tuple(_reqs(16, base=32 * i)))
+             for i in range(8)])
+    assert verify_stream_invariants(jobs) == []
+    # the throttled 'fast' group sheds tokens after the re-fit
+    share_pre = jobs[2].plan.optimize.shares()[0]
+    share_post = jobs[-1].plan.optimize.shares()[0]
+    assert share_post < share_pre
+
+
+# ----------------------------------------------- hetero: pump wiring --------
+
+def test_hetero_feed_step_timeline_and_mapping():
+    from repro.distributed.hetero import HeteroBatchScheduler, PodProfile
+    pods = [PodProfile("pod0", 256, 197e12, grain=16),
+            PodProfile("pod1", 256, 197e12, grain=16)]
+    s = HeteroBatchScheduler(pods, flops_per_token=6 * 12e9, seq_len=4096,
+                             dynamic=True)
+    split = s.plan(256)
+    # mapping form: pod1 3x slower
+    t0 = s.devices[0].compute(split.sizes[0] * 4096)
+    for _ in range(3):
+        fed = s.feed_step(split, {"pod0": t0, "pod1": 3.0 * t0})
+        assert fed == 2
+    split2 = s.plan(256)
+    assert split2.sizes[0] > split2.sizes[1]
+    assert s.pump.observations >= 6
+    # timeline form feeds the same pump
+    tl = simulate_timeline(s.devices, [x * 4096 for x in split2.sizes],
+                           1, 1, topology=s.domain.topology)
+    assert s.feed_step(split2, tl) == sum(1 for x in split2.sizes if x > 0)
