@@ -1,0 +1,167 @@
+"""Task-graph co-execution benchmark — the transformer-block case study,
+emitted as ``BENCH_graph.json`` (a CI artifact alongside the timeline and
+streaming benches).
+
+Three sections per machine (DESIGN.md §10):
+
+* **coexec** — the HEFT-style list schedule's makespan vs the best single
+  device for the transformer-block DAG (grouped QKV/attention heads →
+  projection → residual → grouped MLP).  Acceptance: DAG co-execution
+  speedup > 1.0 — the width the DAG exposes is work the divisible GEMM
+  domain cannot express.
+* **list_vs_naive** — rank/EFT list scheduling vs the naive topo-order
+  baseline (myopic fastest-device placement) on the same case study and on
+  a fork-join diamond.
+* **runtime** — a short stream of DAG jobs through ``CoExecutionRuntime``
+  (deterministic virtual time) with a mid-stream throttle: per-task
+  observations must re-fit the models and the dependency invariants must
+  hold on every measured timeline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import (CoExecutionRuntime, TaskGraphDomain, diamond,
+                        graph_finish_times, solve_list_schedule,
+                        transformer_block, truth_from_profiles,
+                        verify_graph_dependencies, verify_stream_invariants)
+
+from .common import MACHINES, emit, timed
+
+OUT_PATH = os.environ.get("BENCH_GRAPH_PATH", "BENCH_graph.json")
+CASE_STUDY = dict(d_model=4096, seq=16384, ff_mult=4, groups=8)
+RUNTIME_BLOCK = dict(d_model=1024, seq=2048, groups=4)
+N_JOBS = 8
+THROTTLE_AT = 3
+THROTTLE = 3.0
+
+
+def _best_single(devs, g, order) -> tuple[str, float]:
+    singles = {d.name: max(graph_finish_times(
+        devs, g.task_specs(), g.edge_indices(), [j] * len(g),
+        topology="serialized", order=order)) for j, d in enumerate(devs)}
+    name = min(singles, key=singles.get)
+    return name, singles[name]
+
+
+def coexec_rows(machine: str) -> dict:
+    devs = MACHINES[machine]()
+    g = transformer_block(**CASE_STUDY)
+    res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                              bus="serialized")
+    single_name, single_t = _best_single(devs, g, res.order)
+    cp_ops, _ = g.critical_path()
+    assignment = {}
+    for i, a in enumerate(res.assign):
+        assignment.setdefault(devs[a].name, []).append(g.nodes[i].name)
+    return {
+        "case_study": CASE_STUDY,
+        "n_tasks": len(g),
+        "total_tops": g.total_ops() / 1e12,
+        "critical_path_ops_fraction": cp_ops / g.total_ops(),
+        "coexec_makespan_s": res.makespan,
+        "best_single_device": single_name,
+        "best_single_makespan_s": single_t,
+        "speedup_vs_best_single": single_t / res.makespan,
+        "tasks_per_device": {k: len(v) for k, v in assignment.items()},
+    }
+
+
+def naive_rows(machine: str) -> dict:
+    devs = MACHINES[machine]()
+    out = {}
+    for key, g in (("transformer_block", transformer_block(**CASE_STUDY)),
+                   ("diamond", diamond(ops=5e11, bytes_per_edge=32e6,
+                                       width=4))):
+        smart = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                    bus="serialized")
+        naive = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                    bus="serialized", priority="topo",
+                                    refine=False)
+        out[key] = {
+            "list_makespan_s": smart.makespan,
+            "naive_topo_makespan_s": naive.makespan,
+            "list_vs_naive_speedup": naive.makespan / smart.makespan,
+        }
+    return out
+
+
+def runtime_rows(machine: str) -> dict:
+    base = MACHINES[machine]()
+    throttled_dev = max(base, key=lambda d: d.effective_speed).name
+    truth = truth_from_profiles(
+        base, lambda uid, name: THROTTLE
+        if uid >= THROTTLE_AT and name == throttled_dev else 1.0)
+    g = transformer_block(**RUNTIME_BLOCK)
+    dom = TaskGraphDomain(MACHINES[machine](), bus="serialized",
+                          dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual", truth=truth,
+                            feedback=True, max_inflight=1) as rt:
+        jobs = rt.run_stream([g] * N_JOBS)
+        stats = rt.stats()
+        violations = list(verify_stream_invariants(jobs))
+        for j in jobs:
+            violations += verify_graph_dependencies(j.plan.schedule.spec,
+                                                    j.measured)
+    return {
+        "n_jobs": N_JOBS,
+        "throttled_device": throttled_dev,
+        "throttle_at": THROTTLE_AT,
+        "throttle_factor": THROTTLE,
+        "observations": stats["observations"],
+        "refit_epoch": stats["refit_epoch"],
+        "total_makespan_s": stats["total_makespan_s"],
+        "invariant_violations": violations,
+    }
+
+
+def main() -> None:
+    report: dict = {"machines": {}}
+    for machine in MACHINES:
+        coexec, t_c = timed(coexec_rows, machine, repeats=1)
+        naive, t_n = timed(naive_rows, machine, repeats=1)
+        runtime, t_r = timed(runtime_rows, machine, repeats=1)
+        report["machines"][machine] = {"coexec": coexec,
+                                       "list_vs_naive": naive,
+                                       "runtime": runtime}
+        emit(f"graph_coexec_{machine}", t_c * 1e6,
+             f"speedup={coexec['speedup_vs_best_single']:.3f}x "
+             f"vs {coexec['best_single_device']}")
+        emit(f"graph_list_vs_naive_{machine}", t_n * 1e6,
+             "block="
+             f"{naive['transformer_block']['list_vs_naive_speedup']:.3f}x "
+             f"diamond={naive['diamond']['list_vs_naive_speedup']:.3f}x")
+        emit(f"graph_runtime_{machine}", t_r * 1e6,
+             f"obs={runtime['observations']} "
+             f"refits={runtime['refit_epoch']} "
+             f"viol={len(runtime['invariant_violations'])}")
+
+    report["acceptance"] = {
+        "coexec_beats_best_single": all(
+            m["coexec"]["speedup_vs_best_single"] > 1.0
+            for m in report["machines"].values()),
+        "list_no_worse_than_naive": all(
+            row["list_vs_naive_speedup"] >= 1.0
+            for m in report["machines"].values()
+            for row in m["list_vs_naive"].values()),
+        "runtime_refits_on_per_task_obs": all(
+            m["runtime"]["refit_epoch"] > 0
+            for m in report["machines"].values()),
+        "invariants_clean": all(
+            not m["runtime"]["invariant_violations"]
+            for m in report["machines"].values()),
+    }
+    assert report["acceptance"]["coexec_beats_best_single"], \
+        "DAG co-execution did not beat the best single device"
+    assert report["acceptance"]["list_no_worse_than_naive"]
+    assert report["acceptance"]["runtime_refits_on_per_task_obs"]
+    assert report["acceptance"]["invariants_clean"]
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("graph_report", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,24 +12,37 @@ Sections:
               (timeline; writes BENCH_timeline.json — uploaded in CI)
   §Stream   — feedback loop vs static plan, plan-carry-over overlap
               (streaming; writes BENCH_streaming.json — uploaded in CI)
+  §Graph    — DAG co-execution vs best single device, list-schedule vs
+              naive topo order (graph; writes BENCH_graph.json — uploaded
+              in CI)
+
+A failing section is reported as ``name,0,ERROR`` and the driver keeps
+going, but the failure is collected and the process exits non-zero — CI
+must not pass on broken benchmarks.
 """
 from __future__ import annotations
 
+import sys
 import traceback
 
 
 def main() -> None:
-    from . import (exec_time, plan_cache, prediction_accuracy, roofline,
-                   speedup, streaming, timeline, work_distribution)
+    from . import (exec_time, graph, plan_cache, prediction_accuracy,
+                   roofline, speedup, streaming, timeline, work_distribution)
+    failures: list[str] = []
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline, plan_cache, timeline, streaming):
+                roofline, plan_cache, timeline, streaming, graph):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
             mod.main()
-        except Exception:  # noqa: BLE001 - report and continue
+        except Exception:  # noqa: BLE001 - report, continue, fail at exit
             print(f"{name},0,ERROR")
             traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED sections: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,13 @@ Public API:
     Domain, PlanCache, register_domain, get_domain, list_domains
     OverlappedExecutor, DeviceTask
     POAS, GemmWorkload, GemmDomain, make_gemm_poas, HGemms
+    TaskGraph, TaskNode, TaskGraphDomain, solve_list_schedule,
+    build_graph_timeline, transformer_block, CoExecutionRuntime
 """
-from .bus import (BusEvent, BusTopology, ClockState, Link, Timeline,
-                  TimelineSpec, build_timeline, carry_clocks,
-                  engine_finish_times)
+from .bus import (BusEvent, BusTopology, ClockState, GraphTimelineSpec,
+                  Link, TaskSpec, Timeline, TimelineSpec,
+                  build_graph_timeline, build_timeline, carry_clocks,
+                  engine_finish_times, graph_finish_times)
 from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            RooflineTimeModel, paper_mach1, paper_mach2,
                            priority_order, tpu_group, with_pipeline,
@@ -21,12 +24,15 @@ from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            TPU_VMEM_BYTES)
 from .predict import (Profiler, fit_linear, host_cpu_runner, load_profiles,
                       relative_error, rmse, save_profiles, simulated_runner)
-from .optimize import (OptimizeResult, solve_analytic, solve_bisection,
+from .optimize import (GraphScheduleResult, OptimizeResult, solve_analytic,
+                       solve_bisection, solve_list_schedule,
                        solve_local_search)
 from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
                     ops_to_mnk, squareness)
 from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
-                       simulate_timeline)
+                       simulate_graph_timeline, simulate_timeline)
+from .graph import (GraphPlan, TaskGraph, TaskGraphDomain, TaskNode,
+                    diamond, transformer_block, verify_graph_dependencies)
 from .domain import (Domain, FunctionDomain, PlanCache, Workload,
                      device_signature, get_domain, list_domains,
                      register_domain)
@@ -64,4 +70,9 @@ __all__ = [
     "CoExecutionRuntime", "ObservationPump", "StreamJob",
     "model_sleep_tasks", "throttled", "truth_from_profiles",
     "verify_stream_invariants",
+    "GraphTimelineSpec", "TaskSpec", "build_graph_timeline",
+    "graph_finish_times", "GraphScheduleResult", "solve_list_schedule",
+    "simulate_graph_timeline",
+    "GraphPlan", "TaskGraph", "TaskGraphDomain", "TaskNode", "diamond",
+    "transformer_block", "verify_graph_dependencies",
 ]

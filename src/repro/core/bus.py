@@ -39,6 +39,16 @@ timeline may start from **carried-over clocks** (``ClockState``) instead of
 t = 0, so plan k+1's input copies queue behind plan k's tail on each link
 while its devices wait only for their *own* previous work — back-to-back
 plans overlap exactly the way a single plan's devices do.
+
+A fourth generalization backs task-graph workloads (DESIGN.md §10): the
+same clocks also price **precedence-constrained DAGs**
+(``build_graph_timeline`` / ``graph_finish_times``), where an event may
+depend on another event's finish, not just its device/link clock — a
+cross-device dependency edge becomes link copies (producer staged to host
+once, each consumer reading over its own in-link), a same-device edge is
+free.  Events carry the owning task's name, so the executor's per-link
+ticket order, the invariant checks, and the per-task observation pump all
+read the one engine.
 """
 from __future__ import annotations
 
@@ -62,6 +72,9 @@ class BusEvent:
     end: float
     link: str | None = None   # serialization link the event occupied
     chunk: int = 0            # pipeline chunk index (0 when unchunked)
+    # Task-graph timelines attribute every event to a named task (None for
+    # the divisible-workload engine, where a device runs exactly one unit).
+    task: str | None = None
 
     @property
     def duration(self) -> float:
@@ -101,32 +114,39 @@ class Timeline:
         return sorted((e for e in self.events if e.link == link),
                       key=lambda e: (e.start, e.end))
 
-    def _copy_tickets(self) -> list[tuple[str, tuple[str, str]]]:
-        """(link, (device, kind)) in grant order: copy events sorted by
-        start (ties: copy_in before copy_out, then chunk), chunk events
-        collapsed to one ticket per stage."""
-        out: list[tuple[str, tuple[str, str]]] = []
-        seen: set[tuple[str, str]] = set()
+    def task_events(self, task: str) -> list[BusEvent]:
+        return [e for e in self.events if e.task == task]
+
+    def _copy_tickets(self) -> list[tuple[str, tuple]]:
+        """(link, ticket) in grant order: copy events sorted by start
+        (ties: copy_in before copy_out, then chunk), chunk/multi-input
+        events collapsed to one ticket per stage.  Tickets are
+        ``(device, kind)`` for divisible timelines and
+        ``(task, device, kind)`` for task-graph timelines (a device runs
+        many tasks, each with its own grant slot)."""
+        out: list[tuple[str, tuple]] = []
+        seen: set[tuple] = set()
         copies = sorted((e for e in self.events if e.kind != "compute"),
                         key=lambda e: (e.start, 0 if e.kind == "copy_in"
                                        else 1, e.chunk))
         for e in copies:
-            ticket = (e.device, e.kind)
+            ticket = (e.device, e.kind) if e.task is None \
+                else (e.task, e.device, e.kind)
             if ticket in seen:
                 continue
             seen.add(ticket)
             out.append((e.link or "bus", ticket))
         return out
 
-    def link_ticket_order(self) -> dict[str, list[tuple[str, str]]]:
-        """Per-link grant order of (device, kind) tickets — this is what
-        the overlapped executor's per-link ticket buses replay."""
-        out: dict[str, list[tuple[str, str]]] = {}
+    def link_ticket_order(self) -> dict[str, list[tuple]]:
+        """Per-link grant order of tickets — this is what the overlapped
+        executor's per-link ticket buses replay."""
+        out: dict[str, list[tuple]] = {}
         for link, ticket in self._copy_tickets():
             out.setdefault(link, []).append(ticket)
         return out
 
-    def ticket_order(self) -> list[tuple[str, str]]:
+    def ticket_order(self) -> list[tuple]:
         """Flat grant order across all links (per-link truth above)."""
         return [ticket for _, ticket in self._copy_tickets()]
 
@@ -344,6 +364,29 @@ def _out_time(d: DeviceProfile, link: Link | None, c: float,
     return d.copy.out_bytes(c, n, k) / bw
 
 
+def _link_bw(d: DeviceProfile, link: Link | None) -> float:
+    bw = d.copy.bandwidth_bytes_per_s
+    if link is not None and link.bandwidth_bytes_per_s is not None:
+        bw = min(bw, link.bandwidth_bytes_per_s)
+    return bw
+
+
+def _bytes_in_time(d: DeviceProfile, link: Link | None, nbytes: float) -> float:
+    """Host->device time for raw ``nbytes`` (task-graph copies are byte-
+    denominated, not GEMM-shaped) under the device model capped by the link."""
+    bw = _link_bw(d, link)
+    if nbytes <= 0.0 or math.isinf(bw):
+        return 0.0
+    return nbytes / bw + d.copy.latency_s
+
+
+def _bytes_out_time(d: DeviceProfile, link: Link | None, nbytes: float) -> float:
+    bw = _link_bw(d, link)
+    if nbytes <= 0.0 or math.isinf(bw):
+        return 0.0
+    return nbytes / bw
+
+
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
@@ -532,3 +575,275 @@ class TimelineSpec:
 
     def ops_by_device(self) -> dict[str, float]:
         return {d.name: float(c) for d, c in zip(self.devices, self.ops)}
+
+
+# ---------------------------------------------------------------------------
+# Task-graph engine — precedence-constrained DAGs on the same clocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One DAG task as the engine sees it: an op count plus byte counts.
+
+    ``in_bytes`` is the task's *external* (host-resident) input — weights,
+    graph inputs; data produced by upstream tasks travels on the edges and
+    is priced from the producer's ``out_bytes``.  ``out_bytes`` is what the
+    task emits: it is copied back to host when the task is a sink or feeds
+    a consumer on another device (the host-staged transfer of the paper's
+    bus model), and read over the consumer's input link per cross-device
+    edge."""
+
+    name: str
+    ops: float
+    in_bytes: float = 0.0
+    out_bytes: float = 0.0
+
+
+def _graph_topo_order(n: int, edges: Sequence[tuple[int, int]]) -> list[int]:
+    """Kahn topological order, stable by task index (callers validate
+    acyclicity; a cycle here raises)."""
+    indeg = [0] * n
+    children: list[list[int]] = [[] for _ in range(n)]
+    for u, v in edges:
+        indeg[v] += 1
+        children[u].append(v)
+    ready = [i for i in range(n) if indeg[i] == 0]
+    out: list[int] = []
+    while ready:
+        i = min(ready)
+        ready.remove(i)
+        out.append(i)
+        for c in children[i]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                ready.append(c)
+    if len(out) != n:
+        raise ValueError("task graph contains a cycle")
+    return out
+
+
+def _simulate_graph(devices: Sequence[DeviceProfile],
+                    tasks: Sequence[TaskSpec],
+                    edges: Sequence[tuple[int, int]],
+                    assign: Sequence[int], topo: BusTopology,
+                    order: Sequence[int],
+                    events: list[BusEvent] | None,
+                    clocks: ClockState = ZERO_CLOCKS) -> list[float]:
+    """One pass over a task graph's event graph.  Returns per-task finish
+    times (0 for tasks with ``assign[i] < 0`` — the list scheduler prices
+    partial assignments during device selection); appends ``BusEvent``s
+    when ``events`` is a list.
+
+    Semantics (the Fig. 2 rules, generalized to precedence edges):
+
+      * ``order`` must be a topological linearization; each link's clock
+        advances in that order, so the executor can replay the grant
+        sequence without deadlock (a ticket never waits on a later one);
+      * a task's external input copy serializes on its device's in-link;
+      * a cross-device edge u→v becomes link copies: u's output is staged
+        to host once (one ``copy_out`` on u's out-link, shared by all
+        cross-device consumers and by the sink return), then each consumer
+        reads it over its own in-link (``copy_in`` depending on the stage
+        copy's finish, not just the link clock) — same-device edges are
+        free (the data never leaves device memory);
+      * compute starts at max(device clock, every input landed); no-copy
+        devices (the host) read staged data the moment the producer's
+        copy_out ends;
+      * a sink task's output returns to host after its compute.
+
+    ``clocks`` starts the world from carried-over link/device clocks
+    exactly as the divisible engine does, so graph plans chain into the
+    streaming runtime unchanged.
+    """
+    n_tasks = len(tasks)
+    parents: list[list[int]] = [[] for _ in range(n_tasks)]
+    children: list[list[int]] = [[] for _ in range(n_tasks)]
+    for u, v in edges:
+        parents[v].append(u)
+        children[u].append(v)
+
+    scheduled = [i for i in order if assign[i] >= 0]
+    placed = set(scheduled)
+    finish = [0.0] * n_tasks
+    compute_end = [0.0] * n_tasks
+    avail = [0.0] * n_tasks       # when the task's output is host-resident
+    lclock: dict[str, float] = {}  # per-link clock
+    dclock: dict[str, float] = {}  # per-device compute clock
+
+    def link_clock(name: str) -> float:
+        return lclock.get(name, clocks.link(name))
+
+    def dev_clock(name: str) -> float:
+        return dclock.get(name, clocks.device(name))
+
+    def _needs_out(i: int) -> bool:
+        if tasks[i].out_bytes <= 0.0:
+            return False
+        d = devices[assign[i]]
+        if not _has_copy(d):
+            return False   # host output is already host-resident
+        kids = [c for c in children[i] if c in placed]
+        if not kids:       # sink (or all consumers unscheduled): return C
+            return True
+        return any(assign[c] != assign[i] for c in kids)
+
+    for i in scheduled:
+        t, d = tasks[i], devices[assign[i]]
+        in_link = topo.link_of(d.name, "in")
+        in_lname = in_link.name if in_link is not None else f"~{d.name}"
+        ready: list[float] = []
+        chunk = 0
+
+        # external (host) input bytes
+        if t.in_bytes > 0.0 and _has_copy(d):
+            dur = _bytes_in_time(d, in_link, t.in_bytes)
+            s = link_clock(in_lname)
+            if events is not None:
+                events.append(BusEvent(d.name, "copy_in", s, s + dur,
+                                       in_lname, chunk, t.name))
+            chunk += 1
+            lclock[in_lname] = s + dur
+            ready.append(s + dur)
+
+        # precedence edges
+        for u in parents[i]:
+            if u not in placed:
+                continue
+            if assign[u] == assign[i]:
+                ready.append(compute_end[u])   # same device: free
+                continue
+            if not _has_copy(d) or tasks[u].out_bytes <= 0.0:
+                ready.append(avail[u])         # host reads the staged copy
+                continue
+            dur = _bytes_in_time(d, in_link, tasks[u].out_bytes)
+            s = max(link_clock(in_lname), avail[u])
+            if events is not None:
+                events.append(BusEvent(d.name, "copy_in", s, s + dur,
+                                       in_lname, chunk, t.name))
+            chunk += 1
+            lclock[in_lname] = s + dur
+            ready.append(s + dur)
+
+        # compute
+        s = max(dev_clock(d.name), max(ready, default=0.0))
+        dur = d.compute(t.ops)
+        if events is not None:
+            events.append(BusEvent(d.name, "compute", s, s + dur, None, 0,
+                                   t.name))
+        dclock[d.name] = s + dur
+        compute_end[i] = s + dur
+        finish[i] = s + dur
+        avail[i] = s + dur   # no-copy device: output is host-resident now
+
+        # staged / returned output
+        if _needs_out(i):
+            out_link = topo.link_of(d.name, "out")
+            out_lname = out_link.name if out_link is not None else f"~{d.name}"
+            dur = _bytes_out_time(d, out_link, t.out_bytes)
+            s = max(link_clock(out_lname), compute_end[i])
+            if events is not None:
+                events.append(BusEvent(d.name, "copy_out", s, s + dur,
+                                       out_lname, 0, t.name))
+            lclock[out_lname] = s + dur
+            avail[i] = s + dur
+            finish[i] = s + dur
+    return finish
+
+
+def build_graph_timeline(devices: Sequence[DeviceProfile],
+                         tasks: Sequence[TaskSpec],
+                         edges: Sequence[tuple[int, int]],
+                         assign: Sequence[int], *,
+                         topology: BusTopology | str | None = None,
+                         order: Sequence[int] | None = None,
+                         clocks: ClockState = ZERO_CLOCKS) -> Timeline:
+    """The unified event-graph timeline for a task graph — what the list
+    scheduler prices, ``simulate_graph_timeline`` returns, and the
+    executor's per-link ticket order is derived from."""
+    topo = BusTopology.from_spec(topology, devices)
+    if order is None:
+        order = _graph_topo_order(len(tasks), edges)
+    events: list[BusEvent] = []
+    _simulate_graph(devices, tasks, edges, assign, topo, order, events,
+                    clocks)
+    return Timeline(events)
+
+
+def graph_finish_times(devices: Sequence[DeviceProfile],
+                       tasks: Sequence[TaskSpec],
+                       edges: Sequence[tuple[int, int]],
+                       assign: Sequence[int], *,
+                       topology: BusTopology | str | None = None,
+                       order: Sequence[int] | None = None,
+                       clocks: ClockState = ZERO_CLOCKS) -> list[float]:
+    """Per-task finish times from the same control flow as
+    ``build_graph_timeline``, without materializing events (the list
+    scheduler's device-selection hot path)."""
+    topo = BusTopology.from_spec(topology, devices)
+    if order is None:
+        order = _graph_topo_order(len(tasks), edges)
+    return _simulate_graph(devices, tasks, edges, assign, topo, order, None,
+                           clocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphTimelineSpec:
+    """The engine inputs a task-graph ``Schedule``'s timeline was built
+    from — the DAG analogue of ``TimelineSpec``, same contract: a runtime
+    can rebase the identical event graph onto carried-over clocks, or
+    re-price it under ground-truth device models, without knowing any
+    domain geometry.  ``order`` is the planned (topological) priority list;
+    replays must keep it, or the executor's ticket grant order would
+    diverge from the plan."""
+
+    devices: tuple[DeviceProfile, ...]
+    tasks: tuple[TaskSpec, ...]
+    edges: tuple[tuple[int, int], ...]
+    assign: tuple[int, ...]
+    order: tuple[int, ...]
+    topology: BusTopology
+
+    def rebase(self, clocks: ClockState = ZERO_CLOCKS, *,
+               devices: Sequence[DeviceProfile] | None = None) -> Timeline:
+        devs = list(devices) if devices is not None else list(self.devices)
+        return build_graph_timeline(devs, self.tasks, self.edges,
+                                    self.assign, topology=self.topology,
+                                    order=self.order, clocks=clocks)
+
+    def ops_by_device(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for t, a in zip(self.tasks, self.assign):
+            if a >= 0:
+                name = self.devices[a].name
+                out[name] = out.get(name, 0.0) + float(t.ops)
+        return out
+
+    def task_ops(self) -> list[tuple[str, str, float]]:
+        """(task, device, ops) per scheduled task — the per-task
+        observation surface the streaming runtime pumps back into the
+        Predict phase."""
+        return [(t.name, self.devices[a].name, float(t.ops))
+                for t, a in zip(self.tasks, self.assign) if a >= 0]
+
+    def parents_of(self) -> dict[str, tuple[str, ...]]:
+        """Task name -> upstream task names (the executor's cross-device
+        dependency wait list)."""
+        out: dict[str, list[str]] = {t.name: [] for t in self.tasks}
+        for u, v in self.edges:
+            out[self.tasks[v].name].append(self.tasks[u].name)
+        return {k: tuple(v) for k, v in out.items()}
+
+    def stage_seconds(self, devices: Sequence[DeviceProfile] | None = None
+                      ) -> dict[str, dict[str, float]]:
+        """Per-task summed stage durations (``{task: {kind: seconds}}``)
+        under ``devices`` (default: the planned models) — what a sleep-based
+        task factory prices its stages from."""
+        tl = self.rebase(devices=devices)
+        out: dict[str, dict[str, float]] = {}
+        for e in tl.events:
+            if e.task is None:  # pragma: no cover - graph events carry tasks
+                continue
+            kinds = out.setdefault(e.task, {})
+            kinds[e.kind] = kinds.get(e.kind, 0.0) + e.duration
+        return out

@@ -6,13 +6,15 @@ produces a DS-POAS (domain-specific POAS).  This module defines that binding
 point as a protocol, a process-wide registry of domain factories, and the
 ``PlanCache`` that memoizes solved plans across repeated ``plan()`` calls.
 
-Three domains ship with the repo (see DESIGN.md §3):
+Four domains ship with the repo (see DESIGN.md §3, §10):
 
 * ``gemm``             — heterogeneous GEMM (``core.framework.GemmDomain``)
 * ``serving-dispatch`` — request-batch dispatch across model replicas
                          (``serving.engine.ServingDispatchDomain``)
 * ``train-step``       — heterogeneous data-parallel batch split
                          (``distributed.hetero.TrainStepDomain``)
+* ``task-graph``       — precedence-constrained DAGs, list-scheduled
+                         (``core.graph.TaskGraphDomain``)
 """
 from __future__ import annotations
 
@@ -139,6 +141,7 @@ def list_domains() -> list[str]:
 def _ensure_builtin_domains() -> None:
     """Import the modules that register the shipped domains (idempotent)."""
     from . import framework  # noqa: F401  (registers "gemm")
+    from . import graph      # noqa: F401  (registers "task-graph")
     try:
         from ..serving import engine  # noqa: F401  ("serving-dispatch")
     except ImportError:  # pragma: no cover - serving needs jax models

@@ -46,7 +46,14 @@ class DeviceTask:
     device's chunks contiguously on its link) while a consumer thread
     computes chunk j as soon as chunk j has landed, which is the real
     copy/compute overlap the chunked timeline prices.  Output chunks run
-    after compute under the copy_out ticket."""
+    after compute under the copy_out ticket.
+
+    Task-graph form (DESIGN.md §10): ``task`` names the DAG task this
+    stage group runs (a device may run many tasks per job, each its own
+    ``DeviceTask``), and ``deps`` lists upstream task names — the worker
+    blocks on their completion events before starting any stage, so a task
+    never begins before every upstream task's outputs have landed, while
+    tickets still serialize the links in the engine's planned order."""
 
     device: str
     copy_in: Callable[[], None] | None
@@ -55,6 +62,8 @@ class DeviceTask:
     copy_in_chunks: Sequence[Callable[[], None]] | None = None
     compute_chunks: Sequence[Callable[[], None]] | None = None
     copy_out_chunks: Sequence[Callable[[], None]] | None = None
+    task: str | None = None
+    deps: tuple[str, ...] = ()
 
     @property
     def pipelined(self) -> bool:
@@ -65,6 +74,13 @@ class DeviceTask:
 
     def has_copy_out(self) -> bool:
         return self.copy_out is not None or bool(self.copy_out_chunks)
+
+    def ticket(self, kind: str) -> tuple:
+        """The engine's ticket for one of this task's stages —
+        ``(device, kind)`` for divisible plans, ``(task, device, kind)``
+        for task-graph plans (matches ``Timeline._copy_tickets``)."""
+        base = (self.device, kind)
+        return base if self.task is None else (self.task,) + base
 
 
 class TicketBus:
@@ -195,6 +211,17 @@ class JobHandle:
         return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
 
 
+class _TaskDone:
+    """Completion latch for one (job, task): set when the task's stage
+    group finished (``ok`` records whether it succeeded)."""
+
+    __slots__ = ("event", "ok")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.ok = False
+
+
 class _DeviceWorker(threading.Thread):
     """One long-lived worker per device: runs dispatched stage groups
     strictly in dispatch order (a device executes one plan at a time)."""
@@ -234,6 +261,9 @@ class StreamCore:
         # invariant checks) and grows with the stream; long-lived callers
         # that don't need the full history can snapshot and reset it.
         self._events: list[BusEvent] = []
+        # per-(job, task) completion: cross-device dependency waits for
+        # task-graph plans (entries dropped when the job completes)
+        self._task_done: dict[tuple[str, str], "_TaskDone"] = {}
         self._jobs = 0
         self._closed = False
         self._t0 = time.perf_counter()
@@ -255,8 +285,9 @@ class StreamCore:
             return b
 
     def _record(self, handle: JobHandle, device: str, kind: str, link: str | None,
-                start: float, end: float, chunk: int = 0) -> None:
-        ev = BusEvent(device, kind, start, end, link, chunk)
+                start: float, end: float, chunk: int = 0,
+                task: str | None = None) -> None:
+        ev = BusEvent(device, kind, start, end, link, chunk, task)
         with self._lock:
             self._events.append(ev)
         with handle._lock:
@@ -288,82 +319,138 @@ class StreamCore:
     # -- dispatch -----------------------------------------------------------
 
     def dispatch(self, tasks: Sequence[DeviceTask],
-                 link_order: Mapping[str, Sequence[tuple[str, str]]],
+                 link_order: Mapping[str, Sequence[tuple]],
                  *, job: str | None = None) -> JobHandle:
         """Admit one plan: ``link_order`` is the engine's per-link grant
         order (``Timeline.link_ticket_order``); tickets for stages the task
         list does not provide are skipped up front so they can never wedge
-        a bus.  Returns immediately with a ``JobHandle``."""
+        a bus.  Task-graph plans name their tasks (``DeviceTask.task``):
+        each gets a per-job completion latch, and a task with ``deps``
+        blocks on its upstream latches before running any stage.  Returns
+        immediately with a ``JobHandle``."""
         with self._lock:
             if self._closed:
                 raise RuntimeError("StreamCore is shut down")
             jid = job if job is not None else f"job{self._jobs}"
             self._jobs += 1
-        provided: set[tuple[str, str]] = set()
+        provided: set[tuple] = set()
+        named: list[tuple[str, str]] = []
         for t in tasks:
             if t.compute is None and not t.compute_chunks:
                 raise ValueError(f"task {t.device!r} has neither compute "
                                  "nor compute_chunks")
             if t.has_copy_in():
-                provided.add((t.device, "copy_in"))
+                provided.add(t.ticket("copy_in"))
             if t.has_copy_out():
-                provided.add((t.device, "copy_out"))
-        ticket_link: dict[tuple[str, str], str] = {}
+                provided.add(t.ticket("copy_out"))
+            if t.task is not None:
+                named.append((jid, t.task))
+        ticket_link: dict[tuple, str] = {}
         for link, seq in link_order.items():
-            kept = [(jid,) + tuple(tk) for tk in seq if tuple(tk) in provided]
-            for _, dev, kind in kept:
-                ticket_link[(dev, kind)] = link
+            kept = []
+            for tk in seq:
+                tk = tuple(tk)
+                if tk in provided:
+                    kept.append((jid,) + tk)
+                    ticket_link[tk] = link
             if kept:
                 self._bus(link).extend(kept)
         handle = JobHandle(jid, len(tasks))
+        if named:
+            with self._lock:
+                for key in named:
+                    self._task_done[key] = _TaskDone()
+            # all of a job's latches are released together when the job
+            # completes (dep waits are intra-job, so this is the earliest
+            # safe point) — the registry must not grow with the stream
+            handle.add_done_callback(lambda h: self._drop_latches(named))
         for t in tasks:
             self._worker(t.device).q.put(
                 lambda t=t: self._run_task(handle, jid, t, ticket_link))
         return handle
 
+    def _drop_latches(self, keys: Sequence[tuple[str, str]]) -> None:
+        with self._lock:
+            for key in keys:
+                self._task_done.pop(key, None)
+
+    def _await_deps(self, jid: str, task: DeviceTask) -> None:
+        """Block until every upstream task's stage group completed; raise
+        if one failed (the data this task needs never landed).  Deps not in
+        the registry are treated as satisfied — callers may legitimately
+        dispatch a subset of the planned tasks."""
+        for dep in task.deps:
+            with self._lock:
+                latch = self._task_done.get((jid, dep))
+            if latch is None:
+                continue
+            latch.event.wait()
+            if not latch.ok:
+                raise RuntimeError(f"upstream task {dep!r} failed; "
+                                   f"{task.task!r} cannot run")
+
     def run(self, tasks: Sequence[DeviceTask],
-            link_order: Mapping[str, Sequence[tuple[str, str]]],
+            link_order: Mapping[str, Sequence[tuple]],
             *, job: str | None = None) -> Timeline:
         """Dispatch one plan and block for its measured timeline."""
         return self.dispatch(tasks, link_order, job=job).wait()
 
     # -- per-device stage groups -------------------------------------------
 
-    def _acquire(self, jid: str, device: str, kind: str,
-                 ticket_link: Mapping[tuple[str, str], str]) -> tuple[TicketBus, tuple]:
-        link = ticket_link.get((device, kind))
+    def _acquire(self, jid: str, task: DeviceTask, kind: str,
+                 ticket_link: Mapping[tuple, str]) -> tuple[TicketBus, tuple]:
+        base = task.ticket(kind)
+        link = ticket_link.get(base)
         if link is None:
-            raise ValueError(f"ticket {(device, kind)} not in bus schedule")
+            raise ValueError(f"ticket {base} not in bus schedule")
         bus = self._bus(link)
-        ticket = (jid, device, kind)
+        ticket = (jid,) + base
         bus.acquire(ticket)
         return bus, ticket
 
     def _run_task(self, handle: JobHandle, jid: str, task: DeviceTask,
-                  ticket_link: Mapping[tuple[str, str], str]) -> None:
+                  ticket_link: Mapping[tuple, str]) -> None:
+        latch = None
+        if task.task is not None:
+            with self._lock:
+                latch = self._task_done.get((jid, task.task))
         try:
+            self._await_deps(jid, task)
             if task.pipelined:
                 self._run_pipelined(handle, jid, task, ticket_link)
             else:
                 self._run_staged(handle, jid, task, ticket_link)
+            if latch is not None:
+                latch.ok = True
         except BaseException as exc:  # surfaced via handle.wait()
-            # drop this device's remaining tickets *for this job* on every
-            # bus; later jobs' tickets stay (the worker thread survives)
+            # drop the failed stage group's remaining tickets on every bus
+            # so no grant sequence wedges; later jobs' tickets stay (the
+            # worker thread survives).  Divisible plans have one stage
+            # group per device; graph plans cancel per task — sibling
+            # tasks on the device still run (a downstream task that needed
+            # this one fails its own dependency wait and cancels itself).
+            if task.task is None:
+                pred = lambda t: t[0] == jid and t[-2] == task.device
+            else:
+                pred = lambda t: (t[0] == jid and len(t) == 4
+                                  and t[1] == task.task)
             with self._lock:
                 buses = list(self._buses.values())
             for bus in buses:
-                bus.cancel(lambda t: t[0] == jid and t[1] == task.device)
+                bus.cancel(pred)
             with handle._lock:
                 handle.errors.append(exc)
         finally:
+            if latch is not None:
+                latch.event.set()   # downstream waiters see ok=False on error
             handle._device_done()
 
     def _run_staged(self, handle: JobHandle, jid: str, task: DeviceTask,
-                    ticket_link: Mapping[tuple[str, str], str]) -> None:
+                    ticket_link: Mapping[tuple, str]) -> None:
         def stage(kind: str, fn: Callable[[], None], on_bus: bool) -> None:
             bus = ticket = None
             if on_bus:
-                bus, ticket = self._acquire(jid, task.device, kind, ticket_link)
+                bus, ticket = self._acquire(jid, task, kind, ticket_link)
             start = time.perf_counter() - self._t0
             try:
                 fn()
@@ -374,7 +461,8 @@ class StreamCore:
                 if bus is not None:
                     bus.release(ticket)
             self._record(handle, task.device, kind,
-                         ticket_link.get((task.device, kind)), start, end)
+                         ticket_link.get(task.ticket(kind)), start, end,
+                         task=task.task)
 
         if task.copy_in is not None:
             stage("copy_in", task.copy_in, on_bus=True)
@@ -383,7 +471,7 @@ class StreamCore:
             stage("copy_out", task.copy_out, on_bus=True)
 
     def _run_pipelined(self, handle: JobHandle, jid: str, task: DeviceTask,
-                       ticket_link: Mapping[tuple[str, str], str]) -> None:
+                       ticket_link: Mapping[tuple, str]) -> None:
         """Stream the chunked stages exactly as the engine prices them:
         the copy feeder holds the copy_in ticket across its chunks (the
         engine schedules them contiguously on the link) while the
@@ -411,7 +499,8 @@ class StreamCore:
                     start = time.perf_counter() - t0
                     fn()
                     self._record(handle, dev, "compute", None, start,
-                                 time.perf_counter() - t0, chunk=j)
+                                 time.perf_counter() - t0, chunk=j,
+                                 task=task.task)
                     computed.release()
             except BaseException as exc:
                 consumer_errs.append(exc)
@@ -424,15 +513,16 @@ class StreamCore:
 
         consumer = threading.Thread(target=consume, daemon=True)
         if in_chunks:
-            bus, ticket = self._acquire(jid, dev, "copy_in", ticket_link)
+            bus, ticket = self._acquire(jid, task, "copy_in", ticket_link)
             consumer.start()
             try:
                 for j, fn in enumerate(in_chunks):
                     start = time.perf_counter() - t0
                     fn()
                     self._record(handle, dev, "copy_in",
-                                 ticket_link.get((dev, "copy_in")), start,
-                                 time.perf_counter() - t0, chunk=j)
+                                 ticket_link.get(task.ticket("copy_in")),
+                                 start, time.perf_counter() - t0, chunk=j,
+                                 task=task.task)
                     landed.release()
             except BaseException:
                 # unblock the consumer before surfacing the error
@@ -444,7 +534,7 @@ class StreamCore:
         else:
             consumer.start()
         if out_chunks:
-            bus, ticket = self._acquire(jid, dev, "copy_out", ticket_link)
+            bus, ticket = self._acquire(jid, task, "copy_out", ticket_link)
             try:
                 for j, fn in enumerate(out_chunks):
                     computed.acquire()   # chunk j's matmul is done
@@ -453,8 +543,9 @@ class StreamCore:
                     start = time.perf_counter() - t0
                     fn()
                     self._record(handle, dev, "copy_out",
-                                 ticket_link.get((dev, "copy_out")), start,
-                                 time.perf_counter() - t0, chunk=j)
+                                 ticket_link.get(task.ticket("copy_out")),
+                                 start, time.perf_counter() - t0, chunk=j,
+                                 task=task.task)
             finally:
                 bus.release(ticket)
         consumer.join()

@@ -1,0 +1,365 @@
+"""Task-graph workloads — POAS for precedence-constrained DAGs (DESIGN.md §10).
+
+Every shipped domain so far assumes one *divisible* workload whose ops are
+split by share; the paper's claim that POAS "transforms any application"
+needs applications with internal structure.  This module adds that workload
+class end to end:
+
+* ``TaskGraph`` / ``TaskNode`` — a validated DAG of tasks (per-task op
+  counts, external input bytes, output bytes, precedence edges) that
+  implements the ``Workload`` protocol (``total_ops`` = sum over nodes)
+  with a structural ``cost_signature``, so the ``PlanCache`` works
+  unchanged;
+* ``TaskGraphDomain`` (registered as ``"task-graph"``) — the four POAS
+  phases for DAGs: Predict reuses the per-device models (re-fitted by the
+  ``DynamicScheduler`` under per-task observations), Optimize is the
+  HEFT-style ``solve_list_schedule`` priced on the unified timeline engine,
+  Adapt maps the assignment back to per-device task lists (``GraphPlan``),
+  Schedule emits a ``GraphTimelineSpec``-backed timeline the streaming
+  runtime rebase/executes like any other plan;
+* ``transformer_block`` — the case-study builder: a transformer block
+  (grouped QKV/attention heads → projection → residual → grouped MLP)
+  as a schedulable DAG across CPU/GPU/XPU, instead of one divisible matmul;
+* ``verify_graph_dependencies`` — the timeline invariant: no task's
+  compute starts before every upstream task's output has landed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Sequence
+
+from .bus import (BusTopology, GraphTimelineSpec, TaskSpec, Timeline,
+                  _graph_topo_order)
+from .device_model import DeviceProfile, priority_order
+from .domain import register_domain
+from .optimize import (GraphScheduleResult, OptimizeResult,
+                       solve_list_schedule)
+from .schedule import DynamicScheduler, Schedule
+
+
+# ---------------------------------------------------------------------------
+# The workload
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskNode:
+    """One task: ``ops`` multiply-accumulates, ``in_bytes`` of external
+    (host-resident) input — weights, graph inputs — and ``out_bytes`` of
+    produced data (what travels on out-edges / returns to host at sinks)."""
+
+    name: str
+    ops: float
+    in_bytes: float = 0.0
+    out_bytes: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """A validated precedence DAG implementing the ``Workload`` protocol.
+
+    ``edges`` are ``(producer_name, consumer_name)`` pairs.  Validation
+    (unique names, known endpoints, no self-edges, acyclicity) runs at
+    construction; ``topo_order`` / ``critical_path`` / ``cost_signature``
+    are the queries the solver, cache, and benchmarks need.
+    """
+
+    nodes: tuple[TaskNode, ...]
+    edges: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self) -> None:
+        names = [t.name for t in self.nodes]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate task names: {dup}")
+        index = {n: i for i, n in enumerate(names)}
+        for u, v in self.edges:
+            for end in (u, v):
+                if end not in index:
+                    raise ValueError(f"edge ({u!r}, {v!r}) references "
+                                     f"unknown task {end!r}")
+            if u == v:
+                raise ValueError(f"self-edge on task {u!r}")
+        object.__setattr__(self, "_index", index)
+        _graph_topo_order(len(self.nodes), self.edge_indices())  # acyclic?
+
+    # -- queries -------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def index(self, name: str) -> int:
+        return self._index[name]
+
+    def node(self, name: str) -> TaskNode:
+        return self.nodes[self._index[name]]
+
+    def edge_indices(self) -> tuple[tuple[int, int], ...]:
+        return tuple((self._index[u], self._index[v]) for u, v in self.edges)
+
+    def parents(self, name: str) -> tuple[str, ...]:
+        return tuple(u for u, v in self.edges if v == name)
+
+    def children(self, name: str) -> tuple[str, ...]:
+        return tuple(v for u, v in self.edges if u == name)
+
+    def total_ops(self) -> float:
+        return float(sum(t.ops for t in self.nodes))
+
+    def topo_order(self) -> list[int]:
+        return _graph_topo_order(len(self.nodes), self.edge_indices())
+
+    def critical_path(self) -> tuple[float, list[str]]:
+        """Ops-weighted longest path: the lower bound no schedule can beat
+        regardless of device count (returns total ops along it and the
+        task names)."""
+        n = len(self.nodes)
+        edges = self.edge_indices()
+        children: list[list[int]] = [[] for _ in range(n)]
+        for u, v in edges:
+            children[u].append(v)
+        length = [0.0] * n
+        nxt: list[int | None] = [None] * n
+        for i in reversed(self.topo_order()):
+            best, best_c = 0.0, None
+            for c in children[i]:
+                if length[c] > best:
+                    best, best_c = length[c], c
+            length[i] = self.nodes[i].ops + best
+            nxt[i] = best_c
+        start = max(range(n), key=lambda i: length[i])
+        path, i = [], start
+        while i is not None:
+            path.append(self.nodes[i].name)
+            i = nxt[i]
+        return length[start], path
+
+    def task_specs(self) -> tuple[TaskSpec, ...]:
+        return tuple(TaskSpec(t.name, float(t.ops), float(t.in_bytes),
+                              float(t.out_bytes)) for t in self.nodes)
+
+    def cost_signature(self) -> Hashable:
+        """Everything the solved plan depends on: per-task numbers plus the
+        edge structure (device models are keyed separately by the cache)."""
+        return (tuple((t.name, t.ops, t.in_bytes, t.out_bytes)
+                      for t in self.nodes), self.edges)
+
+
+# ---------------------------------------------------------------------------
+# Adapt output: the assignment in domain coordinates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPlan:
+    """Phase-3 output: which tasks each device runs, in planned order.
+
+    ``assignments`` maps device name -> task names (planned execution
+    order per device); ``assign``/``order`` are the solver coordinates the
+    schedule phase rebuilds the timeline from.  Frozen because instances
+    are shared across ``PlanCache`` hits.
+    """
+
+    assignments: tuple[tuple[str, tuple[str, ...]], ...]
+    assign: tuple[int, ...]
+    order: tuple[int, ...]
+
+    def tasks_of(self, device: str) -> tuple[str, ...]:
+        for name, tasks in self.assignments:
+            if name == device:
+                return tasks
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# The domain
+# ---------------------------------------------------------------------------
+
+
+@register_domain("task-graph")
+class TaskGraphDomain:
+    """DS-POAS for precedence-constrained task graphs."""
+
+    name = "task-graph"
+
+    def __init__(self, devices: Sequence[DeviceProfile], *,
+                 bus: str | BusTopology = "serialized",
+                 dynamic: bool = False, refine: bool = True):
+        self._devices = list(devices)
+        self.topology = BusTopology.from_spec(bus, self._devices)
+        self.bus = self.topology.spec
+        self.refine = refine
+        self.dyn = DynamicScheduler(self._devices, bus=self.topology) \
+            if dynamic else None
+
+    def predict(self) -> Sequence[DeviceProfile]:
+        return self.dyn.snapshot() if self.dyn is not None else self._devices
+
+    def optimize(self, devices: Sequence[DeviceProfile],
+                 w: TaskGraph) -> GraphScheduleResult:
+        return solve_list_schedule(devices, w.task_specs(),
+                                   w.edge_indices(), bus=self.topology,
+                                   refine=self.refine)
+
+    def adapt(self, devices: Sequence[DeviceProfile],
+              opt: GraphScheduleResult, w: TaskGraph) -> GraphPlan:
+        per_dev: dict[str, list[str]] = {d.name: [] for d in devices}
+        for i in opt.order:
+            per_dev[devices[opt.assign[i]].name].append(w.nodes[i].name)
+        return GraphPlan(
+            assignments=tuple((name, tuple(tasks))
+                              for name, tasks in per_dev.items()),
+            assign=tuple(opt.assign), order=tuple(opt.order))
+
+    def schedule(self, devices: Sequence[DeviceProfile], plan: GraphPlan,
+                 w: TaskGraph) -> Schedule:
+        spec = GraphTimelineSpec(devices=tuple(devices),
+                                 tasks=w.task_specs(),
+                                 edges=w.edge_indices(),
+                                 assign=plan.assign, order=plan.order,
+                                 topology=self.topology)
+        tl = spec.rebase()
+        ops = [0.0] * len(devices)
+        for i, a in enumerate(plan.assign):
+            ops[a] += float(w.nodes[i].ops)
+        finish = [tl.device_finish(d.name) for d in devices]
+        res = OptimizeResult(ops=ops, makespan=tl.makespan,
+                             finish_times=finish, bus=self.bus)
+        return Schedule(result=res, timeline=tl,
+                        priorities=priority_order(list(devices)), spec=spec)
+
+    def cost_signature(self, w: TaskGraph) -> Hashable:
+        return w.cost_signature()
+
+
+# ---------------------------------------------------------------------------
+# Case-study builder: a transformer block as a DAG
+# ---------------------------------------------------------------------------
+
+
+def transformer_block(*, d_model: int = 4096, seq: int = 4096,
+                      ff_mult: int = 4, groups: int = 4,
+                      dtype_size: int = 2, name: str = "block"
+                      ) -> TaskGraph:
+    """A transformer block (attention → residual → MLP) as a ``TaskGraph``.
+
+    The QKV projection, attention, and both MLP matmuls are split into
+    ``groups`` independent head/column groups — the DAG width co-execution
+    exploits (each group is a self-contained chain, so the list scheduler
+    can spread groups across devices while the projection/combine joins
+    keep the precedence structure honest).  Ops are multiply-accumulates;
+    bytes follow the activation/weight shapes at ``dtype_size``.
+
+    Shapes per group g (d = d_model, s = seq, f = ff_mult*d, G = groups):
+      qkv_g   (s,d)x(d,3d/G)   reads X + its weight slice, emits Q/K/V_g
+      attn_g  scores+mix       2*s*s*(d/G) ops over Q/K/V_g, emits (s,d/G)
+      proj    (s,d)x(d,d)      joins every attn_g, emits the residual input
+      res1    elementwise add  s*d cheap ops (host-friendly)
+      up_g    (s,d)x(d,f/G)    column-split first MLP matmul
+      down_g  (s,f/G)x(f/G,d)  row-split second matmul (partial sums)
+      combine sum of partials  joins every down_g, emits the block output
+    """
+    if groups < 1 or d_model % groups or (ff_mult * d_model) % groups:
+        raise ValueError("groups must divide d_model and ff_mult*d_model")
+    d, s, f, G = d_model, seq, ff_mult * d_model, groups
+    dg, fg = d // G, f // G
+    x_bytes = float(s * d * dtype_size)          # one (s, d) activation
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+
+    for g in range(G):
+        qkv = f"{name}.qkv{g}"
+        attn = f"{name}.attn{g}"
+        nodes.append(TaskNode(qkv, ops=float(s) * d * (3 * dg),
+                              in_bytes=x_bytes + d * (3 * dg) * dtype_size,
+                              out_bytes=float(s * 3 * dg * dtype_size)))
+        nodes.append(TaskNode(attn, ops=2.0 * s * s * dg,
+                              out_bytes=float(s * dg * dtype_size)))
+        edges.append((qkv, attn))
+        edges.append((attn, f"{name}.proj"))
+    nodes.append(TaskNode(f"{name}.proj", ops=float(s) * d * d,
+                          in_bytes=float(d * d * dtype_size),
+                          out_bytes=x_bytes))
+    nodes.append(TaskNode(f"{name}.res1", ops=float(s * d),
+                          in_bytes=x_bytes, out_bytes=x_bytes))
+    edges.append((f"{name}.proj", f"{name}.res1"))
+    for g in range(G):
+        up = f"{name}.up{g}"
+        down = f"{name}.down{g}"
+        nodes.append(TaskNode(up, ops=float(s) * d * fg,
+                              in_bytes=float(d * fg * dtype_size),
+                              out_bytes=float(s * fg * dtype_size)))
+        nodes.append(TaskNode(down, ops=float(s) * fg * d,
+                              in_bytes=float(fg * d * dtype_size),
+                              out_bytes=x_bytes))
+        edges.append((f"{name}.res1", up))
+        edges.append((up, down))
+        edges.append((down, f"{name}.combine"))
+    nodes.append(TaskNode(f"{name}.combine", ops=float(s * d * G),
+                          out_bytes=x_bytes))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
+def diamond(ops: float = 1e9, *, bytes_per_edge: float = 1e6,
+            width: int = 2, name: str = "dia") -> TaskGraph:
+    """The textbook fork-join DAG (source → ``width`` parallel branches →
+    sink) — the benchmark/test fixture where list scheduling visibly beats
+    naive single-device placement."""
+    nodes = [TaskNode(f"{name}.src", ops=ops / 10,
+                      in_bytes=bytes_per_edge, out_bytes=bytes_per_edge)]
+    edges: list[tuple[str, str]] = []
+    for i in range(width):
+        mid = f"{name}.mid{i}"
+        nodes.append(TaskNode(mid, ops=ops, out_bytes=bytes_per_edge))
+        edges.append((f"{name}.src", mid))
+        edges.append((mid, f"{name}.sink"))
+    nodes.append(TaskNode(f"{name}.sink", ops=ops / 10,
+                          out_bytes=bytes_per_edge))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
+# ---------------------------------------------------------------------------
+# Timeline invariant: dependencies respected
+# ---------------------------------------------------------------------------
+
+
+def verify_graph_dependencies(graph: TaskGraph | GraphTimelineSpec,
+                              timeline: Timeline, *,
+                              eps: float = 1e-9) -> list[str]:
+    """The DAG invariant on a (planned or measured) timeline: no task's
+    compute starts before every upstream task's output has landed —
+    upstream compute finished, and any copy feeding this task's device
+    completed.  Returns violations (empty = pass)."""
+    if isinstance(graph, GraphTimelineSpec):
+        edges = [(graph.tasks[u].name, graph.tasks[v].name)
+                 for u, v in graph.edges]
+    else:
+        edges = list(graph.edges)
+    problems: list[str] = []
+
+    def compute_span(task: str) -> tuple[float, float] | None:
+        evs = [e for e in timeline.task_events(task) if e.kind == "compute"]
+        if not evs:
+            return None
+        return min(e.start for e in evs), max(e.end for e in evs)
+
+    spans = {t: compute_span(t)
+             for t in {name for edge in edges for name in edge}}
+    for u, v in edges:
+        su, sv = spans[u], spans[v]
+        if su is None or sv is None:
+            continue   # task not executed (partial assignment)
+        if sv[0] < su[1] - eps:
+            problems.append(f"task {v!r} computes at {sv[0]:.6g} before "
+                            f"upstream {u!r} finished at {su[1]:.6g}")
+    # every copy feeding a consumer (its copy_in events) must land before
+    # that consumer computes — checked once per task, not once per edge
+    for v in {b for _, b in edges}:
+        sv = spans[v]
+        if sv is None:
+            continue
+        for e in timeline.task_events(v):
+            if e.kind == "copy_in" and sv[0] < e.end - eps:
+                problems.append(f"task {v!r} computes at {sv[0]:.6g} "
+                                f"before its input copy ended at {e.end:.6g}")
+    return problems

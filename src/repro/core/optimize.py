@@ -21,6 +21,13 @@ non-decreasing in ``c_x``, so we replace the external solver with:
 * ``solve_local_search`` — CSP fallback for arbitrary (non-convex) models,
   per the paper's §3.2 note that backtracking/local search handles models
   that are not linear/quadratic.
+* ``solve_list_schedule`` — the task-graph solver (DESIGN.md §10): the
+  divisible-workload MILP does not apply to precedence-constrained DAGs,
+  so work division becomes *device selection per task* — a HEFT-style list
+  scheduler (upward-rank priority, earliest-finish-time placement) whose
+  every candidate is priced on the same unified timeline engine, refined
+  by reassignment descent (the discrete analogue of ``_descend``) or, on
+  small instances, replaced outright by exhaustive enumeration.
 """
 from __future__ import annotations
 
@@ -28,7 +35,8 @@ import dataclasses
 import math
 from typing import Sequence
 
-from .bus import BusTopology, engine_finish_times
+from .bus import (BusTopology, TaskSpec, _graph_topo_order,
+                  engine_finish_times, graph_finish_times)
 from .device_model import DeviceProfile, priority_order
 
 _EPS = 1e-12
@@ -353,3 +361,202 @@ def solve_local_search(devices: Sequence[DeviceProfile], N: float, *,
     finish = _finish_times(devices, list(ops), n, k, bus, order)
     return OptimizeResult(list(ops), max(finish), finish, bus.spec,
                           iterations=it)
+
+
+# ---------------------------------------------------------------------------
+# HEFT-style list scheduler for task graphs (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphScheduleResult(OptimizeResult):
+    """``OptimizeResult`` plus the task-graph solution: which device each
+    task runs on (``assign``), the topological priority list the links are
+    serialized in (``order``), and per-task predicted finish times.  The
+    inherited ``ops`` are per-device op totals, so share-based consumers
+    (dynamic load shedding asserts, dashboards) work unchanged."""
+
+    assign: list[int] = dataclasses.field(default_factory=list)
+    order: list[int] = dataclasses.field(default_factory=list)
+    task_finish: list[float] = dataclasses.field(default_factory=list)
+
+
+def _upward_ranks(devices: Sequence[DeviceProfile],
+                  tasks: Sequence[TaskSpec],
+                  edges: Sequence[tuple[int, int]]) -> list[float]:
+    """HEFT upward rank: mean compute cost plus the most expensive
+    downstream chain, edges priced at the mean staged-transfer cost.
+    Device-independent, so the priority list is fixed before placement."""
+    n = len(tasks)
+    children: list[list[int]] = [[] for _ in range(n)]
+    for u, v in edges:
+        children[u].append(v)
+    wbar = [sum(d.compute(t.ops) for d in devices) / len(devices)
+            for t in tasks]
+    copiers = [d for d in devices
+               if not math.isinf(d.copy.bandwidth_bytes_per_s)]
+
+    def cbar(u: int) -> float:
+        if not copiers or tasks[u].out_bytes <= 0.0:
+            return 0.0
+        return sum(2.0 * tasks[u].out_bytes / d.copy.bandwidth_bytes_per_s
+                   + d.copy.latency_s for d in copiers) / len(copiers)
+
+    rank = [0.0] * n
+    for i in reversed(_graph_topo_order(n, edges)):
+        tail = max((cbar(i) + rank[c] for c in children[i]), default=0.0)
+        rank[i] = wbar[i] + tail
+    return rank
+
+
+def _rank_order(devices: Sequence[DeviceProfile], tasks: Sequence[TaskSpec],
+                edges: Sequence[tuple[int, int]]) -> list[int]:
+    """Decreasing upward rank, ties broken by topological position (so the
+    order is always a valid linearization even under zero-cost ties)."""
+    topo_pos = {i: p for p, i in
+                enumerate(_graph_topo_order(len(tasks), edges))}
+    rank = _upward_ranks(devices, tasks, edges)
+    return sorted(range(len(tasks)), key=lambda i: (-rank[i], topo_pos[i]))
+
+
+def _descend_assign(devices: Sequence[DeviceProfile],
+                    tasks: Sequence[TaskSpec],
+                    edges: Sequence[tuple[int, int]],
+                    assign: list[int], order: Sequence[int],
+                    topo: BusTopology, *, max_evals: int = 2000
+                    ) -> tuple[list[int], int]:
+    """Reassignment descent on the exact graph makespan — ``_descend``'s
+    pairwise-transfer loop in discrete per-task coordinates: move one task
+    to another device, keep any strict improvement, repeat to a local
+    optimum."""
+    def makespan(a: Sequence[int]) -> float:
+        return max(graph_finish_times(devices, tasks, edges, a,
+                                      topology=topo, order=order))
+
+    best = makespan(assign)
+    evals = 1
+    improved = True
+    while improved and evals < max_evals:
+        improved = False
+        for i in range(len(tasks)):
+            for j in range(len(devices)):
+                if j == assign[i]:
+                    continue
+                cand = list(assign)
+                cand[i] = j
+                t = makespan(cand)
+                evals += 1
+                if t < best - _EPS:
+                    assign, best, improved = cand, t, True
+    return assign, evals
+
+
+def solve_list_schedule(devices: Sequence[DeviceProfile],
+                        tasks: Sequence[TaskSpec],
+                        edges: Sequence[tuple[int, int]], *,
+                        bus: str | BusTopology = "serialized",
+                        priority: str = "rank",
+                        refine: bool = True,
+                        exhaustive_limit: int = 1024) -> GraphScheduleResult:
+    """Minimize a task graph's makespan by list scheduling on the engine.
+
+    HEFT shape: tasks are placed in decreasing upward-rank order
+    (``priority="rank"``); each is assigned the device giving it the
+    earliest engine finish time over the partial schedule — so link
+    queueing, host staging of cross-device edges, and carried clocks are
+    priced exactly as the simulator reports and the executor replays.
+    ``priority="topo"`` is the naive baseline: plain topological order
+    with myopic device selection (each task alone on an empty timeline —
+    ignores contention and edge locality), the benchmark's strawman.
+
+    Refinement: when the assignment space is small
+    (``len(devices)**len(tasks) <= exhaustive_limit``) the solver
+    enumerates every assignment under the same priority order and returns
+    the exact optimum; otherwise reassignment descent polishes the HEFT
+    placement to a local optimum on the same engine makespan.
+    """
+    topo = BusTopology.from_spec(bus, devices)
+    spec = bus.spec if isinstance(bus, BusTopology) else topo.spec
+    n = len(tasks)
+    if n == 0:
+        z = [0.0] * len(devices)
+        return GraphScheduleResult(z, 0.0, z, spec)
+    if priority == "rank":
+        order = _rank_order(devices, tasks, edges)
+    elif priority == "topo":
+        order = _graph_topo_order(n, edges)
+    else:
+        raise ValueError(f"unknown priority {priority!r} "
+                         "(expected 'rank' or 'topo')")
+
+    assign = [-1] * n
+    evals = 0
+    for pos, i in enumerate(order):
+        prefix = order[: pos + 1]
+        best_j, best_t = 0, math.inf
+        for j in range(len(devices)):
+            assign[i] = j
+            if priority == "topo":
+                # myopic: the task alone, an empty timeline
+                solo = [-1] * n
+                solo[i] = j
+                t = graph_finish_times(devices, tasks, edges, solo,
+                                       topology=topo, order=[i])[i]
+            else:
+                t = graph_finish_times(devices, tasks, edges, assign,
+                                       topology=topo, order=prefix)[i]
+            evals += 1
+            if t < best_t - _EPS:
+                best_j, best_t = j, t
+        assign[i] = best_j
+
+    def makespan(a) -> float:
+        return max(graph_finish_times(devices, tasks, edges, a,
+                                      topology=topo, order=order))
+
+    if refine:
+        if len(devices) ** n <= exhaustive_limit:
+            import itertools
+
+            best_a, best_t = list(assign), makespan(assign)
+            evals += 1
+            for cand in itertools.product(range(len(devices)), repeat=n):
+                t = makespan(cand)
+                evals += 1
+                if t < best_t - _EPS:
+                    best_a, best_t = list(cand), t
+            assign = best_a
+        else:
+            # Descend from the EFT placement AND from every degenerate
+            # all-one-device assignment (the §3.4.3 caveat, in DAG form):
+            # EFT's greedy early finishes can strand the schedule in a
+            # local optimum *worse* than the best single device, and
+            # single-task moves cannot escape it (moving one task of a
+            # chain adds edge copies before its neighbours follow).
+            # Seeding from the degenerate points both restores the
+            # never-worse-than-one-device floor and lets the descent peel
+            # whole chains off the fastest device one improvement at a
+            # time.
+            seeds = [list(assign)] + [[j] * n for j in range(len(devices))]
+            best_a, best_t = None, math.inf
+            for seed in seeds:
+                cand, e = _descend_assign(devices, tasks, edges, seed,
+                                          order, topo)
+                evals += e
+                t = makespan(cand)
+                if t < best_t - _EPS:
+                    best_a, best_t = cand, t
+            assign = best_a
+
+    task_finish = graph_finish_times(devices, tasks, edges, assign,
+                                     topology=topo, order=order)
+    ops = [0.0] * len(devices)
+    dev_finish = [0.0] * len(devices)
+    for i, t in enumerate(tasks):
+        ops[assign[i]] += float(t.ops)
+        dev_finish[assign[i]] = max(dev_finish[assign[i]], task_finish[i])
+    return GraphScheduleResult(ops=ops, makespan=max(task_finish),
+                               finish_times=dev_finish, bus=spec,
+                               iterations=evals, assign=list(assign),
+                               order=list(order),
+                               task_finish=list(task_finish))

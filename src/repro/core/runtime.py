@@ -30,7 +30,7 @@ import threading
 import time
 from typing import Callable, Mapping, Sequence
 
-from .bus import ClockState, Timeline, carry_clocks
+from .bus import ClockState, GraphTimelineSpec, Timeline, carry_clocks
 from .device_model import (DeviceProfile, LinearTimeModel, RooflineTimeModel)
 from .domain import Domain, PlanCache, Workload
 from .executor import DeviceTask, StreamCore
@@ -79,6 +79,25 @@ class ObservationPump:
                           if e.kind == "compute")
             if seconds > 0.0:
                 self.observe(name, ops, seconds)
+                fed += 1
+        return fed
+
+    def feed_tasks(self, measured: Timeline,
+                   task_ops: Sequence[tuple[str, str, float]]) -> int:
+        """Per-task observations for DAG jobs: each ``(task, device, ops)``
+        row becomes its own ``observe`` call with that task's measured
+        compute time — a single job yields many distinct (ops, seconds)
+        samples per device, so the regression gets rank from one job
+        instead of needing a stream of differently-sized jobs."""
+        fed = 0
+        for task, device, ops in task_ops:
+            if device not in self.index or ops <= 0.0:
+                continue
+            seconds = sum(e.duration for e in measured.events
+                          if e.task == task and e.device == device
+                          and e.kind == "compute")
+            if seconds > 0.0:
+                self.observe(device, ops, seconds)
                 fed += 1
         return fed
 
@@ -151,6 +170,8 @@ def model_sleep_tasks(truth: TruthFn | None = None, *,
         if spec is None:
             raise ValueError("model_sleep_tasks needs Schedule.spec "
                              "(every shipped domain provides it)")
+        if isinstance(spec, GraphTimelineSpec):
+            return _graph_sleep_tasks(job, spec, truth, time_scale)
         kinds = {(e.device, e.kind) for e in plan.schedule.timeline.events}
         tasks: list[DeviceTask] = []
         for d, c in zip(spec.devices, spec.ops):
@@ -180,6 +201,42 @@ def model_sleep_tasks(truth: TruthFn | None = None, *,
         return tasks
 
     return factory
+
+
+def _graph_sleep_tasks(job: "StreamJob", spec: GraphTimelineSpec,
+                       truth: TruthFn | None,
+                       time_scale: float) -> list[DeviceTask]:
+    """Sleep-stage ``DeviceTask``s for a task-graph plan: one stage group
+    per DAG task (``task``/``deps`` set so the StreamCore blocks on
+    upstream completion), durations re-priced per stage under the
+    ground-truth profiles via the spec's own engine rebase."""
+    truth_devs = [truth(job.uid, d) if truth is not None else d
+                  for d in spec.devices]
+    seconds = spec.stage_seconds(truth_devs)
+    parents = spec.parents_of()
+    tasks: list[DeviceTask] = []
+    # planned order, NOT node order: each device's worker runs its stage
+    # groups strictly in dispatch order, so a same-device dependency queued
+    # out of topological order would deadlock the worker on its own queue
+    for i in spec.order:
+        t, a = spec.tasks[i], spec.assign[i]
+        if a < 0:
+            continue
+        dev = spec.devices[a].name
+        stage = seconds.get(t.name, {})
+
+        def sleeper(s: float):
+            return (lambda: time.sleep(s * time_scale))
+
+        tasks.append(DeviceTask(
+            device=dev,
+            copy_in=sleeper(stage["copy_in"]) if stage.get("copy_in")
+            else None,
+            compute=sleeper(stage.get("compute", 0.0)),
+            copy_out=sleeper(stage["copy_out"]) if stage.get("copy_out")
+            else None,
+            task=t.name, deps=parents.get(t.name, ())))
+    return tasks
 
 
 # ---------------------------------------------------------------------------
@@ -472,7 +529,12 @@ class CoExecutionRuntime:
         if self.pump is None or job.measured is None:
             return
         spec = job.plan.schedule.spec if job.plan else None
-        if spec is not None:
+        if spec is None:
+            return
+        if isinstance(spec, GraphTimelineSpec):
+            # DAG jobs observe per task (many sizes per device per job)
+            self.pump.feed_tasks(job.measured, spec.task_ops())
+        else:
             self.pump.feed(job.measured, spec.ops_by_device())
 
 
@@ -511,15 +573,30 @@ def verify_stream_invariants(jobs: Sequence[StreamJob], *,
                     f"before {a.device}/{a.kind} ends")
 
     for j in done:
-        # copy-before-compute-before-copy-out, chunk-wise
-        for name in {e.device for e in j.measured.events}:
-            evs = j.measured.device_events(name)
+        # copy-before-compute-before-copy-out, chunk-wise; task-graph
+        # timelines group per (device, task) — a device runs many tasks
+        for name, task in {(e.device, e.task) for e in j.measured.events}:
+            evs = [e for e in j.measured.device_events(name)
+                   if e.task == task]
             ins = sorted((e for e in evs if e.kind == "copy_in"),
                          key=lambda e: e.chunk)
             comps = sorted((e for e in evs if e.kind == "compute"),
                            key=lambda e: e.chunk)
             outs = sorted((e for e in evs if e.kind == "copy_out"),
                           key=lambda e: e.chunk)
+            if task is not None:
+                # DAG tasks: every input copy (external + edge reads) must
+                # land before the single compute starts
+                for i_ev in ins:
+                    if comps and comps[0].start < i_ev.end - eps:
+                        problems.append(
+                            f"job {j.uid} {name}/{task}: compute before "
+                            f"input copy {i_ev.chunk} landed")
+                for c_ev, o_ev in zip(comps[-1:], outs):
+                    if o_ev.start < c_ev.end - eps:
+                        problems.append(f"job {j.uid} {name}/{task}: "
+                                        "copy_out before compute ended")
+                continue
             for i_ev, c_ev in zip(ins, comps):
                 if c_ev.start < i_ev.end - eps:
                     problems.append(f"job {j.uid} {name}: compute chunk "

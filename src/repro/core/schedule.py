@@ -25,13 +25,15 @@ from typing import Sequence
 
 import numpy as np
 
-from .bus import (BusEvent, BusTopology, ClockState, Timeline, TimelineSpec,
-                  ZERO_CLOCKS, build_timeline)
+from .bus import (BusEvent, BusTopology, ClockState, GraphTimelineSpec,
+                  TaskSpec, Timeline, TimelineSpec, ZERO_CLOCKS,
+                  build_graph_timeline, build_timeline)
 from .device_model import DeviceProfile, LinearTimeModel, priority_order
 from .optimize import OptimizeResult, solve_bisection
 from .predict import fit_linear
 
-__all__ = ["BusEvent", "Timeline", "TimelineSpec", "simulate_timeline",
+__all__ = ["BusEvent", "Timeline", "TimelineSpec", "GraphTimelineSpec",
+           "simulate_timeline", "simulate_graph_timeline",
            "Schedule", "StaticScheduler", "DynamicScheduler"]
 
 
@@ -57,6 +59,21 @@ def simulate_timeline(devices: Sequence[DeviceProfile], ops: Sequence[float],
                           chunks=chunks, clocks=clocks)
 
 
+def simulate_graph_timeline(devices: Sequence[DeviceProfile],
+                            tasks: Sequence[TaskSpec],
+                            edges: Sequence[tuple[int, int]],
+                            assign: Sequence[int], *,
+                            topology: BusTopology | str | None = None,
+                            order: Sequence[int] | None = None,
+                            clocks: ClockState = ZERO_CLOCKS) -> Timeline:
+    """Exact simulation of a task-graph schedule on the unified bus engine
+    (DESIGN.md §10): same clocks as the divisible Fig. 2 simulation, plus
+    precedence — cross-device edges priced as host-staged link copies,
+    same-device edges free."""
+    return build_graph_timeline(devices, tasks, edges, assign,
+                                topology=topology, order=order, clocks=clocks)
+
+
 # ---------------------------------------------------------------------------
 # Static scheduler (paper §3.4.1)
 # ---------------------------------------------------------------------------
@@ -69,8 +86,10 @@ class Schedule:
     priorities: list[int]  # device indices, highest priority first
     # Engine inputs the timeline was built from: lets a streaming runtime
     # rebase the plan onto carried-over clocks (or ground-truth models)
-    # without knowing any domain geometry (DESIGN.md §9).
-    spec: TimelineSpec | None = None
+    # without knowing any domain geometry (DESIGN.md §9).  Divisible
+    # domains attach a TimelineSpec, task-graph domains a GraphTimelineSpec
+    # (DESIGN.md §10) — both expose rebase()/ops_by_device().
+    spec: TimelineSpec | GraphTimelineSpec | None = None
 
 
 def make_spec(devices: Sequence[DeviceProfile], ops: Sequence[float],

@@ -1,0 +1,79 @@
+"""Generic adapt-phase primitives (core/adapt.py): degenerate-input
+coverage for ``pack_largest_first`` and ``round_shares_to_grain`` — the
+shared machinery under the serving-dispatch and train-step domains."""
+import pytest
+
+from repro.core.adapt import pack_largest_first, round_shares_to_grain
+
+
+# ------------------------------------------------- pack_largest_first -------
+
+def _flatten(buckets):
+    return sorted(i for b in buckets for i in b)
+
+
+def test_pack_zero_weights_places_every_item_exactly_once():
+    buckets = pack_largest_first([0.0] * 5, [3.0, 1.0])
+    assert _flatten(buckets) == list(range(5))
+    # zero-weight items never reduce remaining budget, so they all land in
+    # the largest-budget bucket — any packing ties, this one is stable
+    assert buckets[0] == [0, 1, 2, 3, 4] and buckets[1] == []
+
+
+def test_pack_equal_weights_balances_equal_budgets():
+    buckets = pack_largest_first([2.0] * 6, [6.0, 6.0, 6.0])
+    assert _flatten(buckets) == list(range(6))
+    assert sorted(len(b) for b in buckets) == [2, 2, 2]
+
+
+def test_pack_equal_weights_tracks_unequal_budgets():
+    buckets = pack_largest_first([1.0] * 8, [6.0, 2.0])
+    assert _flatten(buckets) == list(range(8))
+    assert len(buckets[0]) == 6 and len(buckets[1]) == 2
+
+
+def test_pack_empty_items_and_single_bucket():
+    assert pack_largest_first([], [4.0, 4.0]) == [[], []]
+    assert pack_largest_first([3.0, 1.0, 2.0], [1.0]) == [[0, 2, 1]]
+
+
+def test_pack_orders_heaviest_first_within_buckets():
+    buckets = pack_largest_first([5.0, 1.0, 3.0], [100.0])
+    assert buckets == [[0, 2, 1]]
+
+
+# ---------------------------------------------- round_shares_to_grain -------
+
+def test_round_grain_exceeding_total_still_conserves():
+    # a single bucket whose grain is larger than the whole total: the
+    # remainder hand-out must break the grain rather than lose rows
+    assert round_shares_to_grain([7.0], [16], 7) == [7]
+    # two buckets, both grains above the total — all rows go to the
+    # largest-shortfall bucket as one sub-grain packet
+    assert sum(round_shares_to_grain([10.2, 5.8], [32, 16], 16)) == 16
+
+
+def test_round_shares_rounding_to_zero_get_remainder_packets():
+    # every share floors to zero; largest fractional shortfall wins
+    out = round_shares_to_grain([0.4, 0.6], [1, 1], 1)
+    assert out == [0, 1]
+    out = round_shares_to_grain([0.2, 0.3, 0.5], [4, 4, 4], 4)
+    assert sum(out) == 4 and out[2] == 4
+
+
+def test_round_shares_trims_over_assignment_from_largest():
+    # raw shares sum above the total: floors over-assign and the largest
+    # bucket absorbs the trim
+    out = round_shares_to_grain([16.0, 8.0], [8, 8], 16)
+    assert sum(out) == 16
+    assert out == [8, 8]
+
+
+def test_round_shares_zero_total():
+    assert round_shares_to_grain([0.0, 0.0], [8, 8], 0) == [0, 0]
+
+
+def test_round_shares_respects_grain_when_possible():
+    out = round_shares_to_grain([33.0, 31.0], [16, 16], 64)
+    assert sum(out) == 64
+    assert all(x % 16 == 0 for x in out)

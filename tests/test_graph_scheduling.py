@@ -1,0 +1,367 @@
+"""Task-graph workloads on the shared timeline engine (DESIGN.md §10):
+TaskGraph validation, the HEFT-style list scheduler vs the engine / naive
+baselines / brute force, executor dependency invariants (threaded and
+virtual), and the runtime round trip with per-task observations."""
+import itertools
+
+import pytest
+
+from repro.core import (CoExecutionRuntime, CopyModel, DeviceProfile,
+                        GraphTimelineSpec, LinearTimeModel, NO_COPY, POAS,
+                        PlanCache, TaskGraph, TaskGraphDomain, TaskNode,
+                        build_graph_timeline, diamond, get_domain,
+                        graph_finish_times, list_domains, paper_mach1,
+                        simulate_graph_timeline, solve_list_schedule,
+                        transformer_block, truth_from_profiles,
+                        verify_graph_dependencies, verify_stream_invariants)
+from repro.core.bus import _graph_topo_order
+
+
+def _dev(name, tflops, bw=None, b=1e-4, kind=None):
+    ops_per_s = tflops * 1e12 / 2
+    copy = NO_COPY if bw is None else CopyModel(bw, dtype_size=4)
+    return DeviceProfile(name, kind or ("gpu" if bw else "cpu"),
+                         LinearTimeModel(a=1 / ops_per_s, b=b), copy)
+
+
+def _devices():
+    """A host CPU plus two PCIe accelerators of different speeds."""
+    return [_dev("cpu", 0.5), _dev("gpu", 6.0, bw=16e9),
+            _dev("xpu", 12.0, bw=16e9)]
+
+
+def _chain(n=3, ops=1e9, out_bytes=1e6):
+    nodes = tuple(TaskNode(f"t{i}", ops, in_bytes=out_bytes,
+                           out_bytes=out_bytes) for i in range(n))
+    edges = tuple((f"t{i}", f"t{i+1}") for i in range(n - 1))
+    return TaskGraph(nodes=nodes, edges=edges)
+
+
+# ---------------------------------------------------------- validation ------
+
+def test_graph_validation_rejects_bad_graphs():
+    a, b = TaskNode("a", 1.0), TaskNode("b", 1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        TaskGraph(nodes=(a, TaskNode("a", 2.0)))
+    with pytest.raises(ValueError, match="unknown task"):
+        TaskGraph(nodes=(a, b), edges=(("a", "zzz"),))
+    with pytest.raises(ValueError, match="self-edge"):
+        TaskGraph(nodes=(a, b), edges=(("a", "a"),))
+    with pytest.raises(ValueError, match="cycle"):
+        TaskGraph(nodes=(a, b), edges=(("a", "b"), ("b", "a")))
+
+
+def test_topo_order_and_critical_path():
+    g = diamond(ops=1e9, width=3)
+    order = g.topo_order()
+    pos = {i: p for p, i in enumerate(order)}
+    for u, v in g.edge_indices():
+        assert pos[u] < pos[v]
+    length, path = g.critical_path()
+    # src -> one mid -> sink
+    assert length == pytest.approx(1e9 + 2e8)
+    assert path[0].endswith("src") and path[-1].endswith("sink")
+    assert g.total_ops() == pytest.approx(3e9 + 2e8)
+
+
+def test_workload_protocol_and_cost_signature():
+    g1 = _chain()
+    g2 = _chain()
+    g3 = _chain(ops=2e9)
+    assert g1.cost_signature() == g2.cost_signature()
+    assert g1.cost_signature() != g3.cost_signature()
+    assert hash(g1.cost_signature())
+    assert "task-graph" in list_domains()
+    assert isinstance(get_domain("task-graph", _devices()), TaskGraphDomain)
+
+
+# ----------------------------------------- solver == simulator == spec ------
+
+def test_list_schedule_makespan_matches_simulated_timeline_exactly():
+    """Acceptance: the list-scheduled makespan matches simulate_graph_timeline
+    exactly on the same spec — one engine, no approximation gap."""
+    for g in (transformer_block(d_model=1024, seq=2048, groups=4),
+              diamond(ops=5e9, width=4), _chain(5)):
+        devs = _devices()
+        res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                  bus="serialized")
+        tl = simulate_graph_timeline(devs, g.task_specs(), g.edge_indices(),
+                                     res.assign, topology="serialized",
+                                     order=res.order)
+        assert res.makespan == tl.makespan
+        assert max(res.task_finish) == tl.makespan
+        assert verify_graph_dependencies(g, tl) == []
+
+
+def test_schedule_spec_rebase_reproduces_domain_timeline():
+    g = transformer_block(d_model=1024, seq=1024, groups=2)
+    dom = TaskGraphDomain(_devices(), bus="serialized")
+    plan = POAS(dom).plan(g)
+    spec = plan.schedule.spec
+    assert isinstance(spec, GraphTimelineSpec)
+    rb = spec.rebase()
+    assert [(e.task, e.device, e.kind, e.start, e.end) for e in rb.events] \
+        == [(e.task, e.device, e.kind, e.start, e.end)
+            for e in plan.schedule.timeline.events]
+    # per-device op totals agree between spec and optimize result
+    by_dev = spec.ops_by_device()
+    for d, c in zip(_devices(), plan.optimize.ops):
+        assert by_dev.get(d.name, 0.0) == pytest.approx(c)
+    # the adapt output's per-device task lists cover the graph exactly
+    names = [t for d in _devices() for t in plan.adapted.tasks_of(d.name)]
+    assert sorted(names) == sorted(n.name for n in g.nodes)
+
+
+def test_list_schedule_beats_naive_topo_order_on_diamond():
+    """Acceptance: on a fork-join diamond, rank/EFT placement parallelizes
+    the branches while the naive topo-order baseline piles everything onto
+    the myopically-fastest device and serializes them."""
+    devs = _devices()
+    g = diamond(ops=20e9, bytes_per_edge=1e6, width=3)
+    smart = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                bus="serialized")
+    naive = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                bus="serialized", priority="topo",
+                                refine=False)
+    assert smart.makespan < naive.makespan - 1e-9
+    # the naive baseline is single-device (myopic EFT ignores queueing)
+    assert len({naive.assign[i] for i in range(len(g))}) == 1
+    assert len({smart.assign[i] for i in range(len(g))}) >= 2
+
+
+def test_list_schedule_equals_brute_force_on_small_graphs():
+    """Acceptance: <= 5 nodes x 3 devices — the solver returns the exact
+    optimum (its small-instance mode enumerates the assignment space)."""
+    devs = _devices()
+    graphs = [
+        _chain(3),
+        diamond(ops=8e9, width=2),                      # 4 nodes
+        diamond(ops=8e9, bytes_per_edge=64e6, width=3),  # 5, copy-heavy
+        TaskGraph(nodes=(TaskNode("a", 4e9, out_bytes=4e6),
+                         TaskNode("b", 6e9, out_bytes=1e6),
+                         TaskNode("c", 2e9, out_bytes=1e6),
+                         TaskNode("d", 9e9, in_bytes=32e6, out_bytes=8e6),
+                         TaskNode("e", 1e9, out_bytes=1e6)),
+                  edges=(("a", "c"), ("b", "c"), ("c", "e"), ("d", "e"))),
+    ]
+    for g in graphs:
+        assert len(g) <= 5
+        res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                  bus="serialized")
+        best = min(
+            max(graph_finish_times(devs, g.task_specs(), g.edge_indices(),
+                                   a, topology="serialized",
+                                   order=res.order))
+            for a in itertools.product(range(3), repeat=len(g)))
+        assert res.makespan == pytest.approx(best, rel=1e-12)
+
+
+def test_list_schedule_never_worse_than_best_single_device():
+    """The degenerate-assignment guard (§3.4.3 in DAG form): EFT local
+    optima must never lose to handing the whole graph to one device."""
+    for devs_fn in (paper_mach1, _devices):
+        devs = devs_fn() if callable(devs_fn) else devs_fn
+        g = transformer_block(d_model=2048, seq=4096, groups=4)
+        res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                  bus="serialized")
+        singles = [max(graph_finish_times(
+            devs, g.task_specs(), g.edge_indices(), [j] * len(g),
+            topology="serialized", order=res.order))
+            for j in range(len(devs))]
+        assert res.makespan <= min(singles) + 1e-12
+
+
+# ------------------------------------------------------ engine details ------
+
+def test_same_device_edges_are_free_cross_device_edges_pay_copies():
+    devs = _devices()
+    g = _chain(2, ops=1e9, out_bytes=8e6)
+    specs, edges = g.task_specs(), g.edge_indices()
+    same = build_graph_timeline(devs, specs, edges, [2, 2],
+                                topology="serialized")
+    cross = build_graph_timeline(devs, specs, edges, [2, 1],
+                                 topology="serialized")
+    # same-device: exactly one copy_in (t0's external input), one copy_out
+    # (t1's sink return), no staging between the tasks
+    assert len([e for e in same.events if e.kind == "copy_in"]) == 2
+    assert len([e for e in same.events if e.kind == "copy_out"]) == 1
+    # cross-device: t0's output staged to host, then read by t1's device
+    stage = [e for e in cross.events
+             if e.kind == "copy_out" and e.task == "t0"]
+    read = [e for e in cross.events
+            if e.kind == "copy_in" and e.task == "t1"]
+    assert len(stage) == 1 and len(read) >= 1
+    assert min(e.start for e in read) >= stage[0].end - 1e-12
+    assert cross.makespan > same.makespan
+
+
+def test_no_copy_host_reads_staged_output_and_writes_free():
+    devs = _devices()
+    g = _chain(2, ops=1e9, out_bytes=8e6)
+    # t0 on xpu, t1 on the no-copy host: host waits for the staged copy,
+    # and emits no copy events of its own
+    tl = build_graph_timeline(devs, g.task_specs(), g.edge_indices(),
+                              [2, 0], topology="serialized")
+    host = [e for e in tl.events if e.device == "cpu"]
+    assert all(e.kind == "compute" for e in host)
+    stage = [e for e in tl.events if e.kind == "copy_out"][0]
+    assert host[0].start >= stage.end - 1e-12
+
+
+def test_graph_timeline_carried_clocks_serialize_across_plans():
+    devs = _devices()
+    g = transformer_block(d_model=1024, seq=1024, groups=2)
+    res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                              bus="serialized")
+    from repro.core import carry_clocks
+    t1 = build_graph_timeline(devs, g.task_specs(), g.edge_indices(),
+                              res.assign, topology="serialized",
+                              order=res.order)
+    t2 = build_graph_timeline(devs, g.task_specs(), g.edge_indices(),
+                              res.assign, topology="serialized",
+                              order=res.order, clocks=carry_clocks(t1))
+    evs = sorted((e for e in t1.events + t2.events if e.kind != "compute"),
+                 key=lambda e: (e.start, e.end))
+    for a, b in zip(evs, evs[1:]):
+        if a.link == b.link:
+            assert b.start >= a.end - 1e-9
+    for d in devs:
+        if t1.device_events(d.name) and t2.device_events(d.name):
+            assert min(e.start for e in t2.device_events(d.name)) >= \
+                t1.device_finish(d.name) - 1e-9
+
+
+def test_rank_order_is_topological():
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    res = solve_list_schedule(_devices(), g.task_specs(), g.edge_indices(),
+                              bus="serialized", refine=False)
+    pos = {i: p for p, i in enumerate(res.order)}
+    for u, v in g.edge_indices():
+        assert pos[u] < pos[v]
+    # sanity: Kahn order on the same edges agrees on reachability
+    assert sorted(res.order) == _graph_topo_order(len(g), g.edge_indices())
+
+
+def test_plan_cache_hits_on_structurally_equal_graphs():
+    dom = TaskGraphDomain(_devices(), bus="serialized")
+    poas = POAS(dom, cache=PlanCache())
+    g1 = transformer_block(d_model=1024, seq=1024, groups=2)
+    g2 = transformer_block(d_model=1024, seq=1024, groups=2)
+    p1 = poas.plan(g1)
+    p2 = poas.plan(g2)
+    assert poas.cache.hits == 1
+    assert p2.schedule is p1.schedule   # solved phases shared on a hit
+    poas.plan(transformer_block(d_model=1024, seq=2048, groups=2))
+    assert poas.cache.misses == 2
+
+
+# -------------------------------------------------- executor invariants -----
+
+THROTTLE = 3.0
+
+
+def _truth(devs, at=2, device="xpu"):
+    return truth_from_profiles(
+        devs, lambda uid, name: THROTTLE if uid >= at and name == device
+        else 1.0)
+
+
+def test_virtual_executor_respects_dependencies():
+    """Acceptance (virtual half): the measured (virtual-time) timelines
+    never start a task before all upstream outputs have landed."""
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual",
+                            truth=_truth(_devices()), feedback=True,
+                            max_inflight=1) as rt:
+        jobs = rt.run_stream([g] * 6)
+    assert all(j.error is None for j in jobs)
+    assert verify_stream_invariants(jobs) == []
+    for j in jobs:
+        assert verify_graph_dependencies(j.plan.schedule.spec,
+                                         j.measured) == []
+
+
+def test_threaded_executor_respects_dependencies():
+    """Acceptance (threaded half): real StreamCore workers block on
+    upstream task completion; measured wall-clock timelines pass the
+    dependency and per-link invariants across plan boundaries."""
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    dom = TaskGraphDomain(paper_mach1(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="threads",
+                            truth=_truth(paper_mach1(),
+                                         device="2080ti-tensor"),
+                            feedback=True, carry_clocks=True,
+                            max_inflight=2, time_scale=0.02) as rt:
+        jobs = rt.run_stream([g] * 4, timeout=120)
+    assert all(j.error is None for j in jobs)
+    assert verify_stream_invariants(jobs) == []
+    for j in jobs:
+        assert verify_graph_dependencies(j.plan.schedule.spec,
+                                         j.measured) == []
+    assert rt.pump.observations > 0
+
+
+def test_threaded_upstream_failure_fails_downstream_not_runtime():
+    """A failing task fails its dependents (their data never landed) and
+    the job — but the core survives: the next job runs clean."""
+    from repro.core import DeviceTask, StreamCore, Timeline
+    from repro.core.bus import BusEvent
+    core = StreamCore()
+    try:
+        def boom():
+            raise RuntimeError("task a exploded")
+
+        planned = {"pcie": [("a", "gpu", "copy_in"), ("b", "cpu", "copy_in")]}
+        tasks = [
+            DeviceTask("gpu", copy_in=lambda: None, compute=boom,
+                       copy_out=None, task="a"),
+            DeviceTask("cpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="b", deps=("a",)),
+        ]
+        h = core.dispatch(tasks, planned)
+        with pytest.raises(RuntimeError, match="exploded"):
+            h.wait(30)
+        assert any("upstream task 'a' failed" in str(e) for e in h.errors)
+        # the workers and buses survive: a clean graph job completes
+        tasks2 = [
+            DeviceTask("gpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="a"),
+            DeviceTask("cpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="b", deps=("a",)),
+        ]
+        tl = core.dispatch(tasks2, planned).wait(30)
+        assert isinstance(tl, Timeline)
+        comp = {e.task: e for e in tl.events if e.kind == "compute"}
+        assert comp["b"].start >= comp["a"].end - 1e-9
+        assert all(isinstance(e, BusEvent) for e in tl.events)
+    finally:
+        core.shutdown()
+
+
+# ------------------------------------------------- runtime round trip -------
+
+def test_runtime_round_trip_with_per_task_observations_refits():
+    """Acceptance: TaskGraph jobs round-trip through CoExecutionRuntime;
+    per-task observations (many distinct sizes per device per job) trigger
+    a re-fit, invalidate the PlanCache, and shed the throttled device."""
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual",
+                            truth=_truth(_devices(), at=2),
+                            feedback=True, max_inflight=1) as rt:
+        jobs = rt.run_stream([g] * 8)
+        stats = rt.stats()
+    assert all(j.error is None for j in jobs)
+    # one graph job feeds one observation per scheduled task
+    n_sched = sum(1 for a in jobs[0].plan.optimize.assign if a >= 0)
+    assert stats["observations"] >= n_sched
+    # the re-fit happened and later plans were solved under newer models
+    assert dom.dyn.epoch > 0
+    assert rt.plan_cache.invalidations >= 1
+    assert jobs[-1].epoch_at_plan > jobs[0].epoch_at_plan
+    # the throttled xpu sheds ops share after the re-fit
+    xpu = 2
+    share_pre = jobs[1].plan.optimize.shares()[xpu]
+    share_post = jobs[-1].plan.optimize.shares()[xpu]
+    assert share_post < share_pre
