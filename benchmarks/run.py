@@ -13,22 +13,137 @@ Sections:
   §Stream   — feedback loop vs static plan, plan-carry-over overlap
               (streaming; writes BENCH_streaming.json — uploaded in CI)
   §Graph    — DAG co-execution vs best single device, list-schedule vs
-              naive topo order (graph; writes BENCH_graph.json — uploaded
-              in CI)
+              naive topo order, mid-graph straggler re-planning (graph;
+              writes BENCH_graph.json — uploaded in CI)
 
 A failing section is reported as ``name,0,ERROR`` and the driver keeps
 going, but the failure is collected and the process exits non-zero — CI
 must not pass on broken benchmarks.
+
+Regression guard: before the sections run, the committed ``BENCH_*.json``
+baselines are snapshotted; afterwards every freshly-emitted makespan
+(lower is better) and speedup (higher is better) is compared against its
+baseline value with a relative tolerance (``BENCH_REGRESSION_TOL``, default
+10%).  Metrics under a ``thread*`` path are wall-clock — inherently noisy
+on shared CI runners — and are skipped; everything else in these reports is
+a deterministic model quantity, so a drift beyond tolerance is a real
+performance regression and fails the job.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
+BENCH_FILES = ("BENCH_timeline.json", "BENCH_streaming.json",
+               "BENCH_graph.json")
+TOLERANCE = float(os.environ.get("BENCH_REGRESSION_TOL", "0.10"))
+
+
+def _metrics(obj, path: str = "") -> dict[str, tuple[str, float]]:
+    """Flatten a benchmark report to {path: (direction, value)} over the
+    comparable numeric leaves: ``*speedup*`` keys (higher is better) and
+    ``*makespan_s`` keys (lower is better).  Paths under ``thread*``
+    segments are wall-clock and excluded."""
+    out: dict[str, tuple[str, float]] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            sub = f"{path}/{k}"
+            if isinstance(v, (dict, list)):
+                out.update(_metrics(v, sub))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if any(seg.startswith("thread") for seg in sub.split("/")):
+                    continue
+                if "speedup" in k:
+                    out[sub] = ("higher", float(v))
+                elif k.endswith("makespan_s"):
+                    out[sub] = ("lower", float(v))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            if isinstance(v, (dict, list)):
+                out.update(_metrics(v, f"{path}/{i}"))
+    return out
+
+
+def load_baselines() -> dict[str, dict[str, tuple[str, float]]]:
+    """Snapshot the committed BENCH_*.json metrics BEFORE the sections
+    overwrite them in place."""
+    out: dict[str, dict[str, tuple[str, float]]] = {}
+    for fname in BENCH_FILES:
+        try:
+            with open(fname) as f:
+                out[fname] = _metrics(json.load(f))
+        except (OSError, ValueError):
+            continue   # no baseline yet (fresh checkout artifact dir)
+    return out
+
+
+def check_regressions(baselines: dict[str, dict[str, tuple[str, float]]],
+                      tolerance: float = TOLERANCE) -> list[str]:
+    """Compare freshly-emitted reports against the snapshotted baselines.
+    Returns human-readable regression lines (empty = pass).  Keys present
+    only on one side are ignored — new sections extend the baseline, they
+    don't regress it."""
+    problems: list[str] = []
+    for fname, base in baselines.items():
+        try:
+            with open(fname) as f:
+                new = _metrics(json.load(f))
+        except (OSError, ValueError):
+            continue   # the section failed; already reported as ERROR
+        for path, (direction, bval) in base.items():
+            if path not in new or bval <= 0.0:
+                continue
+            nval = new[path][1]
+            if direction == "higher" and nval < bval * (1.0 - tolerance):
+                problems.append(
+                    f"{fname}{path}: speedup {nval:.4g} fell below "
+                    f"baseline {bval:.4g} (tolerance {tolerance:.0%})")
+            elif direction == "lower" and nval > bval * (1.0 + tolerance):
+                problems.append(
+                    f"{fname}{path}: makespan {nval:.4g} rose above "
+                    f"baseline {bval:.4g} (tolerance {tolerance:.0%})")
+    return problems
+
+
+def _snapshot(path: str) -> None:
+    """Dump the current BENCH_*.json metrics (CI runs this on the fresh
+    checkout, BEFORE the benchmark steps overwrite the committed files)."""
+    snap = {fname: {k: list(v) for k, v in metrics.items()}
+            for fname, metrics in load_baselines().items()}
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"# snapshotted baselines for {len(snap)} report(s) -> {path}")
+
+
+def _check(path: str) -> None:
+    """Compare the freshly-emitted reports against a --snapshot file; exit
+    non-zero on regression (the CI guard step)."""
+    with open(path) as f:
+        snap = json.load(f)
+    baselines = {fname: {k: (d, float(v)) for k, (d, v) in metrics.items()}
+                 for fname, metrics in snap.items()}
+    regressions = check_regressions(baselines)
+    for line in regressions:
+        print(f"# REGRESSION: {line}", file=sys.stderr)
+    if regressions:
+        sys.exit(1)
+    total = sum(len(m) for m in baselines.values())
+    print(f"# benchmark regression guard: {total} metric(s) within "
+          f"{TOLERANCE:.0%} of baseline")
+
 
 def main() -> None:
+    if len(sys.argv) == 3 and sys.argv[1] == "--snapshot":
+        _snapshot(sys.argv[2])
+        return
+    if len(sys.argv) == 3 and sys.argv[1] == "--check":
+        _check(sys.argv[2])
+        return
     from . import (exec_time, graph, plan_cache, prediction_accuracy,
                    roofline, speedup, streaming, timeline, work_distribution)
+    baselines = load_baselines()
     failures: list[str] = []
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
                 roofline, plan_cache, timeline, streaming, graph):
@@ -40,6 +155,11 @@ def main() -> None:
             print(f"{name},0,ERROR")
             traceback.print_exc()
             failures.append(name)
+    regressions = check_regressions(baselines)
+    for line in regressions:
+        print(f"# REGRESSION: {line}", file=sys.stderr)
+    if regressions:
+        failures.append("benchmark-regression-guard")
     if failures:
         print(f"# FAILED sections: {', '.join(failures)}", file=sys.stderr)
         sys.exit(1)

@@ -41,9 +41,9 @@ from .executor import (DeviceTask, JobHandle, OverlappedExecutor, StreamCore,
 from .framework import (GemmDomain, GemmWorkload, POAS, POASPlan,
                         make_gemm_poas)
 from .hgemms import ExecutionReport, HGemms
-from .runtime import (CoExecutionRuntime, ObservationPump, StreamJob,
-                      model_sleep_tasks, throttled, truth_from_profiles,
-                      verify_stream_invariants)
+from .runtime import (CoExecutionRuntime, ObservationPump, ReplanRecord,
+                      StreamJob, model_sleep_tasks, throttled,
+                      truth_from_profiles, verify_stream_invariants)
 
 __all__ = [
     "BusEvent", "BusTopology", "Link", "build_timeline",
@@ -67,7 +67,7 @@ __all__ = [
     "GemmDomain", "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
     "ExecutionReport", "HGemms",
     "ClockState", "TimelineSpec", "carry_clocks",
-    "CoExecutionRuntime", "ObservationPump", "StreamJob",
+    "CoExecutionRuntime", "ObservationPump", "ReplanRecord", "StreamJob",
     "model_sleep_tasks", "throttled", "truth_from_profiles",
     "verify_stream_invariants",
     "GraphTimelineSpec", "TaskSpec", "build_graph_timeline",

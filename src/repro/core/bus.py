@@ -629,11 +629,22 @@ def _simulate_graph(devices: Sequence[DeviceProfile],
                     assign: Sequence[int], topo: BusTopology,
                     order: Sequence[int],
                     events: list[BusEvent] | None,
-                    clocks: ClockState = ZERO_CLOCKS) -> list[float]:
+                    clocks: ClockState = ZERO_CLOCKS,
+                    ext: Mapping[int, tuple[float, float]] | None = None
+                    ) -> list[float]:
     """One pass over a task graph's event graph.  Returns per-task finish
     times (0 for tasks with ``assign[i] < 0`` — the list scheduler prices
     partial assignments during device selection); appends ``BusEvent``s
     when ``events`` is a list.
+
+    ``ext`` prices a task *externally* (mid-graph re-planning, DESIGN.md
+    §11): a frozen — completed or currently running — task is not
+    simulated; its ``(compute_end, avail)`` come from the mapping instead
+    (``avail`` = when its output is host-resident; ``math.inf`` marks an
+    output that never reaches the host, so any candidate needing a host
+    read of it prices to infinity and is rejected by the solver).  Frozen
+    tasks emit no events and their finish is reported as their
+    ``compute_end``.
 
     Semantics (the Fig. 2 rules, generalized to precedence edges):
 
@@ -663,11 +674,16 @@ def _simulate_graph(devices: Sequence[DeviceProfile],
         parents[v].append(u)
         children[u].append(v)
 
-    scheduled = [i for i in order if assign[i] >= 0]
-    placed = set(scheduled)
+    ext = ext or {}
+    scheduled = [i for i in order if assign[i] >= 0 and i not in ext]
+    placed = set(scheduled) | set(ext)
     finish = [0.0] * n_tasks
     compute_end = [0.0] * n_tasks
     avail = [0.0] * n_tasks       # when the task's output is host-resident
+    for i, (c_end, av) in ext.items():
+        compute_end[i] = c_end
+        avail[i] = av
+        finish[i] = c_end   # fixed past/in-flight work; never inf
     lclock: dict[str, float] = {}  # per-link clock
     dclock: dict[str, float] = {}  # per-device compute clock
 
@@ -757,16 +773,20 @@ def build_graph_timeline(devices: Sequence[DeviceProfile],
                          assign: Sequence[int], *,
                          topology: BusTopology | str | None = None,
                          order: Sequence[int] | None = None,
-                         clocks: ClockState = ZERO_CLOCKS) -> Timeline:
+                         clocks: ClockState = ZERO_CLOCKS,
+                         ext: Mapping[int, tuple[float, float]] | None = None
+                         ) -> Timeline:
     """The unified event-graph timeline for a task graph — what the list
     scheduler prices, ``simulate_graph_timeline`` returns, and the
-    executor's per-link ticket order is derived from."""
+    executor's per-link ticket order is derived from.  ``ext`` freezes
+    tasks out of the simulation (mid-graph re-planning): they emit no
+    events and feed consumers at the given (compute_end, avail) times."""
     topo = BusTopology.from_spec(topology, devices)
     if order is None:
         order = _graph_topo_order(len(tasks), edges)
     events: list[BusEvent] = []
     _simulate_graph(devices, tasks, edges, assign, topo, order, events,
-                    clocks)
+                    clocks, ext)
     return Timeline(events)
 
 
@@ -776,7 +796,9 @@ def graph_finish_times(devices: Sequence[DeviceProfile],
                        assign: Sequence[int], *,
                        topology: BusTopology | str | None = None,
                        order: Sequence[int] | None = None,
-                       clocks: ClockState = ZERO_CLOCKS) -> list[float]:
+                       clocks: ClockState = ZERO_CLOCKS,
+                       ext: Mapping[int, tuple[float, float]] | None = None
+                       ) -> list[float]:
     """Per-task finish times from the same control flow as
     ``build_graph_timeline``, without materializing events (the list
     scheduler's device-selection hot path)."""
@@ -784,7 +806,7 @@ def graph_finish_times(devices: Sequence[DeviceProfile],
     if order is None:
         order = _graph_topo_order(len(tasks), edges)
     return _simulate_graph(devices, tasks, edges, assign, topo, order, None,
-                           clocks)
+                           clocks, ext)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -810,6 +832,25 @@ class GraphTimelineSpec:
         return build_graph_timeline(devs, self.tasks, self.edges,
                                     self.assign, topology=self.topology,
                                     order=self.order, clocks=clocks)
+
+    def rebase_partial(self, clocks: ClockState = ZERO_CLOCKS, *,
+                       ext: Mapping[str, tuple[float, float]],
+                       devices: Sequence[DeviceProfile] | None = None
+                       ) -> Timeline:
+        """Partial rebase for mid-graph re-planning (DESIGN.md §11): price
+        only the remaining subgraph from the carried (measured) clocks.
+        ``ext`` maps *frozen task names* — completed or currently running —
+        to ``(compute_end, avail)``: those tasks emit no events; frontier
+        consumers read them at the given times (``avail = math.inf`` marks
+        an output that never reaches the host).  The returned timeline
+        holds exactly the frontier's events — its ``link_ticket_order`` is
+        what the executor re-issues."""
+        devs = list(devices) if devices is not None else list(self.devices)
+        index = {t.name: i for i, t in enumerate(self.tasks)}
+        return build_graph_timeline(
+            devs, self.tasks, self.edges, self.assign,
+            topology=self.topology, order=self.order, clocks=clocks,
+            ext={index[name]: t for name, t in ext.items()})
 
     def ops_by_device(self) -> dict[str, float]:
         out: dict[str, float] = {}

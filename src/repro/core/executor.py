@@ -105,18 +105,30 @@ class TicketBus:
             self._seq.extend(sequence)
             self._cv.notify_all()
 
-    def acquire(self, ticket: tuple) -> None:
+    def acquire(self, ticket: tuple, *, append_timeout: float = 1.0) -> None:
         with self._cv:
             if ticket not in self._seq:
-                raise ValueError(f"ticket {ticket} not in bus schedule")
+                # a concurrent dispatch/reissue may be mid-extend: its worker
+                # closures can reach acquire before the grant sequence lands
+                # on this bus.  Wait (bounded) for the ticket to appear
+                # instead of raising on the benign race.
+                if not self._cv.wait_for(lambda: ticket in self._seq,
+                                         timeout=append_timeout):
+                    raise ValueError(f"ticket {ticket} not in bus schedule")
             self._cv.wait_for(
                 lambda: self._pos < len(self._seq)
                 and self._seq[self._pos] == ticket)
 
     def release(self, ticket: tuple) -> None:
         with self._cv:
-            assert self._seq[self._pos] == ticket, (self._seq, self._pos,
-                                                    ticket)
+            # explicit check, not assert: the grant-head invariant must
+            # survive `python -O` (a silent out-of-order release would let
+            # two transfers share the link and corrupt every measured
+            # timeline downstream)
+            if self._pos >= len(self._seq) or self._seq[self._pos] != ticket:
+                raise RuntimeError(
+                    f"out-of-order release: {ticket} is not the grant head "
+                    f"(pending={self._seq[self._pos:]!r})")
             self._pos += 1
             # prune the granted prefix: a persistent bus on a sustained
             # stream must not retain every historical ticket (and acquire's
@@ -264,8 +276,26 @@ class StreamCore:
         # per-(job, task) completion: cross-device dependency waits for
         # task-graph plans (entries dropped when the job completes)
         self._task_done: dict[tuple[str, str], "_TaskDone"] = {}
+        # per-(job, task) [incarnation, status] for named tasks.  status is
+        # "pending" until the stage group begins, then "started"; a
+        # mid-graph reissue bumps the incarnation of still-pending tasks,
+        # turning their already-enqueued closures into no-ops (a SimpleQueue
+        # entry cannot be removed) while the replacement closures — carrying
+        # the new incarnation — run on their new devices.
+        self._task_state: dict[tuple[str, str], list] = {}
+        # optional observer: called with (job id, event) after every
+        # measured stage lands — the runtime's straggler monitor and
+        # during-execution observation feed hang off this (DESIGN.md §11).
+        self.on_event: Callable[[str, BusEvent], None] | None = None
         self._jobs = 0
         self._closed = False
+        # serializes ticket admission (bus extends + worker enqueues) across
+        # dispatch and reissue: without it a concurrent dispatch could land
+        # between a reissue's bus-extend and its worker-enqueue, inverting
+        # the two jobs' relative order on a shared link vs. a shared device
+        # queue — a permanent deadlock (the grant head would sit behind its
+        # own waiter).  Always acquired before self._lock, never after.
+        self._admit = threading.Lock()
         self._t0 = time.perf_counter()
 
     # -- plumbing -----------------------------------------------------------
@@ -292,6 +322,20 @@ class StreamCore:
             self._events.append(ev)
         with handle._lock:
             handle.events.append(ev)
+        cb = self.on_event
+        if cb is not None:
+            try:
+                cb(handle.job, ev)
+            except BaseException as exc:
+                # observers run on device worker / pipeline threads: a
+                # raising monitor must fail the job, never kill the worker
+                with handle._lock:
+                    handle.errors.append(exc)
+
+    def now(self) -> float:
+        """Current stream time (seconds since core creation) — the axis
+        every measured event is stamped on."""
+        return time.perf_counter() - self._t0
 
     def stream_timeline(self, *, reset: bool = False) -> Timeline:
         """Every measured event of every job, one time axis — what the
@@ -333,18 +377,44 @@ class StreamCore:
                 raise RuntimeError("StreamCore is shut down")
             jid = job if job is not None else f"job{self._jobs}"
             self._jobs += 1
-        provided: set[tuple] = set()
         named: list[tuple[str, str]] = []
         for t in tasks:
             if t.compute is None and not t.compute_chunks:
                 raise ValueError(f"task {t.device!r} has neither compute "
                                  "nor compute_chunks")
+            if t.task is not None:
+                named.append((jid, t.task))
+        handle = JobHandle(jid, len(tasks))
+        if named:
+            with self._lock:
+                for key in named:
+                    self._task_done[key] = _TaskDone()
+                    self._task_state[key] = [0, "pending"]
+            # all of a job's latches are released together when the job
+            # completes (dep waits are intra-job, so this is the earliest
+            # safe point) — the registry must not grow with the stream
+            handle.add_done_callback(lambda h: self._drop_latches(named))
+        with self._admit:
+            ticket_link = self._admit_tickets(jid, tasks, link_order)
+            for t in tasks:
+                self._worker(t.device).q.put(
+                    lambda t=t: self._run_task(handle, jid, t, ticket_link))
+        return handle
+
+    def _admit_tickets(self, jid: str, tasks: Sequence[DeviceTask],
+                       link_order: Mapping[str, Sequence[tuple]]
+                       ) -> dict[tuple, str]:
+        """Extend the buses with a plan's per-link grant order, filtered to
+        the stages the task list actually provides (an unclaimed ticket
+        would wedge its link).  Returns ticket -> link for the stage
+        closures.  Shared by dispatch and reissue; callers hold
+        ``self._admit``."""
+        provided: set[tuple] = set()
+        for t in tasks:
             if t.has_copy_in():
                 provided.add(t.ticket("copy_in"))
             if t.has_copy_out():
                 provided.add(t.ticket("copy_out"))
-            if t.task is not None:
-                named.append((jid, t.task))
         ticket_link: dict[tuple, str] = {}
         for link, seq in link_order.items():
             kept = []
@@ -355,24 +425,87 @@ class StreamCore:
                     ticket_link[tk] = link
             if kept:
                 self._bus(link).extend(kept)
-        handle = JobHandle(jid, len(tasks))
-        if named:
-            with self._lock:
-                for key in named:
-                    self._task_done[key] = _TaskDone()
-            # all of a job's latches are released together when the job
-            # completes (dep waits are intra-job, so this is the earliest
-            # safe point) — the registry must not grow with the stream
-            handle.add_done_callback(lambda h: self._drop_latches(named))
-        for t in tasks:
-            self._worker(t.device).q.put(
-                lambda t=t: self._run_task(handle, jid, t, ticket_link))
-        return handle
+        return ticket_link
 
     def _drop_latches(self, keys: Sequence[tuple[str, str]]) -> None:
         with self._lock:
             for key in keys:
                 self._task_done.pop(key, None)
+                self._task_state.pop(key, None)
+
+    # -- mid-graph re-planning (DESIGN.md §11) ------------------------------
+
+    def pending_tasks(self, jid: str) -> set[str]:
+        """Names of the job's not-yet-started (hence migratable) named
+        tasks.  A task counts as started the moment its stage group begins
+        — including a group still blocked on upstream latches or a ticket
+        grant — because its worker thread is already committed to it."""
+        with self._lock:
+            return {name for (j, name), st in self._task_state.items()
+                    if j == jid and st[1] == "pending"}
+
+    def reissue(self, handle: JobHandle, tasks: Sequence[DeviceTask],
+                link_order: Mapping[str, Sequence[tuple]]) -> tuple[str, ...]:
+        """Splice a mid-graph re-plan into a live job: atomically revoke the
+        given tasks' not-yet-started incarnations (their queued closures
+        become no-ops, their pending tickets are dropped from every bus) and
+        re-dispatch the replacements — new devices, new per-link grant order
+        (``link_order`` from the re-planned frontier timeline's
+        ``link_ticket_order``).  New tickets are appended at each bus's
+        tail, so the splice behaves exactly like a fresh dispatch and the
+        streaming deadlock-freedom argument applies unchanged: granted
+        prefixes and the frozen tasks' pending tickets are never disturbed.
+
+        Returns the task names actually spliced.  A task that started
+        between the caller's ``pending_tasks`` snapshot and this call keeps
+        its original placement and tickets; its replacement is discarded.
+        """
+        jid = handle.job
+        by_name: dict[str, DeviceTask] = {}
+        for t in tasks:
+            if t.task is None:
+                raise ValueError("reissue needs named (task-graph) stage "
+                                 "groups")
+            by_name[t.task] = t
+        new_inc: dict[str, int] = {}
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StreamCore is shut down")
+            spliced = [name for name in by_name
+                       if self._task_state.get((jid, name),
+                                               (0, "started"))[1]
+                       == "pending"]
+            # top up the handle BEFORE bumping incarnations: a stale
+            # closure dequeued right after the bump calls _device_done
+            # immediately, and the job must not complete early
+            with handle._lock:
+                handle._remaining += len(spliced)
+            for name in spliced:
+                st = self._task_state[(jid, name)]
+                st[0] += 1
+                new_inc[name] = st[0]
+            buses = list(self._buses.values())
+        if not spliced:
+            return ()
+        spliced_set = set(spliced)
+        repl = [t for t in tasks if t.task in spliced_set]
+        # the whole splice (ticket drop + re-admission + enqueue) happens
+        # under the admission lock: a dispatch landing in between would
+        # invert the two jobs' relative order on a shared link vs. a
+        # shared device queue — a deadlock
+        with self._admit:
+            for bus in buses:
+                bus.cancel(lambda t: t[0] == jid and len(t) == 4
+                           and t[1] in spliced_set)
+            ticket_link = self._admit_tickets(jid, repl, link_order)
+            # enqueue in the caller's order (the re-planned spec's
+            # topological order) — a same-device dependency queued out of
+            # order would deadlock the device worker on its own queue
+            for t in repl:
+                self._worker(t.device).q.put(
+                    lambda t=t, inc=new_inc[t.task]:
+                        self._run_task(handle, jid, t, ticket_link, inc))
+        return tuple(t.task for t in repl)
 
     def _await_deps(self, jid: str, task: DeviceTask) -> None:
         """Block until every upstream task's stage group completed; raise
@@ -409,10 +542,20 @@ class StreamCore:
         return bus, ticket
 
     def _run_task(self, handle: JobHandle, jid: str, task: DeviceTask,
-                  ticket_link: Mapping[tuple, str]) -> None:
+                  ticket_link: Mapping[tuple, str], inc: int = 0) -> None:
         latch = None
         if task.task is not None:
             with self._lock:
+                st = self._task_state.get((jid, task.task))
+                if st is not None and st[0] != inc:
+                    # superseded by a mid-graph reissue: the replacement
+                    # closure owns this task now.  This stale stage group
+                    # is a no-op — but it still counts toward the handle,
+                    # which was topped up at reissue time.
+                    handle._device_done()
+                    return
+                if st is not None:
+                    st[1] = "started"
                 latch = self._task_done.get((jid, task.task))
         try:
             self._await_deps(jid, task)

@@ -26,7 +26,7 @@ class end to end:
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Sequence
+from typing import Hashable, Iterable, Sequence
 
 from .bus import (BusTopology, GraphTimelineSpec, TaskSpec, Timeline,
                   _graph_topo_order)
@@ -143,6 +143,46 @@ class TaskGraph:
         edge structure (device models are keyed separately by the cache)."""
         return (tuple((t.name, t.ops, t.in_bytes, t.out_bytes)
                       for t in self.nodes), self.edges)
+
+    def frontier_subgraph(self, started: Iterable[str]
+                          ) -> tuple["TaskGraph",
+                                     tuple[tuple[str, str], ...]]:
+        """The not-yet-started successor frontier (mid-graph re-planning,
+        DESIGN.md §11): the subgraph of tasks NOT in ``started``, plus the
+        boundary edges (started producer → frontier consumer) that cross
+        the freeze line.
+
+        ``started`` must be *ancestor-closed* — a task cannot have started
+        before its parents finished, so a started task with a not-started
+        parent means the caller's progress snapshot is corrupt (raises).
+        In the returned subgraph each boundary edge's payload is folded
+        into the consumer's ``in_bytes`` (the frozen producer's output must
+        be read back from the host once the frontier is re-placed); callers
+        that re-solve the *full* graph with pinned assignments (the exact
+        path — same-device boundary edges stay free) want the boundary list
+        and the frontier names, not the folded bytes.
+        """
+        started_set = set(started)
+        unknown = started_set - set(self._index)
+        if unknown:
+            raise ValueError(f"unknown started tasks: {sorted(unknown)}")
+        for u, v in self.edges:
+            if v in started_set and u not in started_set:
+                raise ValueError(
+                    f"started task {v!r} has a not-started parent {u!r}: "
+                    "the started set is not ancestor-closed")
+        frontier = [t for t in self.nodes if t.name not in started_set]
+        boundary = tuple((u, v) for u, v in self.edges
+                         if u in started_set and v not in started_set)
+        extra_in: dict[str, float] = {}
+        for u, v in boundary:
+            extra_in[v] = extra_in.get(v, 0.0) + self.node(u).out_bytes
+        nodes = tuple(dataclasses.replace(
+            t, in_bytes=t.in_bytes + extra_in.get(t.name, 0.0))
+            for t in frontier)
+        edges = tuple((u, v) for u, v in self.edges
+                      if u not in started_set and v not in started_set)
+        return TaskGraph(nodes=nodes, edges=edges), boundary
 
 
 # ---------------------------------------------------------------------------

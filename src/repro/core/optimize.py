@@ -33,10 +33,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
 
-from .bus import (BusTopology, TaskSpec, _graph_topo_order,
-                  engine_finish_times, graph_finish_times)
+from .bus import (BusTopology, ClockState, TaskSpec, ZERO_CLOCKS,
+                  _graph_topo_order, engine_finish_times, graph_finish_times)
 from .device_model import DeviceProfile, priority_order
 
 _EPS = 1e-12
@@ -423,22 +423,26 @@ def _descend_assign(devices: Sequence[DeviceProfile],
                     tasks: Sequence[TaskSpec],
                     edges: Sequence[tuple[int, int]],
                     assign: list[int], order: Sequence[int],
-                    topo: BusTopology, *, max_evals: int = 2000
-                    ) -> tuple[list[int], int]:
+                    topo: BusTopology, *, max_evals: int = 2000,
+                    free: Sequence[int] | None = None,
+                    makespan=None) -> tuple[list[int], int]:
     """Reassignment descent on the exact graph makespan — ``_descend``'s
     pairwise-transfer loop in discrete per-task coordinates: move one task
     to another device, keep any strict improvement, repeat to a local
-    optimum."""
-    def makespan(a: Sequence[int]) -> float:
-        return max(graph_finish_times(devices, tasks, edges, a,
-                                      topology=topo, order=order))
+    optimum.  ``free`` restricts the moves to the given task indices
+    (partial solves pin the frozen tasks)."""
+    movable = list(free) if free is not None else list(range(len(tasks)))
+    if makespan is None:
+        def makespan(a: Sequence[int]) -> float:
+            return max(graph_finish_times(devices, tasks, edges, a,
+                                          topology=topo, order=order))
 
     best = makespan(assign)
     evals = 1
     improved = True
     while improved and evals < max_evals:
         improved = False
-        for i in range(len(tasks)):
+        for i in movable:
             for j in range(len(devices)):
                 if j == assign[i]:
                     continue
@@ -457,7 +461,12 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                         bus: str | BusTopology = "serialized",
                         priority: str = "rank",
                         refine: bool = True,
-                        exhaustive_limit: int = 1024) -> GraphScheduleResult:
+                        exhaustive_limit: int = 1024,
+                        pinned: Mapping[int, int] | None = None,
+                        ext: Mapping[int, tuple[float, float]] | None = None,
+                        clocks: ClockState = ZERO_CLOCKS,
+                        seed_assign: Sequence[int] | None = None,
+                        max_evals: int = 2000) -> GraphScheduleResult:
     """Minimize a task graph's makespan by list scheduling on the engine.
 
     HEFT shape: tasks are placed in decreasing upward-rank order
@@ -469,11 +478,24 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     with myopic device selection (each task alone on an empty timeline —
     ignores contention and edge locality), the benchmark's strawman.
 
-    Refinement: when the assignment space is small
-    (``len(devices)**len(tasks) <= exhaustive_limit``) the solver
+    Refinement: when the free assignment space is small
+    (``len(devices)**len(free) <= exhaustive_limit``) the solver
     enumerates every assignment under the same priority order and returns
     the exact optimum; otherwise reassignment descent polishes the HEFT
     placement to a local optimum on the same engine makespan.
+
+    Partial solve (mid-graph re-planning, DESIGN.md §11): ``pinned`` maps
+    task index -> device index for tasks whose assignment is *frozen*
+    (completed or already running); only the remaining tasks are placed and
+    refined.  ``ext`` prices the frozen tasks externally (their measured
+    ``(compute_end, avail)`` — see ``build_graph_timeline``), ``clocks``
+    carries the measured link/device clocks the frontier must queue behind,
+    and ``seed_assign`` seeds the refinement from the currently-executing
+    plan so the re-solve starts no worse than the lock-in it replaces.
+    When a seed is given the degenerate all-one-device sweeps are skipped —
+    the seed already provides the quality floor, and a partial solve runs
+    inside a live splice where solver latency stalls the straggler's worker
+    (``max_evals`` caps each descent for the same reason).
     """
     topo = BusTopology.from_spec(bus, devices)
     spec = bus.spec if isinstance(bus, BusTopology) else topo.spec
@@ -481,6 +503,8 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     if n == 0:
         z = [0.0] * len(devices)
         return GraphScheduleResult(z, 0.0, z, spec)
+    pinned = dict(pinned) if pinned else {}
+    free = [i for i in range(n) if i not in pinned]
     if priority == "rank":
         order = _rank_order(devices, tasks, edges)
     elif priority == "topo":
@@ -489,9 +513,17 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
         raise ValueError(f"unknown priority {priority!r} "
                          "(expected 'rank' or 'topo')")
 
+    def finish(a, o) -> list[float]:
+        return graph_finish_times(devices, tasks, edges, a, topology=topo,
+                                  order=o, clocks=clocks, ext=ext)
+
     assign = [-1] * n
+    for i, j in pinned.items():
+        assign[i] = j
     evals = 0
     for pos, i in enumerate(order):
+        if i in pinned:
+            continue
         prefix = order[: pos + 1]
         best_j, best_t = 0, math.inf
         for j in range(len(devices)):
@@ -503,24 +535,29 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                 t = graph_finish_times(devices, tasks, edges, solo,
                                        topology=topo, order=[i])[i]
             else:
-                t = graph_finish_times(devices, tasks, edges, assign,
-                                       topology=topo, order=prefix)[i]
+                t = finish(assign, prefix)[i]
             evals += 1
             if t < best_t - _EPS:
                 best_j, best_t = j, t
         assign[i] = best_j
 
     def makespan(a) -> float:
-        return max(graph_finish_times(devices, tasks, edges, a,
-                                      topology=topo, order=order))
+        return max(finish(a, order))
 
-    if refine:
-        if len(devices) ** n <= exhaustive_limit:
+    if refine and free:
+        # the exhaustive branch honours max_evals too: a latency-capped
+        # partial solve (mid-graph splice) must not sneak up to
+        # exhaustive_limit full-graph simulations through a small free set
+        if len(devices) ** len(free) <= min(exhaustive_limit, max_evals):
             import itertools
 
             best_a, best_t = list(assign), makespan(assign)
             evals += 1
-            for cand in itertools.product(range(len(devices)), repeat=n):
+            for combo in itertools.product(range(len(devices)),
+                                           repeat=len(free)):
+                cand = list(assign)
+                for i, j in zip(free, combo):
+                    cand[i] = j
                 t = makespan(cand)
                 evals += 1
                 if t < best_t - _EPS:
@@ -536,23 +573,50 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
             # Seeding from the degenerate points both restores the
             # never-worse-than-one-device floor and lets the descent peel
             # whole chains off the fastest device one improvement at a
-            # time.
-            seeds = [list(assign)] + [[j] * n for j in range(len(devices))]
+            # time.  Partial solves additionally seed from the plan being
+            # replaced (``seed_assign``), so a re-plan is never worse than
+            # staying locked in — under the re-fitted models.
+            seeds = [list(assign)]
+            budget = max_evals
+            if seed_assign is not None:
+                seeds.append(list(seed_assign))
+                # the straggler-rescue seed: every free task on the fastest
+                # (re-fitted) device — the shape the re-plan usually wants
+                # when one device just slowed down, and one the capped
+                # descent cannot reliably reach from EFT local optima
+                fastest = max(range(len(devices)),
+                              key=lambda j: devices[j].effective_speed)
+                rescue = list(assign)
+                for i in free:
+                    rescue[i] = fastest
+                seeds.append(rescue)
+                # a partial solve runs inside a live splice: split the eval
+                # budget across the seeds instead of paying it per seed
+                budget = max(40, max_evals // len(seeds))
+            else:
+                for j in range(len(devices)):
+                    one = list(assign)
+                    for i in free:
+                        one[i] = j
+                    seeds.append(one)
             best_a, best_t = None, math.inf
             for seed in seeds:
                 cand, e = _descend_assign(devices, tasks, edges, seed,
-                                          order, topo)
+                                          order, topo, free=free,
+                                          makespan=makespan,
+                                          max_evals=budget)
                 evals += e
                 t = makespan(cand)
                 if t < best_t - _EPS:
                     best_a, best_t = cand, t
             assign = best_a
 
-    task_finish = graph_finish_times(devices, tasks, edges, assign,
-                                     topology=topo, order=order)
+    task_finish = finish(assign, order)
     ops = [0.0] * len(devices)
     dev_finish = [0.0] * len(devices)
     for i, t in enumerate(tasks):
+        if assign[i] < 0:
+            continue
         ops[assign[i]] += float(t.ops)
         dev_finish[assign[i]] = max(dev_finish[assign[i]], task_finish[i])
     return GraphScheduleResult(ops=ops, makespan=max(task_finish),

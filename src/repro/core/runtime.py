@@ -25,16 +25,19 @@ deployment serving sustained traffic, need a *continuous* loop instead.
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
 import time
 from typing import Callable, Mapping, Sequence
 
-from .bus import ClockState, GraphTimelineSpec, Timeline, carry_clocks
+from .bus import (ClockState, GraphTimelineSpec, Timeline, _has_copy,
+                  carry_clocks, graph_finish_times)
 from .device_model import (DeviceProfile, LinearTimeModel, RooflineTimeModel)
 from .domain import Domain, PlanCache, Workload
 from .executor import DeviceTask, StreamCore
 from .framework import POAS, POASPlan
+from .optimize import solve_list_schedule
 from .schedule import DynamicScheduler
 
 
@@ -244,6 +247,26 @@ def _graph_sleep_tasks(job: "StreamJob", spec: GraphTimelineSpec,
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplanRecord:
+    """One mid-graph re-plan splice on a live DAG job (DESIGN.md §11).
+
+    ``frozen`` are the completed/running tasks kept in place, ``spliced``
+    the not-yet-started tasks whose tickets were revoked and re-issued
+    under ``spec`` (the re-solved full-graph spec, frozen assignments
+    pinned); ``planned`` is the frontier's re-planned partial timeline —
+    its per-link ticket order is what the executor spliced in, and what
+    ``verify_stream_invariants`` checks the measured grant order against.
+    """
+
+    at: float                    # stream time (model seconds) of the splice
+    straggler: str               # task whose slack tripped the monitor
+    frozen: tuple[str, ...]
+    spliced: tuple[str, ...]
+    spec: GraphTimelineSpec
+    planned: Timeline
+
+
 @dataclasses.dataclass
 class StreamJob:
     """One admitted workload's lifecycle through the loop."""
@@ -255,8 +278,20 @@ class StreamJob:
     measured: Timeline | None = None
     error: BaseException | None = None
     epoch_at_plan: int = 0             # DynamicScheduler.epoch when planned
+    replans: list[ReplanRecord] = dataclasses.field(default_factory=list)
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # mid-execution bookkeeping (threads: the straggler monitor runs on
+    # device worker threads; virtual: the deterministic replay)
+    _fed_tasks: set = dataclasses.field(default_factory=set)
+    _planned_compute: dict = dataclasses.field(default_factory=dict)
+    _handle: object = None
+    _replan_attempts: int = 0
+    # tasks whose straggler trigger was evaluated and produced no splice
+    # (the re-solve confirmed the lock-in): don't re-solve for them again
+    _checked_tasks: set = dataclasses.field(default_factory=set)
+    _replan_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock)
 
     def wait(self, timeout: float | None = None) -> "StreamJob":
         if not self._done.wait(timeout):
@@ -284,8 +319,54 @@ class StreamJob:
         """Measured latency of this job (first stage start → last end)."""
         return self.finish - self.start
 
+    @property
+    def final_spec(self):
+        """The spec the job actually executed under: the last re-plan's
+        spec when the job was spliced mid-graph, else the planned one."""
+        if self.replans:
+            return self.replans[-1].spec
+        return self.plan.schedule.spec if self.plan is not None else None
+
 
 TaskFactory = Callable[[StreamJob, POASPlan], Sequence[DeviceTask]]
+
+def _ancestor_closed_freeze(spec: GraphTimelineSpec,
+                            started: Sequence[str]
+                            ) -> tuple[list[str], list[str]]:
+    """(frozen, frontier) for a mid-graph re-plan: the started set closed
+    over ancestors, and the migratable remainder, both in task order.
+
+    A stage group counts as started the moment its device worker picks it
+    up — possibly while a cross-device parent is still pending (the group
+    blocks in its dependency wait).  That consumer's stages were built
+    against the parent's original placement, so the parent must freeze in
+    place too: without the closure the progress snapshot would not be
+    ancestor-closed and ``frontier_subgraph`` would (rightly) reject it.
+    """
+    parents = spec.parents_of()
+    frozen = set(started)
+    stack = list(started)
+    while stack:
+        for u in parents.get(stack.pop(), ()):
+            if u not in frozen:
+                frozen.add(u)
+                stack.append(u)
+    frozen_l = [t.name for t in spec.tasks if t.name in frozen]
+    frontier = [t.name for t, a in zip(spec.tasks, spec.assign)
+                if a >= 0 and t.name not in frozen]
+    return frozen_l, frontier
+
+
+# Per-descent evaluation cap for the threaded mid-graph re-solve: it runs
+# in-line on the straggling device's worker thread (freezing its queue), and
+# on a serialized bus the other devices' first copies wait on the straggler's
+# revoked grants — every engine evaluation directly delays the whole splice.
+_REPLAN_MAX_EVALS = 80
+
+# Predicted-gain gate: splice only when the re-solved frontier beats the
+# locked-in plan (re-priced under the same re-fitted models, ext and clocks)
+# by at least this factor — a marginal prediction is not worth the splice.
+_REPLAN_MIN_GAIN = 1.05
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +403,23 @@ class CoExecutionRuntime:
         how many jobs may be planned ahead of the oldest unfinished one.
         In virtual mode this sets the observation lag (a plan dispatched
         while k jobs are in flight cannot have seen their measurements).
+    replan:
+        mid-graph re-planning (DESIGN.md §11): while a DAG job executes,
+        per-task measurements feed the pump *during* execution, and a task
+        whose measured compute exceeds ``straggler_threshold`` × its
+        planned time freezes the completed/running tasks, re-solves the
+        not-yet-started frontier under the re-fitted models (assignments
+        pinned, clocks carried), and splices the new assignment into the
+        live run via the StreamCore's ticket revoke/re-issue.  In virtual
+        mode the same protocol is replayed deterministically at the moment
+        the first straggling compute would have finished.
+    straggler_threshold:
+        measured/planned per-task compute slack ratio that triggers a
+        re-plan (needs ``replan=True`` and a dynamic domain).
+    replan_min_frontier:
+        minimum number of not-yet-started tasks worth re-solving for.
+    max_replans_per_job:
+        re-plan attempts allowed per job (1 = classic one-shot rescue).
     """
 
     def __init__(self, domain: Domain, *,
@@ -332,7 +430,11 @@ class CoExecutionRuntime:
                  feedback: bool = True,
                  carry_clocks: bool = True,
                  max_inflight: int = 2,
-                 time_scale: float = 1.0):
+                 time_scale: float = 1.0,
+                 replan: bool = False,
+                 straggler_threshold: float = 1.5,
+                 replan_min_frontier: int = 2,
+                 max_replans_per_job: int = 1):
         if executor not in ("threads", "virtual"):
             raise ValueError(f"unknown executor {executor!r}")
         self.domain = domain
@@ -348,10 +450,19 @@ class CoExecutionRuntime:
         if feedback and self.dyn is not None:
             self.pump = ObservationPump(self.dyn, names,
                                         time_scale=time_scale)
+        self.replan = bool(replan)
+        self.straggler_threshold = float(straggler_threshold)
+        self.replan_min_frontier = max(1, int(replan_min_frontier))
+        self.max_replans_per_job = max(0, int(max_replans_per_job))
         self.jobs: list[StreamJob] = []
         self._task_factory = task_factory or model_sleep_tasks(
             truth, time_scale=time_scale)
         self._core = StreamCore() if executor == "threads" else None
+        if self._core is not None and (self.pump is not None or self.replan):
+            # per-task measurements flow DURING execution, not only at job
+            # completion — the straggler monitor and the observation pump
+            # both hang off the core's event hook
+            self._core.on_event = self._on_stream_event
         self._plan_clocks = ClockState()
         self._meas_clocks = ClockState()
         self._virtual_events: list = []
@@ -428,7 +539,9 @@ class CoExecutionRuntime:
         with self._lock:
             done = [j for j in self.jobs if j.done and j.error is None]
         spans = sorted(j.span for j in done)
-        p = lambda q: spans[min(len(spans) - 1, int(q * len(spans)))] \
+        # nearest-rank percentile: ceil(q*n)-1, NOT int(q*n) — the latter
+        # returns the max for p50 of two samples
+        p = lambda q: spans[max(0, math.ceil(q * len(spans)) - 1)] \
             if spans else 0.0
         return {
             "jobs_done": len(done),
@@ -437,6 +550,7 @@ class CoExecutionRuntime:
             "p95_job_span_s": p(0.95),
             "observations": self.pump.observations if self.pump else 0,
             "refit_epoch": self.dyn.epoch if self.dyn else 0,
+            "replans": sum(len(j.replans) for j in done),
             "plan_cache": self.poas.cache.stats() if self.poas.cache else {},
         }
 
@@ -491,7 +605,13 @@ class CoExecutionRuntime:
             raise ValueError("virtual execution needs Schedule.spec")
         truth_devs = [self.truth(job.uid, d) if self.truth else d
                       for d in spec.devices]
-        job.measured = spec.rebase(self._meas_clocks, devices=truth_devs)
+        base = self._meas_clocks
+        job.measured = spec.rebase(base, devices=truth_devs)
+        if self.replan and isinstance(spec, GraphTimelineSpec):
+            replayed = self._replay_replan_virtual(job, spec, truth_devs,
+                                                   base, job.measured)
+            if replayed is not None:
+                job.measured = replayed
         self._meas_clocks = self._next_clocks(job.measured, self._meas_clocks)
         with self._lock:
             self._virtual_events.extend(job.measured.events)
@@ -499,13 +619,289 @@ class CoExecutionRuntime:
         job._done.set()
         self._inflight.release()
 
+    def _replay_replan_virtual(self, job: StreamJob,
+                               spec: GraphTimelineSpec,
+                               truth_devs: Sequence[DeviceProfile],
+                               base: ClockState,
+                               measured: Timeline) -> Timeline | None:
+        """Deterministic virtual-time replay of the mid-graph re-plan
+        protocol: detect the straggler at the moment its measured compute
+        would have finished, freeze everything that had started by then,
+        feed the observations the monitor would have seen, re-solve the
+        frontier under the re-fitted models, and re-price it under the
+        ground truth from the frozen tasks' carried clocks.  Returns the
+        spliced timeline, or None when nothing triggers (or the re-solve
+        confirms the lock-in)."""
+        planned_s = {t.name: spec.devices[a].compute(t.ops)
+                     for t, a in zip(spec.tasks, spec.assign) if a >= 0}
+        comp = {e.task: e for e in measured.events if e.kind == "compute"}
+        stragglers = [n for n, e in comp.items()
+                      if planned_s.get(n, 0.0) > 0.0 and e.duration >
+                      self.straggler_threshold * planned_s[n]]
+        if not stragglers or job._replan_attempts >= self.max_replans_per_job:
+            return None
+        # detection moment: the first straggling compute to finish — the
+        # earliest point a measured-vs-planned monitor has the evidence
+        trip = min(stragglers, key=lambda n: comp[n].end)
+        t_r = comp[trip].end
+        first_start = {t.name: min((e.start for e in measured.events
+                                    if e.task == t.name), default=math.inf)
+                       for t in spec.tasks}
+        # ancestor-close the freeze: the engine does not gate a task's
+        # EXTERNAL input copy on its parents, so a consumer's first event
+        # can precede a pending parent's — same closure as the threaded
+        # monitor
+        started, pend = _ancestor_closed_freeze(
+            spec, [t.name for t in spec.tasks
+                   if first_start[t.name] < t_r - 1e-12])
+        index = {t.name: i for i, t in enumerate(spec.tasks)}
+        if len(pend) < self.replan_min_frontier:
+            return None
+        if hasattr(job.workload, "frontier_subgraph"):
+            job.workload.frontier_subgraph(started)
+        # observations the pump would have delivered by t_r
+        if self.pump is not None:
+            for name in started:
+                e = comp.get(name)
+                if e is not None and e.end <= t_r + 1e-12 \
+                        and name not in job._fed_tasks \
+                        and spec.tasks[index[name]].ops > 0.0:
+                    job._fed_tasks.add(name)
+                    self.pump.observe(e.device,
+                                      spec.tasks[index[name]].ops,
+                                      e.duration * self.pump.time_scale)
+        started_set = set(started)
+        frozen_events = [e for e in measured.events
+                         if e.task in started_set]
+        # frozen tickets stay ahead of re-issued ones on every link, so the
+        # frontier re-prices from the clocks the frozen tail leaves behind
+        clocks = carry_clocks(Timeline(frozen_events), base)
+        devices = self.dyn.snapshot() if self.dyn is not None \
+            else list(spec.devices)
+        # frozen pricing: same derivation as the threaded monitor (virtual
+        # frozen events are complete, so the measured branches always hit)
+        ext = self._frozen_ext(spec, started, Timeline(frozen_events),
+                               t_r, devices, 1.0)
+        pinned = {index[n]: spec.assign[index[n]] for n in started}
+        res = solve_list_schedule(devices, spec.tasks, spec.edges,
+                                  bus=spec.topology, pinned=pinned,
+                                  ext=ext, clocks=clocks,
+                                  seed_assign=spec.assign)
+        job._replan_attempts += 1
+        if not self._worth_splicing(res, devices, spec, ext, clocks):
+            return None   # the re-solve confirms the lock-in
+        new_spec = dataclasses.replace(spec, devices=tuple(devices),
+                                       assign=tuple(res.assign),
+                                       order=tuple(res.order))
+        ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
+        planned_frontier = new_spec.rebase_partial(clocks, ext=ext_names)
+        truth_frontier = new_spec.rebase_partial(clocks, ext=ext_names,
+                                                 devices=truth_devs)
+        job.replans.append(ReplanRecord(
+            at=t_r, straggler=trip, frozen=tuple(started),
+            spliced=tuple(pend), spec=new_spec, planned=planned_frontier))
+        return Timeline(sorted(frozen_events + truth_frontier.events,
+                               key=lambda e: (e.start, e.end)))
+
     # -- threaded execution -------------------------------------------------
 
     def _execute_threads(self, job: StreamJob) -> None:
         tasks = self._task_factory(job, job.plan)
         order = job.plan.schedule.timeline.link_ticket_order()
+        spec = job.plan.schedule.spec
+        if isinstance(spec, GraphTimelineSpec):
+            # what the straggler monitor compares measured computes against
+            job._planned_compute = {
+                t.name: spec.devices[a].compute(t.ops)
+                for t, a in zip(spec.tasks, spec.assign) if a >= 0}
         handle = self._core.dispatch(tasks, order, job=f"j{job.uid}")
+        job._handle = handle
         handle.add_done_callback(lambda h: self._complete(job, h))
+
+    # -- mid-graph re-planning (threads; DESIGN.md §11) ---------------------
+
+    def _on_stream_event(self, jid: str, ev) -> None:
+        """StreamCore event hook (runs on device worker threads): feed
+        per-task compute measurements into the pump the moment they land,
+        and trip the straggler monitor on planned-vs-measured slack."""
+        if ev.kind != "compute" or ev.task is None:
+            return
+        try:
+            uid = int(jid.lstrip("j"))
+        except ValueError:
+            return
+        with self._lock:
+            job = self.jobs[uid] if 0 <= uid < len(self.jobs) else None
+        if job is None or job.plan is None:
+            return
+        spec = job.final_spec
+        if not isinstance(spec, GraphTimelineSpec):
+            return
+        ops = next((float(t.ops) for t in spec.tasks if t.name == ev.task),
+                   0.0)
+        if self.pump is not None and ops > 0.0 and ev.duration > 0.0 \
+                and ev.task not in job._fed_tasks:
+            job._fed_tasks.add(ev.task)
+            self.pump.observe(ev.device, ops, ev.duration)
+        if not self.replan:
+            return
+        planned_s = job._planned_compute.get(ev.task, 0.0)
+        measured_s = ev.duration / self.time_scale
+        if planned_s <= 0.0 or measured_s <= \
+                self.straggler_threshold * planned_s:
+            return
+        if ev.task in job._checked_tasks:
+            return   # this task's slack was already re-solved: lock-in held
+        self._replan_threaded(job, ev)
+
+    def _frozen_ext(self, spec: GraphTimelineSpec, started: Sequence[str],
+                    measured: Timeline, now_model: float,
+                    devices: Sequence[DeviceProfile],
+                    time_scale: float) -> dict[int, tuple[float, float]]:
+        """(compute_end, avail) per frozen task, in model seconds: measured
+        values where the stage already landed, refitted-model estimates for
+        the still-running remainder; ``avail = inf`` marks an output that
+        never reaches the host (so the re-solve cannot move its consumers
+        off-device)."""
+        index = {t.name: i for i, t in enumerate(spec.tasks)}
+        stage_planned = spec.stage_seconds(devices)
+        ext: dict[int, tuple[float, float]] = {}
+        for name in started:
+            i = index[name]
+            a = spec.assign[i]
+            if a < 0:
+                continue
+            t = spec.tasks[i]
+            evs = measured.task_events(name)
+            comp_ends = [e.end for e in evs if e.kind == "compute"]
+            out_ends = [e.end for e in evs if e.kind == "copy_out"]
+            if comp_ends:
+                c_end = max(comp_ends) / time_scale
+            else:   # running: charge the refitted model from now
+                c_end = now_model + devices[a].compute(t.ops)
+            if out_ends:
+                avail = max(out_ends) / time_scale
+            elif not _has_copy(devices[a]) or t.out_bytes <= 0.0:
+                avail = c_end   # host-resident the moment compute ends
+            elif stage_planned.get(name, {}).get("copy_out"):
+                # staging planned but not yet measured: estimate
+                avail = c_end + stage_planned[name]["copy_out"]
+            else:
+                avail = math.inf   # never staged: not host-readable
+            ext[i] = (c_end, avail)
+        return ext
+
+    def _replan_threaded(self, job: StreamJob, ev) -> None:
+        with job._replan_lock:
+            if job._replan_attempts >= self.max_replans_per_job:
+                return
+            handle = job._handle
+            core = self._core
+            if handle is None or core is None or handle.done:
+                return
+            spec = job.final_spec
+            pending = core.pending_tasks(handle.job)
+            started, frontier = _ancestor_closed_freeze(
+                spec, [t.name for t in spec.tasks if t.name not in pending])
+            pend = set(frontier)
+            if len(pend) < self.replan_min_frontier:
+                return
+            if hasattr(job.workload, "frontier_subgraph"):
+                # sanity: the closed snapshot is ancestor-closed by
+                # construction; a raise here means the progress view is
+                # corrupt
+                job.workload.frontier_subgraph(started)
+            ts = self.time_scale
+            devices = self.dyn.snapshot() if self.dyn is not None \
+                else list(spec.devices)
+            now_model = core.now() / ts
+            measured = handle.timeline()
+            ext = self._frozen_ext(spec, started, measured, now_model,
+                                   devices, ts)
+            clocks = self._splice_clocks(spec, ext, core.stream_timeline(),
+                                         ts)
+            index = {t.name: i for i, t in enumerate(spec.tasks)}
+            pinned = {index[n]: spec.assign[index[n]] for n in started}
+            # the re-solve runs ON the straggler's worker thread — that is
+            # deliberate (it freezes the straggler's queue so its successors
+            # stay migratable) but means solver latency stalls the splice:
+            # cap the descent hard
+            res = solve_list_schedule(devices, spec.tasks, spec.edges,
+                                      bus=spec.topology, pinned=pinned,
+                                      ext=ext, clocks=clocks,
+                                      seed_assign=spec.assign,
+                                      max_evals=_REPLAN_MAX_EVALS)
+            new_spec = dataclasses.replace(spec, devices=tuple(devices),
+                                           assign=tuple(res.assign),
+                                           order=tuple(res.order))
+            if not self._worth_splicing(res, devices, spec, ext, clocks):
+                # the re-solve confirms (or barely beats) the lock-in:
+                # nothing to splice, and a no-op trigger (e.g.
+                # sleep-overhead noise on a tiny task) must NOT burn the
+                # job's re-plan budget.  The monitor baseline refreshes
+                # from the re-fitted models under the assignment that
+                # KEEPS executing — the original one, not the rejected
+                # re-solve's.
+                job._planned_compute = {
+                    t.name: devices[a].compute(t.ops)
+                    for t, a in zip(spec.tasks, spec.assign) if a >= 0}
+                job._checked_tasks.add(ev.task)
+                return
+            job._replan_attempts += 1
+            job._planned_compute = {
+                t.name: devices[a].compute(t.ops)
+                for t, a in zip(new_spec.tasks, new_spec.assign) if a >= 0}
+            ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
+            frontier = new_spec.rebase_partial(clocks, ext=ext_names)
+            sched = dataclasses.replace(job.plan.schedule, spec=new_spec,
+                                        timeline=frontier)
+            plan2 = dataclasses.replace(job.plan, schedule=sched)
+            repl = [t for t in self._task_factory(job, plan2)
+                    if t.task in pend]
+            spliced = core.reissue(handle, repl,
+                                   frontier.link_ticket_order())
+            job.replans.append(ReplanRecord(
+                at=now_model, straggler=ev.task, frozen=tuple(started),
+                spliced=tuple(spliced), spec=new_spec, planned=frontier))
+
+    def _worth_splicing(self, res, devices: Sequence[DeviceProfile],
+                        spec: GraphTimelineSpec,
+                        ext: Mapping[int, tuple[float, float]],
+                        clocks: ClockState) -> bool:
+        """Splice only for a real predicted gain: the re-solved makespan
+        must beat the locked-in assignment re-priced under the SAME
+        re-fitted models, frozen ext times, and carried clocks — and under
+        its OWN planned order (that is what keeps executing if the splice
+        is rejected)."""
+        if tuple(res.assign) == tuple(spec.assign):
+            return False
+        seed_mk = max(graph_finish_times(devices, spec.tasks, spec.edges,
+                                         spec.assign, topology=spec.topology,
+                                         order=spec.order, clocks=clocks,
+                                         ext=ext))
+        return res.makespan * _REPLAN_MIN_GAIN < seed_mk
+
+    def _splice_clocks(self, spec: GraphTimelineSpec,
+                       ext: Mapping[int, tuple[float, float]],
+                       stream: Timeline, time_scale: float) -> ClockState:
+        """Where each link/device clock stands for the frontier re-pricing:
+        the measured stream so far, floored by the frozen tasks' estimated
+        tails (their pending copy_outs stay ahead of re-issued tickets on
+        each link; a running compute holds its device)."""
+        base = carry_clocks(stream)
+        links = {k: v / time_scale for k, v in base.links.items()}
+        devs = {k: v / time_scale for k, v in base.devices.items()}
+        for i, (c_end, avail) in ext.items():
+            a = spec.assign[i]
+            if a < 0:
+                continue
+            dname = spec.devices[a].name
+            devs[dname] = max(devs.get(dname, 0.0), c_end)
+            if math.isfinite(avail) and avail > c_end:
+                lk = spec.topology.link_of(dname, "out")
+                if lk is not None:
+                    links[lk.name] = max(links.get(lk.name, 0.0), avail)
+        return ClockState(links=links, devices=devs)
 
     def _complete(self, job: StreamJob, handle) -> None:
         # Runs as a JobHandle done-callback on a device worker thread: it
@@ -528,12 +924,16 @@ class CoExecutionRuntime:
     def _feed(self, job: StreamJob) -> None:
         if self.pump is None or job.measured is None:
             return
-        spec = job.plan.schedule.spec if job.plan else None
+        spec = job.final_spec
         if spec is None:
             return
         if isinstance(spec, GraphTimelineSpec):
-            # DAG jobs observe per task (many sizes per device per job)
-            self.pump.feed_tasks(job.measured, spec.task_ops())
+            # DAG jobs observe per task (many sizes per device per job);
+            # tasks already fed during execution (the straggler monitor's
+            # early feed) are skipped, not observed twice
+            rows = [r for r in spec.task_ops()
+                    if r[0] not in job._fed_tasks]
+            self.pump.feed_tasks(job.measured, rows)
         else:
             self.pump.feed(job.measured, spec.ops_by_device())
 
@@ -541,6 +941,29 @@ class CoExecutionRuntime:
 # ---------------------------------------------------------------------------
 # Cross-plan invariant checks (tests + BENCH_streaming acceptance)
 # ---------------------------------------------------------------------------
+
+
+def _planned_link_order(j: StreamJob) -> dict[str, list[tuple]]:
+    """The per-link grant order the job was *actually* issued under: the
+    original plan's order for tickets never re-issued, then — for each
+    mid-graph re-plan, in splice order — the frontier's re-planned order
+    for the tasks that replan owns (the last splice of a task wins, exactly
+    as the live buses saw it)."""
+    planned = j.plan.schedule.timeline.link_ticket_order()
+    if not j.replans:
+        return planned
+    owner: dict[str, int] = {}
+    for idx, r in enumerate(j.replans):
+        for name in r.spliced:
+            owner[name] = idx
+    out = {link: [t for t in seq
+                  if not (len(t) == 3 and t[0] in owner)]
+           for link, seq in planned.items()}
+    for idx, r in enumerate(j.replans):
+        for link, seq in r.planned.link_ticket_order().items():
+            out.setdefault(link, []).extend(
+                t for t in seq if owner.get(t[0]) == idx)
+    return out
 
 
 def verify_stream_invariants(jobs: Sequence[StreamJob], *,
@@ -553,7 +976,8 @@ def verify_stream_invariants(jobs: Sequence[StreamJob], *,
     * per job and device, compute chunk j starts only after input chunk j
       landed, and output chunk j only after compute chunk j;
     * per job and link, the measured grant order equals the planned
-      priority/ticket order.
+      priority/ticket order — for a mid-graph re-planned job, the splice of
+      the original order (frozen tasks) with each re-plan's frontier order.
     """
     problems: list[str] = []
     done = [j for j in jobs if j.measured is not None and j.error is None]
@@ -592,10 +1016,15 @@ def verify_stream_invariants(jobs: Sequence[StreamJob], *,
                         problems.append(
                             f"job {j.uid} {name}/{task}: compute before "
                             f"input copy {i_ev.chunk} landed")
-                for c_ev, o_ev in zip(comps[-1:], outs):
-                    if o_ev.start < c_ev.end - eps:
-                        problems.append(f"job {j.uid} {name}/{task}: "
-                                        "copy_out before compute ended")
+                # EVERY output event must start after compute ends — the
+                # old zip(comps[-1:], outs) paired only the first output
+                # with the last compute, silently skipping the rest
+                if comps:
+                    c_end = comps[-1].end
+                    for o_ev in outs:
+                        if o_ev.start < c_end - eps:
+                            problems.append(f"job {j.uid} {name}/{task}: "
+                                            "copy_out before compute ended")
                 continue
             for i_ev, c_ev in zip(ins, comps):
                 if c_ev.start < i_ev.end - eps:
@@ -605,14 +1034,15 @@ def verify_stream_invariants(jobs: Sequence[StreamJob], *,
                 if o_ev.start < c_ev.end - eps:
                     problems.append(f"job {j.uid} {name}: copy_out chunk "
                                     f"{o_ev.chunk} before its compute ended")
-        # planned per-link grant order is replayed
+        # planned per-link grant order is replayed (splice-aware)
         if j.plan is None:
             continue
-        planned = j.plan.schedule.timeline.link_ticket_order()
+        planned = _planned_link_order(j)
         measured = j.measured.link_ticket_order()
         for link, want in planned.items():
             got = measured.get(link, [])
-            want = [t for t in want if t in set(got)]  # subset task lists
+            got_set = set(got)   # hoisted: one set, not one per element
+            want = [t for t in want if t in got_set]   # subset task lists
             if got != want:
                 problems.append(f"job {j.uid} link {link}: grant order "
                                 f"{got} != planned {want}")

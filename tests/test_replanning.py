@@ -1,0 +1,423 @@
+"""Mid-graph re-planning (DESIGN.md §11): straggler detection → frontier
+freeze → pinned re-solve → ticket re-issue, in deterministic virtual time
+and through the real threaded StreamCore — plus regression tests for the
+runtime-hardening bugfix sweep (TicketBus under ``python -O``, stats
+percentiles, the DAG copy-out invariant check)."""
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core import (CoExecutionRuntime, CopyModel, DeviceProfile,
+                        GemmDomain, GemmWorkload, LinearTimeModel, NO_COPY,
+                        TaskGraph, TaskGraphDomain, TaskNode, TicketBus,
+                        Timeline, diamond, solve_list_schedule,
+                        transformer_block, truth_from_profiles,
+                        verify_graph_dependencies, verify_stream_invariants)
+from repro.core.bus import BusEvent
+from repro.core.runtime import StreamJob
+
+THROTTLE = 6.0
+
+
+def _dev(name, tflops, bw=None, b=1e-4):
+    ops_per_s = tflops * 1e12 / 2
+    copy = NO_COPY if bw is None else CopyModel(bw, dtype_size=4)
+    return DeviceProfile(name, "gpu" if bw else "cpu",
+                         LinearTimeModel(a=1 / ops_per_s, b=b), copy)
+
+
+def _devices():
+    return [_dev("cpu", 0.5), _dev("gpu", 6.0, bw=16e9),
+            _dev("xpu", 12.0, bw=16e9)]
+
+
+def _truth(factor=THROTTLE, device="xpu"):
+    """Ground truth throttling ``device`` from the very first job — the
+    plan is solved with nominal models, execution is slow: the
+    mid-DAG-straggler scenario."""
+    return truth_from_profiles(
+        _devices(), lambda uid, name: factor if name == device else 1.0)
+
+
+def _block():
+    return transformer_block(d_model=1024, seq=2048, groups=4)
+
+
+# ------------------------------------------------ frontier extraction -------
+
+
+def test_frontier_subgraph_extracts_not_started_tasks():
+    g = TaskGraph(nodes=(TaskNode("a", 1e9, out_bytes=4e6),
+                         TaskNode("b", 2e9, in_bytes=1e6, out_bytes=1e6),
+                         TaskNode("c", 3e9)),
+                  edges=(("a", "b"), ("b", "c")))
+    sub, boundary = g.frontier_subgraph({"a"})
+    assert [t.name for t in sub.nodes] == ["b", "c"]
+    assert boundary == (("a", "b"),)
+    # the boundary payload is folded into the consumer's external input
+    assert sub.node("b").in_bytes == pytest.approx(1e6 + 4e6)
+    assert sub.edges == (("b", "c"),)
+    # empty frontier / full frontier round-trips
+    sub2, b2 = g.frontier_subgraph(set())
+    assert len(sub2) == 3 and b2 == ()
+
+
+def test_frontier_subgraph_rejects_non_ancestor_closed_snapshot():
+    g = TaskGraph(nodes=(TaskNode("a", 1.0), TaskNode("b", 1.0)),
+                  edges=(("a", "b"),))
+    with pytest.raises(ValueError, match="not ancestor-closed"):
+        g.frontier_subgraph({"b"})
+    with pytest.raises(ValueError, match="unknown started"):
+        g.frontier_subgraph({"zzz"})
+
+
+# ----------------------------------------------------- partial solve --------
+
+
+def test_solve_list_schedule_pinned_tasks_keep_assignment():
+    devs = _devices()
+    g = diamond(ops=8e9, width=3)
+    pinned = {0: 0, 1: 1}   # src on cpu, first branch on gpu
+    res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                              bus="serialized", pinned=pinned)
+    assert res.assign[0] == 0 and res.assign[1] == 1
+    assert all(a >= 0 for a in res.assign)
+
+
+def test_partial_solve_with_ext_and_clocks_prices_frontier_only():
+    """Frozen tasks priced externally: their (compute_end, avail) gate the
+    frontier; an inf avail forbids moving consumers off the frozen
+    producer's device (its output never reached the host)."""
+    devs = _devices()
+    g = TaskGraph(nodes=(TaskNode("a", 4e9, out_bytes=8e6),
+                         TaskNode("b", 4e9, out_bytes=8e6),
+                         TaskNode("c", 1e9)),
+                  edges=(("a", "b"), ("b", "c")))
+    specs, edges = g.task_specs(), g.edge_indices()
+    # 'a' frozen on xpu, output staged at t=0.05; force b cross-device —
+    # its read of the staged output cannot begin before avail
+    res = solve_list_schedule(devs, specs, edges, bus="serialized",
+                              pinned={0: 2, 1: 1}, ext={0: (0.04, 0.05)})
+    assert res.assign[0] == 2 and res.assign[1] == 1
+    assert res.task_finish[1] >= 0.05 - 1e-12
+    # 'a' frozen on xpu with output NEVER staged: b must stay on xpu
+    res2 = solve_list_schedule(devs, specs, edges, bus="serialized",
+                               pinned={0: 2}, ext={0: (0.04, math.inf)})
+    assert res2.assign[1] == 2
+    assert math.isfinite(res2.makespan)
+
+
+def test_rebase_partial_emits_frontier_events_only():
+    from repro.core import POAS
+    dom = TaskGraphDomain(_devices(), bus="serialized")
+    plan = POAS(dom).plan(_block())
+    spec = plan.schedule.spec
+    frozen = spec.tasks[spec.order[0]].name
+    i = spec.order[0]
+    tl = spec.rebase_partial(ext={frozen: (1e-3, 2e-3)})
+    names = {e.task for e in tl.events}
+    assert frozen not in names
+    assert names == {t.name for j, t in enumerate(spec.tasks)
+                     if j != i and spec.assign[j] >= 0}
+
+
+# -------------------------------------------- virtual-time re-planning ------
+
+
+def _run_virtual(replan: bool, workloads, **kw):
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    rt = CoExecutionRuntime(dom, executor="virtual", truth=_truth(),
+                            feedback=True, max_inflight=1, replan=replan,
+                            straggler_threshold=1.3, **kw)
+    try:
+        jobs = rt.run_stream(workloads)
+        return rt, jobs
+    finally:
+        rt.shutdown()
+
+
+def test_virtual_replan_migrates_frontier_and_beats_locked_in_plan():
+    """Acceptance: a device throttling mid-DAG loses its not-yet-started
+    successors to the re-plan, and the measured makespan is strictly —
+    and substantially — better than the locked-in plan's."""
+    g = _block()
+    _, locked = _run_virtual(False, [g])
+    rt, jobs = _run_virtual(True, [g])
+    j = jobs[0]
+    assert len(j.replans) == 1
+    r = j.replans[0]
+    assert r.spliced and r.frozen
+    # the frontier really migrated: fewer frontier tasks on the throttled
+    # device than the locked-in assignment kept there
+    old, new = j.plan.schedule.spec.assign, r.spec.assign
+    idx = {t.name: k for k, t in enumerate(r.spec.tasks)}
+    moved = [n for n in r.spliced if new[idx[n]] != old[idx[n]]]
+    assert moved, "re-plan spliced but moved nothing"
+    assert j.span < locked[0].span - 1e-12
+    assert locked[0].span / j.span >= 1.10
+    # the protocol stayed sound across the splice point
+    assert verify_stream_invariants(jobs) == []
+    assert verify_graph_dependencies(j.final_spec, j.measured) == []
+    # frozen tasks kept their measured events untouched
+    frozen_events = [e for e in j.measured.events if e.task in set(r.frozen)]
+    assert frozen_events
+    assert min(e.start for e in frozen_events) < r.at
+
+
+def test_virtual_replan_feeds_observations_at_detection_time():
+    rt, jobs = _run_virtual(True, [_block()])
+    j = jobs[0]
+    assert j.replans
+    # the straggler's measurement reached the scheduler: later models are
+    # re-fitted (epoch bumped) and the re-solved spec uses them
+    assert rt.dyn.epoch > 0
+    assert rt.stats()["replans"] == 1
+    # re-fit visible in the re-plan's spec: throttled xpu model got slower
+    xpu_old = j.plan.schedule.spec.devices[2]
+    xpu_new = j.replans[0].spec.devices[2]
+    assert xpu_new.compute(1e9) > 1.5 * xpu_old.compute(1e9)
+
+
+def test_virtual_replan_noop_without_straggler():
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual",
+                            truth=truth_from_profiles(_devices()),
+                            feedback=True, max_inflight=1,
+                            replan=True) as rt:
+        jobs = rt.run_stream([_block()] * 3)
+    assert all(not j.replans for j in jobs)
+    assert verify_stream_invariants(jobs) == []
+
+
+def test_virtual_replan_only_hits_stale_planned_jobs():
+    """Jobs planned AFTER the re-fit see the throttle in their models —
+    no straggler slack, no re-plan; only the job caught in flight when the
+    throttle appears is spliced."""
+    rt, jobs = _run_virtual(True, [_block()] * 4)
+    assert len(jobs[0].replans) == 1
+    # once the models track the throttle, later jobs are planned correctly
+    assert all(not j.replans for j in jobs[2:])
+    assert verify_stream_invariants(jobs) == []
+    for j in jobs:
+        assert verify_graph_dependencies(j.final_spec, j.measured) == []
+
+
+def test_ancestor_closed_freeze_freezes_pending_parent_of_started_child():
+    """Regression: a device worker marks a stage group 'started' the moment
+    it dequeues it — possibly while a cross-device parent is still pending
+    (the group blocks in its dependency wait).  The monitor's freeze must
+    close over ancestors, or the progress snapshot is not ancestor-closed
+    and the re-plan would crash the job instead of rescuing it."""
+    from repro.core.bus import BusTopology, GraphTimelineSpec, TaskSpec
+    from repro.core.runtime import _ancestor_closed_freeze
+    devs = _devices()
+    spec = GraphTimelineSpec(
+        devices=tuple(devs),
+        tasks=(TaskSpec("a", 1e9, out_bytes=1e6), TaskSpec("b", 1e9),
+               TaskSpec("c", 1e9)),
+        edges=((0, 1),), assign=(2, 1, 0), order=(0, 1, 2),
+        topology=BusTopology.serialized(devs))
+    # 'b' was dequeued (started) while its parent 'a' is still pending
+    frozen, frontier = _ancestor_closed_freeze(spec, ["b"])
+    assert frozen == ["a", "b"]
+    assert frontier == ["c"]
+    # and the closed set passes the workload-level validation
+    g = TaskGraph(nodes=(TaskNode("a", 1e9, out_bytes=1e6),
+                         TaskNode("b", 1e9), TaskNode("c", 1e9)),
+                  edges=(("a", "b"),))
+    sub, _ = g.frontier_subgraph(frozen)
+    assert [t.name for t in sub.nodes] == ["c"]
+
+
+# ------------------------------------------------ threaded splice -----------
+
+
+def test_threaded_replan_splices_live_job_with_clean_invariants():
+    """Acceptance (threaded half): the StreamCore revokes the frontier's
+    not-yet-granted tickets and re-issues them on the re-planned devices —
+    dependency and per-link serialization invariants hold across the
+    splice point, and the measured grant order matches the spliced plan."""
+    g = _block()
+    spans = {}
+    for replan in (False, True):
+        dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+        with CoExecutionRuntime(dom, executor="threads", truth=_truth(),
+                                feedback=True, max_inflight=1,
+                                time_scale=10.0, replan=replan,
+                                straggler_threshold=1.3) as rt:
+            jobs = rt.run_stream([g], timeout=120)
+            j = jobs[0]
+            assert j.error is None
+            spans[replan] = j.span
+            assert verify_stream_invariants(jobs) == []
+            assert verify_graph_dependencies(j.final_spec, j.measured) == []
+            if replan:
+                assert len(j.replans) == 1
+                assert j.replans[0].spliced
+                assert rt.pump.observations > 0
+    # the spliced run beats the locked-in one by the acceptance margin
+    # (wall clock; the model-level gap is ~2x at this throttle, so 1.10x
+    # leaves generous headroom for scheduler noise)
+    assert spans[False] / spans[True] >= 1.10
+
+
+def test_threaded_replan_keeps_stream_correct_across_following_jobs():
+    """A splice must not wedge the persistent buses: jobs dispatched after
+    the re-planned one still run, and the whole stream passes the
+    cross-plan invariants."""
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="threads", truth=_truth(),
+                            feedback=True, max_inflight=2, time_scale=5.0,
+                            replan=True, straggler_threshold=1.3) as rt:
+        jobs = rt.run_stream([_block()] * 3, timeout=120)
+        assert all(j.error is None for j in jobs)
+        assert sum(len(j.replans) for j in jobs) >= 1
+        assert verify_stream_invariants(jobs) == []
+        for j in jobs:
+            assert verify_graph_dependencies(j.final_spec, j.measured) == []
+
+
+def test_streamcore_reissue_drops_started_tasks_from_splice():
+    """A task that starts between the monitor's snapshot and the reissue
+    call keeps its original placement — the replacement is discarded."""
+    from repro.core import DeviceTask, StreamCore
+    core = StreamCore()
+    try:
+        release = threading.Event()
+        planned = {"pcie": [("a", "gpu", "copy_in"), ("b", "gpu", "copy_in"),
+                            ("c", "cpu", "copy_in")]}
+        tasks = [
+            DeviceTask("gpu", copy_in=lambda: None,
+                       compute=lambda: release.wait(10), copy_out=None,
+                       task="a"),
+            DeviceTask("gpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="b", deps=("a",)),
+            DeviceTask("cpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="c"),
+        ]
+        h = core.dispatch(tasks, planned)
+        time.sleep(0.05)   # 'a' is running, 'b' queued behind it; 'c' races
+        pend = core.pending_tasks(h.job)
+        assert "b" in pend and "a" not in pend
+        # re-issue b (and try to re-issue the running a — must be dropped)
+        repl = [
+            DeviceTask("cpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="a"),
+            DeviceTask("cpu", copy_in=lambda: None, compute=lambda: None,
+                       copy_out=None, task="b", deps=("a",)),
+        ]
+        spliced = core.reissue(h, repl, {"pcie": [("a", "cpu", "copy_in"),
+                                                  ("b", "cpu", "copy_in")]})
+        assert "b" in spliced and "a" not in spliced
+        release.set()
+        tl = h.wait(30)
+        assert not h.errors
+        # b ran on its NEW device, after a completed on the old one
+        comp = {e.task: e for e in tl.events if e.kind == "compute"}
+        assert comp["b"].device == "cpu"
+        assert comp["a"].device == "gpu"
+        assert comp["b"].start >= comp["a"].end - 1e-9
+    finally:
+        core.shutdown()
+
+
+# ---------------------------------------------- bugfix regressions ----------
+
+
+def test_ticketbus_release_out_of_order_is_runtimeerror_not_assert():
+    """`python -O` strips asserts: an out-of-order release must raise an
+    explicit RuntimeError, never silently advance the grant head."""
+    bus = TicketBus([("a", "copy_in"), ("b", "copy_in")])
+    bus.acquire(("a", "copy_in"))
+    with pytest.raises(RuntimeError, match="out-of-order release"):
+        bus.release(("b", "copy_in"))
+    # the head is undisturbed: the correct release still works
+    bus.release(("a", "copy_in"))
+    bus.acquire(("b", "copy_in"))
+    bus.release(("b", "copy_in"))
+
+
+def test_ticketbus_acquire_tolerates_concurrent_extend():
+    """A dispatch→extend racing with a worker's acquire must not raise:
+    acquire waits (bounded) for the ticket to be appended."""
+    bus = TicketBus()
+    t = ("a", "copy_in")
+
+    def late_extend():
+        time.sleep(0.05)
+        bus.extend([t])
+
+    thr = threading.Thread(target=late_extend)
+    thr.start()
+    bus.acquire(t)          # must block for the extend, not raise
+    bus.release(t)
+    thr.join()
+    # a ticket that never arrives still raises (bounded wait, not a hang)
+    with pytest.raises(ValueError, match="not in bus schedule"):
+        bus.acquire(("never", "copy_in"), append_timeout=0.05)
+
+
+def test_stats_percentiles_use_nearest_rank():
+    """p50 of two samples is the smaller one (ceil(q*n)-1), not the max."""
+    dom = GemmDomain([_dev("a", 1.0), _dev("b", 2.0, bw=16e9)],
+                     bus="serialized")
+    with CoExecutionRuntime(dom, executor="virtual", feedback=False,
+                            carry_clocks=False, max_inflight=1) as rt:
+        rt.run_stream([GemmWorkload(1024, 1024, 1024),
+                       GemmWorkload(4096, 4096, 4096)])
+        stats = rt.stats()
+        spans = sorted(j.span for j in rt.jobs)
+    assert spans[0] < spans[1]
+    assert stats["p50_job_span_s"] == pytest.approx(spans[0])
+    assert stats["p95_job_span_s"] == pytest.approx(spans[1])
+
+
+def test_benchmark_regression_guard_flags_drift(tmp_path, monkeypatch):
+    """run.py's guard: makespans may not rise, speedups may not fall,
+    beyond tolerance; thread* (wall-clock) paths are exempt."""
+    run = pytest.importorskip("benchmarks.run")
+    monkeypatch.chdir(tmp_path)
+    import json
+    base = {"machines": {"m": {
+        "coexec": {"coexec_makespan_s": 1.0, "speedup_vs_best_single": 1.5},
+        "straggler": {"threads": {"replan_speedup": 2.0},
+                      "virtual": {"replan_speedup": 1.5}}}}}
+    (tmp_path / "BENCH_graph.json").write_text(json.dumps(base))
+    baselines = run.load_baselines()
+    metrics = baselines["BENCH_graph.json"]
+    assert "/machines/m/straggler/virtual/replan_speedup" in metrics
+    assert not any("threads" in k for k in metrics)   # wall clock exempt
+    bad = {"machines": {"m": {
+        "coexec": {"coexec_makespan_s": 1.2, "speedup_vs_best_single": 1.2},
+        "straggler": {"threads": {"replan_speedup": 0.1},
+                      "virtual": {"replan_speedup": 1.5}}}}}
+    (tmp_path / "BENCH_graph.json").write_text(json.dumps(bad))
+    problems = run.check_regressions(baselines, 0.10)
+    assert len(problems) == 2
+    assert any("rose above" in p for p in problems)
+    assert any("fell below" in p for p in problems)
+    ok = {"machines": {"m": {
+        "coexec": {"coexec_makespan_s": 1.05,
+                   "speedup_vs_best_single": 1.45},
+        "straggler": {"virtual": {"replan_speedup": 1.4}}}}}
+    (tmp_path / "BENCH_graph.json").write_text(json.dumps(ok))
+    assert run.check_regressions(baselines, 0.10) == []
+
+
+def test_verify_flags_any_copyout_before_compute_not_just_first():
+    """Regression: zip(comps[-1:], outs) only checked the FIRST output
+    event; a later out-event starting before compute end slipped through."""
+    events = [
+        BusEvent("gpu", "copy_in", 0.0, 0.1, "pcie", 0, "t"),
+        BusEvent("gpu", "compute", 0.1, 1.0, None, 0, "t"),
+        BusEvent("gpu", "copy_out", 1.0, 1.2, "pcie", 0, "t"),
+        # chunk 1 out-event starts BEFORE compute ended — must be flagged
+        BusEvent("gpu", "copy_out", 0.5, 0.8, "pcie", 1, "t"),
+    ]
+    job = StreamJob(uid=0, workload=None,
+                    measured=Timeline(sorted(events,
+                                             key=lambda e: e.start)))
+    problems = verify_stream_invariants([job])
+    assert any("copy_out before compute ended" in p for p in problems)
