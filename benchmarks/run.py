@@ -15,6 +15,9 @@ Sections:
   §Graph    — DAG co-execution vs best single device, list-schedule vs
               naive topo order, mid-graph straggler re-planning (graph;
               writes BENCH_graph.json — uploaded in CI)
+  §Sched    — incremental-engine placement throughput vs the from-scratch
+              EFT baseline, partial re-solve latency (scheduler; writes
+              BENCH_scheduler.json — uploaded in CI)
 
 A failing section is reported as ``name,0,ERROR`` and the driver keeps
 going, but the failure is collected and the process exits non-zero — CI
@@ -37,7 +40,7 @@ import sys
 import traceback
 
 BENCH_FILES = ("BENCH_timeline.json", "BENCH_streaming.json",
-               "BENCH_graph.json")
+               "BENCH_graph.json", "BENCH_scheduler.json")
 TOLERANCE = float(os.environ.get("BENCH_REGRESSION_TOL", "0.10"))
 
 
@@ -142,11 +145,12 @@ def main() -> None:
         _check(sys.argv[2])
         return
     from . import (exec_time, graph, plan_cache, prediction_accuracy,
-                   roofline, speedup, streaming, timeline, work_distribution)
+                   roofline, scheduler, speedup, streaming, timeline,
+                   work_distribution)
     baselines = load_baselines()
     failures: list[str] = []
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline, plan_cache, timeline, streaming, graph):
+                roofline, plan_cache, timeline, streaming, graph, scheduler):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

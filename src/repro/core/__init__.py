@@ -13,7 +13,8 @@ Public API:
     TaskGraph, TaskNode, TaskGraphDomain, solve_list_schedule,
     build_graph_timeline, transformer_block, CoExecutionRuntime
 """
-from .bus import (BusEvent, BusTopology, ClockState, GraphTimelineSpec,
+from .bus import (BusEvent, BusTopology, ClockState, GraphSimContext,
+                  GraphSimState, GraphTimelineSpec,
                   Link, TaskSpec, Timeline, TimelineSpec,
                   build_graph_timeline, build_timeline, carry_clocks,
                   engine_finish_times, graph_finish_times)
@@ -32,7 +33,8 @@ from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
 from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
                        simulate_graph_timeline, simulate_timeline)
 from .graph import (GraphPlan, TaskGraph, TaskGraphDomain, TaskNode,
-                    diamond, transformer_block, verify_graph_dependencies)
+                    diamond, transformer_block, transformer_stack,
+                    verify_graph_dependencies)
 from .domain import (Domain, FunctionDomain, PlanCache, Workload,
                      device_signature, get_domain, list_domains,
                      register_domain)
@@ -70,9 +72,10 @@ __all__ = [
     "CoExecutionRuntime", "ObservationPump", "ReplanRecord", "StreamJob",
     "model_sleep_tasks", "throttled", "truth_from_profiles",
     "verify_stream_invariants",
+    "GraphSimContext", "GraphSimState",
     "GraphTimelineSpec", "TaskSpec", "build_graph_timeline",
     "graph_finish_times", "GraphScheduleResult", "solve_list_schedule",
     "simulate_graph_timeline",
     "GraphPlan", "TaskGraph", "TaskGraphDomain", "TaskNode", "diamond",
-    "transformer_block", "verify_graph_dependencies",
+    "transformer_block", "transformer_stack", "verify_graph_dependencies",
 ]

@@ -52,11 +52,14 @@ read the one engine.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Mapping, Sequence
 
-from .device_model import DeviceProfile, priority_order
+import numpy as np
+
+from .device_model import DeviceProfile, LinearTimeModel, priority_order
 
 
 # ---------------------------------------------------------------------------
@@ -623,6 +626,405 @@ def _graph_topo_order(n: int, edges: Sequence[tuple[int, int]]) -> list[int]:
     return out
 
 
+class GraphSimContext:
+    """Immutable per-graph context shared by every ``GraphSimState``.
+
+    Built once per (graph, topology, order, clocks, ext) tuple: adjacency
+    in edge-insertion order, each device's resolved in/out link, and the
+    positions of the simulated (non-``ext``) tasks in ``order``.  The list
+    scheduler builds one of these per solve and extends checkpointed
+    ``GraphSimState``s against it instead of re-deriving the lookup tables
+    for every candidate placement.
+    """
+
+    __slots__ = ("devices", "tasks", "edges", "topo", "order", "clocks",
+                 "ext", "n", "parents", "children", "pos_of", "has_copy",
+                 "in_link", "in_lname", "out_link", "out_lname", "dev_name",
+                 "sim_positions", "link_names", "in_lid", "out_lid",
+                 "has_out", "ext_in", "par_in", "stage_out", "comp")
+
+    def __init__(self, devices: Sequence[DeviceProfile],
+                 tasks: Sequence[TaskSpec],
+                 edges: Sequence[tuple[int, int]],
+                 topo: BusTopology, order: Sequence[int],
+                 clocks: ClockState = ZERO_CLOCKS,
+                 ext: Mapping[int, tuple[float, float]] | None = None):
+        self.devices = list(devices)
+        self.tasks = list(tasks)
+        self.edges = list(edges)
+        self.topo = topo
+        self.order = list(order)
+        self.clocks = clocks
+        self.ext = dict(ext) if ext else {}
+        n = self.n = len(self.tasks)
+        parents: list[list[int]] = [[] for _ in range(n)]
+        children: list[list[int]] = [[] for _ in range(n)]
+        for u, v in self.edges:
+            parents[v].append(u)
+            children[u].append(v)
+        self.parents = parents
+        self.children = children
+        self.pos_of = {i: p for p, i in enumerate(self.order)}
+        self.has_copy = [_has_copy(d) for d in self.devices]
+        self.dev_name = [d.name for d in self.devices]
+        self.in_link = [topo.link_of(d.name, "in") for d in self.devices]
+        self.out_link = [topo.link_of(d.name, "out") for d in self.devices]
+        self.in_lname = [l.name if l is not None else f"~{d.name}"
+                         for d, l in zip(self.devices, self.in_link)]
+        self.out_lname = [l.name if l is not None else f"~{d.name}"
+                          for d, l in zip(self.devices, self.out_link)]
+        # positions that can ever be simulated (ext tasks never are) — lets
+        # a partial re-solve's suffix walk skip the frozen 95% in O(1)
+        self.sim_positions = [p for p, i in enumerate(self.order)
+                              if i not in self.ext]
+        # integer link ids: the hot loop indexes clock lists instead of
+        # hashing link-name strings
+        link_id: dict[str, int] = {}
+        for nm in self.in_lname + self.out_lname:
+            if nm not in link_id:
+                link_id[nm] = len(link_id)
+        self.link_names = list(link_id)
+        self.in_lid = [link_id[nm] for nm in self.in_lname]
+        self.out_lid = [link_id[nm] for nm in self.out_lname]
+        self.has_out = [t.out_bytes > 0.0 for t in self.tasks]
+        # per-(device, task) duration tables — every copy/compute duration
+        # the simulation loop can ever need, priced once via the same
+        # formulas as _bytes_in_time/_bytes_out_time/DeviceProfile.compute
+        # (elementwise numpy float64 ops match Python floats exactly)
+        in_b = np.array([float(t.in_bytes) for t in self.tasks])
+        out_b = np.array([float(t.out_bytes) for t in self.tasks])
+        ops = np.array([float(t.ops) for t in self.tasks])
+        zeros = [0.0] * n
+        self.ext_in = []    # [j][i]: task i's external input into device j
+        self.par_in = []    # [j][i]: producer i's output copied into j
+        self.stage_out = []  # [j][i]: task i's output staged out of j
+        self.comp = []      # [j][i]: task i's compute time on j
+        for j, d in enumerate(self.devices):
+            bw_in = _link_bw(d, self.in_link[j])
+            if math.isinf(bw_in):
+                self.ext_in.append(zeros)
+                self.par_in.append(zeros)
+            else:
+                lat = d.copy.latency_s
+                self.ext_in.append(np.where(in_b <= 0.0, 0.0,
+                                            in_b / bw_in + lat).tolist())
+                self.par_in.append(np.where(out_b <= 0.0, 0.0,
+                                            out_b / bw_in + lat).tolist())
+            bw_out = _link_bw(d, self.out_link[j])
+            if math.isinf(bw_out):
+                self.stage_out.append(zeros)
+            else:
+                self.stage_out.append(np.where(out_b <= 0.0, 0.0,
+                                               out_b / bw_out).tolist())
+            tm = d.compute
+            if isinstance(tm, LinearTimeModel):
+                self.comp.append((tm.a * ops + tm.b).tolist())
+            else:
+                self.comp.append([tm(t.ops) for t in self.tasks])
+
+
+class GraphSimState:
+    """Resumable task-graph simulation — the checkpoint/extend engine.
+
+    Holds everything ``_simulate_graph`` used to rebuild per pass: the
+    per-link and per-device clocks, per-task ``(compute_end, avail)``
+    pairs, the finish times, and the placed set.  ``advance(stop)``
+    simulates order positions ``[pos, stop)`` under the *current*
+    ``assign``/``placed``; ``clone()`` snapshots the state in O(n); and
+    ``peek_finish(i, j)`` prices "task ``i`` next, on device ``j``" in
+    O(deg(i)) without mutating anything.  The from-scratch
+    ``graph_finish_times`` path is a single ``advance`` over a fresh
+    state, so incremental results equal from-scratch results *exactly* —
+    there is only one simulation loop (DESIGN.md §12).
+
+    Exactness caveat the list scheduler must handle: whether a producer's
+    output is host-staged (``_needs_out``) depends on its *placed
+    children's* devices, so placing a new task can retroactively change a
+    parent's stage decision.  ``stage_flip_pos(i, j)`` reports the
+    earliest simulated position whose decision would change — ``None``
+    means extending the checkpoint is exact; otherwise the caller must
+    re-simulate from a snapshot at or before that position.
+    """
+
+    __slots__ = ("ctx", "pos", "lclock", "dclock", "finish", "compute_end",
+                 "avail", "assign", "placed")
+
+    def __init__(self, ctx: GraphSimContext, assign: Sequence[int],
+                 placed: Sequence[int] | None = None):
+        self.ctx = ctx
+        self.assign = list(assign)
+        flags = bytearray(ctx.n)
+        if placed is None:
+            for i in ctx.order:
+                if self.assign[i] >= 0 and i not in ctx.ext:
+                    flags[i] = 1
+            for i in ctx.ext:
+                flags[i] = 1
+        else:
+            for i in placed:
+                flags[i] = 1
+        self.placed = flags
+        self.pos = 0
+        # clock lists indexed by ctx link id / device index; None = the
+        # carried-over start value from ctx.clocks
+        self.lclock: list[float | None] = [None] * len(ctx.link_names)
+        self.dclock: list[float | None] = [None] * len(ctx.devices)
+        self.finish = [0.0] * ctx.n
+        self.compute_end = [0.0] * ctx.n
+        self.avail = [0.0] * ctx.n
+        for i, (c_end, av) in ctx.ext.items():
+            self.compute_end[i] = c_end
+            self.avail[i] = av
+            self.finish[i] = c_end   # fixed past/in-flight work; never inf
+
+    def clone(self) -> "GraphSimState":
+        st = GraphSimState.__new__(GraphSimState)
+        st.ctx = self.ctx
+        st.pos = self.pos
+        st.lclock = list(self.lclock)
+        st.dclock = list(self.dclock)
+        st.finish = list(self.finish)
+        st.compute_end = list(self.compute_end)
+        st.avail = list(self.avail)
+        st.assign = list(self.assign)
+        st.placed = bytearray(self.placed)
+        return st
+
+    # -- clock reads (None = carried-over start) -----------------------------
+
+    def link_clock_id(self, lid: int) -> float:
+        v = self.lclock[lid]
+        if v is None:
+            return self.ctx.clocks.link(self.ctx.link_names[lid])
+        return v
+
+    def dev_clock_id(self, j: int) -> float:
+        v = self.dclock[j]
+        if v is None:
+            return self.ctx.clocks.device(self.ctx.dev_name[j])
+        return v
+
+    # -- the one simulation loop ---------------------------------------------
+
+    def advance(self, stop: int, events: list[BusEvent] | None = None
+                ) -> None:
+        """Simulate order positions ``[pos, stop)`` (ext/unassigned tasks
+        skipped), appending ``BusEvent``s when ``events`` is a list."""
+        if stop <= self.pos:
+            return
+        ctx = self.ctx
+        sp = ctx.sim_positions
+        lo = bisect.bisect_left(sp, self.pos)
+        hi = bisect.bisect_left(sp, stop)
+        assign = self.assign
+        for idx in range(lo, hi):
+            i = ctx.order[sp[idx]]
+            if assign[i] >= 0:
+                self._sim_task(i, events)
+        self.pos = stop
+
+    def _sim_task(self, i: int, events: list[BusEvent] | None = None
+                  ) -> None:
+        ctx = self.ctx
+        assign = self.assign
+        j = assign[i]
+        t = ctx.tasks[i]
+        in_lid = ctx.in_lid[j]
+        has_copy = ctx.has_copy[j]
+        placed = self.placed
+        lclock, compute_end, avail = self.lclock, self.compute_end, self.avail
+        ready = 0.0
+        chunk = 0
+
+        # external (host) input bytes
+        if has_copy and t.in_bytes > 0.0:
+            dur = ctx.ext_in[j][i]
+            s = lclock[in_lid]
+            if s is None:
+                s = ctx.clocks.link(ctx.link_names[in_lid])
+            if events is not None:
+                events.append(BusEvent(ctx.dev_name[j], "copy_in", s,
+                                       s + dur, ctx.in_lname[j], chunk,
+                                       t.name))
+            chunk += 1
+            lclock[in_lid] = s + dur
+            ready = s + dur
+
+        # precedence edges
+        par_in = ctx.par_in[j]
+        for u in ctx.parents[i]:
+            if not placed[u]:
+                continue
+            if assign[u] == j:
+                r = compute_end[u]             # same device: free
+            elif not has_copy or not ctx.has_out[u]:
+                r = avail[u]                   # host reads the staged copy
+            else:
+                dur = par_in[u]
+                s = lclock[in_lid]
+                if s is None:
+                    s = ctx.clocks.link(ctx.link_names[in_lid])
+                au = avail[u]
+                if au > s:
+                    s = au
+                if events is not None:
+                    events.append(BusEvent(ctx.dev_name[j], "copy_in", s,
+                                           s + dur, ctx.in_lname[j], chunk,
+                                           t.name))
+                chunk += 1
+                lclock[in_lid] = s + dur
+                r = s + dur
+            if r > ready:
+                ready = r
+
+        # compute
+        s = self.dclock[j]
+        if s is None:
+            s = ctx.clocks.device(ctx.dev_name[j])
+        if ready > s:
+            s = ready
+        dur = ctx.comp[j][i]
+        if events is not None:
+            events.append(BusEvent(ctx.dev_name[j], "compute", s, s + dur,
+                                   None, 0, t.name))
+        ce = s + dur
+        self.dclock[j] = ce
+        compute_end[i] = ce
+        self.finish[i] = ce
+        avail[i] = ce   # no-copy device: output is host-resident now
+
+        # staged / returned output
+        if self._would_need_out(i, j):
+            out_lid = ctx.out_lid[j]
+            dur = ctx.stage_out[j][i]
+            s = lclock[out_lid]
+            if s is None:
+                s = ctx.clocks.link(ctx.link_names[out_lid])
+            if ce > s:
+                s = ce
+            if events is not None:
+                events.append(BusEvent(ctx.dev_name[j], "copy_out", s,
+                                       s + dur, ctx.out_lname[j], 0, t.name))
+            lclock[out_lid] = s + dur
+            avail[i] = s + dur
+            self.finish[i] = s + dur
+
+    # -- stage decision ------------------------------------------------------
+
+    def _would_need_out(self, i: int, j: int) -> bool:
+        """Whether task ``i`` on device ``j`` stages its output to host:
+        it is a pseudo-sink (no placed consumers) or feeds a placed
+        consumer on another device."""
+        ctx = self.ctx
+        if not ctx.has_out[i] or not ctx.has_copy[j]:
+            return False   # host output is already host-resident
+        placed, assign = self.placed, self.assign
+        seen = False
+        for c in ctx.children[i]:
+            if not placed[c]:
+                continue
+            seen = True
+            if assign[c] != j:
+                return True
+        return not seen    # sink (or all consumers unscheduled): return C
+
+    def needs_out(self, i: int) -> bool:
+        return self._would_need_out(i, self.assign[i])
+
+    # -- incremental extension -----------------------------------------------
+
+    def peek_finish(self, i: int, j: int) -> float:
+        """Price task ``i`` as the next committed task, on device ``j``,
+        without mutating the state — exact when ``stage_flip_pos(i, j)``
+        is None (no already-simulated producer's stage decision changes)."""
+        ctx = self.ctx
+        t = ctx.tasks[i]
+        in_lid = ctx.in_lid[j]
+        has_copy = ctx.has_copy[j]
+        placed, assign = self.placed, self.assign
+        lc: float | None = None   # local overlay of the in-link clock
+
+        ready = 0.0
+        if has_copy and t.in_bytes > 0.0:
+            s = self.link_clock_id(in_lid)
+            lc = s + ctx.ext_in[j][i]
+            ready = lc
+        par_in = ctx.par_in[j]
+        for u in ctx.parents[i]:
+            if not placed[u]:
+                continue
+            if assign[u] == j:
+                r = self.compute_end[u]
+            elif not has_copy or not ctx.has_out[u]:
+                r = self.avail[u]
+            else:
+                s = lc if lc is not None else self.link_clock_id(in_lid)
+                au = self.avail[u]
+                if au > s:
+                    s = au
+                lc = s + par_in[u]
+                r = lc
+            if r > ready:
+                ready = r
+        s = self.dev_clock_id(j)
+        if ready > s:
+            s = ready
+        ce = s + ctx.comp[j][i]
+        if self._would_need_out(i, j):
+            out_lid = ctx.out_lid[j]
+            if out_lid == in_lid and lc is not None:
+                s = lc
+            else:
+                s = self.link_clock_id(out_lid)
+            if ce > s:
+                s = ce
+            return s + ctx.stage_out[j][i]
+        return ce
+
+    def stage_flip_pos(self, i: int, j: int) -> int | None:
+        """Earliest already-simulated order position whose host-stage
+        decision would change if ``assign[i]`` became ``j`` and ``i``
+        joined the placed set (None = none; extending the checkpoint is
+        exact).  Only ``i``'s producers can flip: a producer that staged
+        for a pseudo-sink stops staging when its first placed consumer is
+        co-located (vanish), and one whose placed consumers were all
+        co-located starts staging when ``i`` lands cross-device (appear).
+        """
+        ctx = self.ctx
+        placed, assign = self.placed, self.assign
+        best: int | None = None
+        for u in ctx.parents[i]:
+            if not placed[u] or assign[u] < 0 or u in ctx.ext:
+                continue
+            pu = ctx.pos_of.get(u)
+            if pu is None or pu >= self.pos:
+                continue   # not simulated yet — commits price it later
+            a = assign[u]
+            if not ctx.has_out[u] or not ctx.has_copy[a]:
+                continue   # never stages regardless of consumers
+            old = True     # pseudo-sink default
+            seen = False
+            for c in ctx.children[u]:
+                if not placed[c]:
+                    continue
+                seen = True
+                if assign[c] != a:
+                    old = True
+                    break
+            else:
+                if seen:
+                    old = False
+            new = False    # i joins the consumer set, so it is non-empty
+            for c in ctx.children[u]:
+                ac = j if c == i else (assign[c] if placed[c] else None)
+                if ac is not None and ac != a:
+                    new = True
+                    break
+            if old != new and (best is None or pu < best):
+                best = pu
+        return best
+
+
 def _simulate_graph(devices: Sequence[DeviceProfile],
                     tasks: Sequence[TaskSpec],
                     edges: Sequence[tuple[int, int]],
@@ -636,6 +1038,11 @@ def _simulate_graph(devices: Sequence[DeviceProfile],
     times (0 for tasks with ``assign[i] < 0`` — the list scheduler prices
     partial assignments during device selection); appends ``BusEvent``s
     when ``events`` is a list.
+
+    This is a thin wrapper over ``GraphSimState`` — one fresh state
+    advanced over the whole order — so the incremental checkpoint/extend
+    path the list scheduler uses and this from-scratch path are the same
+    code by construction.
 
     ``ext`` prices a task *externally* (mid-graph re-planning, DESIGN.md
     §11): a frozen — completed or currently running — task is not
@@ -667,104 +1074,10 @@ def _simulate_graph(devices: Sequence[DeviceProfile],
     exactly as the divisible engine does, so graph plans chain into the
     streaming runtime unchanged.
     """
-    n_tasks = len(tasks)
-    parents: list[list[int]] = [[] for _ in range(n_tasks)]
-    children: list[list[int]] = [[] for _ in range(n_tasks)]
-    for u, v in edges:
-        parents[v].append(u)
-        children[u].append(v)
-
-    ext = ext or {}
-    scheduled = [i for i in order if assign[i] >= 0 and i not in ext]
-    placed = set(scheduled) | set(ext)
-    finish = [0.0] * n_tasks
-    compute_end = [0.0] * n_tasks
-    avail = [0.0] * n_tasks       # when the task's output is host-resident
-    for i, (c_end, av) in ext.items():
-        compute_end[i] = c_end
-        avail[i] = av
-        finish[i] = c_end   # fixed past/in-flight work; never inf
-    lclock: dict[str, float] = {}  # per-link clock
-    dclock: dict[str, float] = {}  # per-device compute clock
-
-    def link_clock(name: str) -> float:
-        return lclock.get(name, clocks.link(name))
-
-    def dev_clock(name: str) -> float:
-        return dclock.get(name, clocks.device(name))
-
-    def _needs_out(i: int) -> bool:
-        if tasks[i].out_bytes <= 0.0:
-            return False
-        d = devices[assign[i]]
-        if not _has_copy(d):
-            return False   # host output is already host-resident
-        kids = [c for c in children[i] if c in placed]
-        if not kids:       # sink (or all consumers unscheduled): return C
-            return True
-        return any(assign[c] != assign[i] for c in kids)
-
-    for i in scheduled:
-        t, d = tasks[i], devices[assign[i]]
-        in_link = topo.link_of(d.name, "in")
-        in_lname = in_link.name if in_link is not None else f"~{d.name}"
-        ready: list[float] = []
-        chunk = 0
-
-        # external (host) input bytes
-        if t.in_bytes > 0.0 and _has_copy(d):
-            dur = _bytes_in_time(d, in_link, t.in_bytes)
-            s = link_clock(in_lname)
-            if events is not None:
-                events.append(BusEvent(d.name, "copy_in", s, s + dur,
-                                       in_lname, chunk, t.name))
-            chunk += 1
-            lclock[in_lname] = s + dur
-            ready.append(s + dur)
-
-        # precedence edges
-        for u in parents[i]:
-            if u not in placed:
-                continue
-            if assign[u] == assign[i]:
-                ready.append(compute_end[u])   # same device: free
-                continue
-            if not _has_copy(d) or tasks[u].out_bytes <= 0.0:
-                ready.append(avail[u])         # host reads the staged copy
-                continue
-            dur = _bytes_in_time(d, in_link, tasks[u].out_bytes)
-            s = max(link_clock(in_lname), avail[u])
-            if events is not None:
-                events.append(BusEvent(d.name, "copy_in", s, s + dur,
-                                       in_lname, chunk, t.name))
-            chunk += 1
-            lclock[in_lname] = s + dur
-            ready.append(s + dur)
-
-        # compute
-        s = max(dev_clock(d.name), max(ready, default=0.0))
-        dur = d.compute(t.ops)
-        if events is not None:
-            events.append(BusEvent(d.name, "compute", s, s + dur, None, 0,
-                                   t.name))
-        dclock[d.name] = s + dur
-        compute_end[i] = s + dur
-        finish[i] = s + dur
-        avail[i] = s + dur   # no-copy device: output is host-resident now
-
-        # staged / returned output
-        if _needs_out(i):
-            out_link = topo.link_of(d.name, "out")
-            out_lname = out_link.name if out_link is not None else f"~{d.name}"
-            dur = _bytes_out_time(d, out_link, t.out_bytes)
-            s = max(link_clock(out_lname), compute_end[i])
-            if events is not None:
-                events.append(BusEvent(d.name, "copy_out", s, s + dur,
-                                       out_lname, 0, t.name))
-            lclock[out_lname] = s + dur
-            avail[i] = s + dur
-            finish[i] = s + dur
-    return finish
+    ctx = GraphSimContext(devices, tasks, edges, topo, order, clocks, ext)
+    st = GraphSimState(ctx, assign)
+    st.advance(len(ctx.order), events)
+    return st.finish
 
 
 def build_graph_timeline(devices: Sequence[DeviceProfile],

@@ -26,6 +26,7 @@ class end to end:
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Hashable, Iterable, Sequence
 
 from .bus import (BusTopology, GraphTimelineSpec, TaskSpec, Timeline,
@@ -70,9 +71,11 @@ class TaskGraph:
     def __post_init__(self) -> None:
         names = [t.name for t in self.nodes]
         if len(set(names)) != len(names):
-            dup = sorted({n for n in names if names.count(n) > 1})
+            dup = sorted(n for n, c in Counter(names).items() if c > 1)
             raise ValueError(f"duplicate task names: {dup}")
         index = {n: i for i, n in enumerate(names)}
+        parents: dict[str, list[str]] = {n: [] for n in names}
+        children: dict[str, list[str]] = {n: [] for n in names}
         for u, v in self.edges:
             for end in (u, v):
                 if end not in index:
@@ -80,7 +83,13 @@ class TaskGraph:
                                      f"unknown task {end!r}")
             if u == v:
                 raise ValueError(f"self-edge on task {u!r}")
+            parents[v].append(u)
+            children[u].append(v)
         object.__setattr__(self, "_index", index)
+        object.__setattr__(self, "_parents",
+                           {n: tuple(ps) for n, ps in parents.items()})
+        object.__setattr__(self, "_children",
+                           {n: tuple(cs) for n, cs in children.items()})
         _graph_topo_order(len(self.nodes), self.edge_indices())  # acyclic?
 
     # -- queries -------------------------------------------------------------
@@ -98,10 +107,10 @@ class TaskGraph:
         return tuple((self._index[u], self._index[v]) for u, v in self.edges)
 
     def parents(self, name: str) -> tuple[str, ...]:
-        return tuple(u for u, v in self.edges if v == name)
+        return self._parents[name]
 
     def children(self, name: str) -> tuple[str, ...]:
-        return tuple(v for u, v in self.edges if u == name)
+        return self._children[name]
 
     def total_ops(self) -> float:
         return float(sum(t.ops for t in self.nodes))
@@ -279,8 +288,8 @@ class TaskGraphDomain:
 
 def transformer_block(*, d_model: int = 4096, seq: int = 4096,
                       ff_mult: int = 4, groups: int = 4,
-                      dtype_size: int = 2, name: str = "block"
-                      ) -> TaskGraph:
+                      dtype_size: int = 2, name: str = "block",
+                      d_ff: int | None = None) -> TaskGraph:
     """A transformer block (attention → residual → MLP) as a ``TaskGraph``.
 
     The QKV projection, attention, and both MLP matmuls are split into
@@ -299,9 +308,11 @@ def transformer_block(*, d_model: int = 4096, seq: int = 4096,
       down_g  (s,f/G)x(f/G,d)  row-split second matmul (partial sums)
       combine sum of partials  joins every down_g, emits the block output
     """
-    if groups < 1 or d_model % groups or (ff_mult * d_model) % groups:
-        raise ValueError("groups must divide d_model and ff_mult*d_model")
-    d, s, f, G = d_model, seq, ff_mult * d_model, groups
+    f = d_ff if d_ff is not None else ff_mult * d_model
+    if groups < 1 or d_model % groups or f % groups:
+        raise ValueError("groups must divide d_model and the FF width "
+                         "(ff_mult*d_model, or d_ff when given)")
+    d, s, G = d_model, seq, groups
     dg, fg = d // G, f // G
     x_bytes = float(s * d * dtype_size)          # one (s, d) activation
     nodes: list[TaskNode] = []
@@ -337,6 +348,68 @@ def transformer_block(*, d_model: int = 4096, seq: int = 4096,
         edges.append((down, f"{name}.combine"))
     nodes.append(TaskNode(f"{name}.combine", ops=float(s * d * G),
                           out_bytes=x_bytes))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
+def transformer_stack(config=None, *, layers: int | None = None,
+                      microbatches: int = 1, seq: int = 4096,
+                      groups: int = 4, dtype_size: int = 2,
+                      name: str | None = None) -> TaskGraph:
+    """A whole-model DAG: ``layers`` transformer blocks × ``microbatches``
+    independent pipelines, shaped by a model from the in-repo config zoo.
+
+    ``config`` is an ``ArchConfig``, a config name for
+    ``repro.configs.get_config`` (e.g. ``"stablelm-12b"``), or None for
+    the default block geometry.  ``layers`` defaults to the config's
+    ``num_layers``.  Each microbatch processes ``seq // microbatches``
+    tokens through its own chain of blocks (block l feeds block l+1 —
+    ``combine`` → every ``qkv`` group); distinct microbatches share no
+    edges, which is the width the scheduler spreads across devices.  This
+    is the 10²–10⁴-node regime the scheduler benchmark sweeps
+    (``benchmarks/scheduler.py``), built from the same configs the rest of
+    the repo trains, so graph scale tracks real model shapes.
+
+    ``groups`` is clamped to the largest divisor of both widths not above
+    the requested value, so any config is accepted as-is.
+    """
+    d_model, d_ff = 4096, 16384
+    cfg_name = "block"
+    if config is not None:
+        if isinstance(config, str):
+            from repro.configs import get_config   # lazy: avoids a cycle
+            cfg_name = config
+            config = get_config(config)
+        else:
+            cfg_name = getattr(config, "name", "model")
+        d_model = int(config.d_model)
+        d_ff = int(config.d_ff)
+        if layers is None:
+            layers = int(config.num_layers)
+    if layers is None:
+        layers = 1
+    if layers < 1 or microbatches < 1:
+        raise ValueError("layers and microbatches must be >= 1")
+    g = max(1, min(groups, d_model, d_ff))
+    while d_model % g or d_ff % g:
+        g -= 1
+    seq_mb = max(1, seq // microbatches)
+    base = name if name is not None else str(cfg_name)
+
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+    for m in range(microbatches):
+        prev: str | None = None
+        for l in range(layers):
+            block = transformer_block(d_model=d_model, d_ff=d_ff,
+                                      seq=seq_mb, groups=g,
+                                      dtype_size=dtype_size,
+                                      name=f"{base}.l{l}.m{m}")
+            nodes.extend(block.nodes)
+            edges.extend(block.edges)
+            if prev is not None:
+                for gi in range(g):
+                    edges.append((prev, f"{base}.l{l}.m{m}.qkv{gi}"))
+            prev = f"{base}.l{l}.m{m}.combine"
     return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
 
 

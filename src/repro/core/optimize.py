@@ -32,12 +32,16 @@ non-decreasing in ``c_x``, so we replace the external solver with:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Mapping, Sequence
 
-from .bus import (BusTopology, ClockState, TaskSpec, ZERO_CLOCKS,
-                  _graph_topo_order, engine_finish_times, graph_finish_times)
-from .device_model import DeviceProfile, priority_order
+import numpy as np
+
+from .bus import (BusTopology, ClockState, GraphSimContext, GraphSimState,
+                  TaskSpec, ZERO_CLOCKS, _graph_topo_order,
+                  engine_finish_times, graph_finish_times)
+from .device_model import DeviceProfile, LinearTimeModel, priority_order
 
 _EPS = 1e-12
 _TINY = 1e-30   # probe op count: prices fixed costs (B panel, launch) only
@@ -386,27 +390,62 @@ def _upward_ranks(devices: Sequence[DeviceProfile],
                   edges: Sequence[tuple[int, int]]) -> list[float]:
     """HEFT upward rank: mean compute cost plus the most expensive
     downstream chain, edges priced at the mean staged-transfer cost.
-    Device-independent, so the priority list is fixed before placement."""
+    Device-independent, so the priority list is fixed before placement.
+
+    Vectorized: ``wbar``/``cbar`` are per-task numpy arrays accumulated
+    device-by-device in the same order the scalar ``sum`` ran, and the
+    downstream recurrence runs level-synchronously with per-level CSR
+    child arrays and ``np.maximum.reduceat``.  Every float operation
+    keeps the sequential version's order and grouping, so the ranks —
+    and therefore the priority list — are bit-identical to it (max is
+    exact, and ``max_c(cbar + rank_c) == cbar + max_c(rank_c)`` because
+    IEEE addition is monotone)."""
     n = len(tasks)
     children: list[list[int]] = [[] for _ in range(n)]
     for u, v in edges:
         children[u].append(v)
-    wbar = [sum(d.compute(t.ops) for d in devices) / len(devices)
-            for t in tasks]
+    ops = np.array([float(t.ops) for t in tasks])
+    out_b = np.array([float(t.out_bytes) for t in tasks])
+
+    acc = np.zeros(n)
+    for d in devices:
+        tm = d.compute
+        if isinstance(tm, LinearTimeModel):
+            acc = acc + (tm.a * ops + tm.b)
+        else:   # nonlinear model: per-task calls, same accumulation order
+            acc = acc + np.array([tm(t.ops) for t in tasks])
+    wbar = acc / len(devices)
+
     copiers = [d for d in devices
                if not math.isinf(d.copy.bandwidth_bytes_per_s)]
+    if copiers:
+        cacc = np.zeros(n)
+        for d in copiers:
+            cacc = cacc + (2.0 * out_b / d.copy.bandwidth_bytes_per_s
+                           + d.copy.latency_s)
+        cbar = np.where(out_b > 0.0, cacc / len(copiers), 0.0)
+    else:
+        cbar = np.zeros(n)
 
-    def cbar(u: int) -> float:
-        if not copiers or tasks[u].out_bytes <= 0.0:
-            return 0.0
-        return sum(2.0 * tasks[u].out_bytes / d.copy.bandwidth_bytes_per_s
-                   + d.copy.latency_s for d in copiers) / len(copiers)
-
-    rank = [0.0] * n
+    # level-synchronous recurrence over the reversed topological order:
+    # level 0 = leaves (tail 0), level L depends only on levels < L
+    level = [0] * n
     for i in reversed(_graph_topo_order(n, edges)):
-        tail = max((cbar(i) + rank[c] for c in children[i]), default=0.0)
-        rank[i] = wbar[i] + tail
-    return rank
+        if children[i]:
+            level[i] = 1 + max(level[c] for c in children[i])
+    rank = wbar.copy()   # leaves: rank = wbar
+    by_level: dict[int, list[int]] = {}
+    for i in range(n):
+        if level[i] > 0:
+            by_level.setdefault(level[i], []).append(i)
+    for lv in sorted(by_level):
+        nodes = by_level[lv]
+        kids = [c for i in nodes for c in children[i]]
+        offs = np.cumsum([0] + [len(children[i]) for i in nodes])[:-1]
+        maxchild = np.maximum.reduceat(rank[kids], offs)
+        nd = np.array(nodes)
+        rank[nd] = wbar[nd] + (cbar[nd] + maxchild)
+    return rank.tolist()
 
 
 def _rank_order(devices: Sequence[DeviceProfile], tasks: Sequence[TaskSpec],
@@ -419,40 +458,251 @@ def _rank_order(devices: Sequence[DeviceProfile], tasks: Sequence[TaskSpec],
     return sorted(range(len(tasks)), key=lambda i: (-rank[i], topo_pos[i]))
 
 
-def _descend_assign(devices: Sequence[DeviceProfile],
-                    tasks: Sequence[TaskSpec],
-                    edges: Sequence[tuple[int, int]],
-                    assign: list[int], order: Sequence[int],
-                    topo: BusTopology, *, max_evals: int = 2000,
-                    free: Sequence[int] | None = None,
-                    makespan=None) -> tuple[list[int], int]:
+# -- incremental EFT machinery (DESIGN.md §12) ------------------------------
+
+_SNAP_EVERY = 24   # order positions between simulation-state snapshots
+
+
+def _advance_snapped(st: GraphSimState, snaps: dict[int, GraphSimState],
+                     stop: int, min_key: int = 0) -> None:
+    """Advance ``st`` to order position ``stop``, dropping an O(n) clone
+    into ``snaps`` at every ``_SNAP_EVERY`` boundary crossed (boundaries
+    below ``min_key`` snapshots are skipped — descent never rewinds below
+    the earliest movable task or movable-task parent)."""
+    while st.pos < stop:
+        nxt = (st.pos // _SNAP_EVERY + 1) * _SNAP_EVERY
+        if nxt > stop:
+            nxt = stop
+        st.advance(nxt)
+        if nxt % _SNAP_EVERY == 0 and nxt // _SNAP_EVERY >= min_key:
+            snaps[nxt // _SNAP_EVERY] = st.clone()
+
+
+def _rewind(st: GraphSimState, snaps: dict[int, GraphSimState],
+            m: int) -> GraphSimState:
+    """Resume from snapshot ``m`` carrying ``st``'s *live* assign/placed
+    (the snapshot's own copies are stale), invalidating later snapshots."""
+    for k in [k for k in snaps if k > m]:
+        del snaps[k]
+    base = snaps[m].clone()
+    base.assign = st.assign
+    base.placed = st.placed
+    return base
+
+
+def _commit_place(st: GraphSimState, snaps: dict[int, GraphSimState],
+                  pos: int, i: int, j: int,
+                  fp: int | None) -> GraphSimState:
+    """Commit task ``i`` on device ``j`` at order position ``pos``: extend
+    the checkpoint through ``pos`` when no earlier host-stage decision
+    flips (``fp`` is None), else re-simulate from the nearest snapshot at
+    or before the flip position."""
+    st.assign[i] = j
+    st.placed[i] = 1
+    if fp is not None:
+        st = _rewind(st, snaps, fp // _SNAP_EVERY)
+    _advance_snapped(st, snaps, pos + 1)
+    return st
+
+
+def _price_flip(st: GraphSimState, snaps: dict[int, GraphSimState],
+                pos: int, i: int, j: int, fp: int) -> float:
+    """Price candidate ``(i, j)`` whose placement flips an earlier
+    producer's host-stage decision: re-simulate positions [snapshot, pos]
+    on a throwaway clone under the tentative assignment."""
+    tmp = snaps[fp // _SNAP_EVERY].clone()
+    old_a, old_p = st.assign[i], st.placed[i]
+    st.assign[i] = j
+    st.placed[i] = 1
+    tmp.assign = st.assign
+    tmp.placed = st.placed
+    tmp.advance(pos + 1)
+    st.assign[i] = old_a
+    st.placed[i] = old_p
+    return tmp.finish[i]
+
+
+class _DeviceArrays:
+    """Per-solve device constants for the vectorized EFT candidate batch —
+    the context's per-(device, task) duration tables as (d, n) numpy
+    arrays plus per-device masks, one lane per candidate device."""
+
+    __slots__ = ("idx", "has_copy", "ext_in", "par_in", "stage_out", "comp",
+                 "same_link")
+
+    def __init__(self, ctx: GraphSimContext):
+        self.idx = np.arange(len(ctx.devices))
+        self.has_copy = np.array(ctx.has_copy, dtype=bool)
+        self.ext_in = np.array(ctx.ext_in)
+        self.par_in = np.array(ctx.par_in)
+        self.stage_out = np.array(ctx.stage_out)
+        self.comp = np.array(ctx.comp)
+        self.same_link = np.array([a == b for a, b in
+                                   zip(ctx.in_lid, ctx.out_lid)])
+
+
+def _peek_batch(st: GraphSimState, da: _DeviceArrays, i: int) -> np.ndarray:
+    """Vectorized ``GraphSimState.peek_finish`` over every device at once.
+
+    Each numpy lane applies the identical float operations in the
+    identical order to the scalar path (durations come from the shared
+    per-(device, task) tables; elementwise IEEE double ops match Python
+    floats exactly), so device selection sees bit-identical finish times —
+    asserted transitively by the incremental-vs-from-scratch equality
+    checks in the bench and the property tests."""
+    ctx = st.ctx
+    t = ctx.tasks[i]
+    nd = len(ctx.devices)
+    lc = np.array([st.link_clock_id(lid) for lid in ctx.in_lid])
+    dev_clk = np.array([st.dev_clock_id(j) for j in range(nd)])
+    touched = np.zeros(nd, dtype=bool)   # lanes whose in-link clock moved
+    ready = np.zeros(nd)
+
+    if t.in_bytes > 0.0:
+        end = lc + da.ext_in[:, i]
+        lc = np.where(da.has_copy, end, lc)
+        touched = touched | da.has_copy
+        ready = np.where(da.has_copy, end, ready)
+
+    placed, assign = st.placed, st.assign
+    for u in ctx.parents[i]:
+        if not placed[u]:
+            continue
+        same = da.idx == assign[u]
+        ce_u, av_u = st.compute_end[u], st.avail[u]
+        if not ctx.has_out[u]:
+            r = np.where(same, ce_u, av_u)
+        else:
+            s = np.maximum(lc, av_u)
+            end = s + da.par_in[:, u]
+            copy_lane = da.has_copy & ~same
+            lc = np.where(copy_lane, end, lc)
+            touched = touched | copy_lane
+            r = np.where(same, ce_u, np.where(da.has_copy, end, av_u))
+        ready = np.maximum(ready, r)
+
+    s = np.maximum(dev_clk, ready)
+    ce = s + da.comp[:, i]
+
+    if not ctx.has_out[i]:
+        return ce
+    kids = [c for c in ctx.children[i] if placed[c]]
+    if kids:
+        ka = np.array([assign[c] for c in kids])
+        need = da.has_copy & (ka[None, :] != da.idx[:, None]).any(axis=1)
+    else:
+        need = da.has_copy.copy()   # pseudo-sink: output returns to host
+    out_clk = np.array([st.link_clock_id(lid) for lid in ctx.out_lid])
+    out_clk = np.where(da.same_link & touched, lc, out_clk)
+    s2 = np.maximum(out_clk, ce)
+    return np.where(need, s2 + da.stage_out[:, i], ce)
+
+
+def _eft_place(ctx: GraphSimContext, assign: Sequence[int],
+               pinned: Mapping[int, int]) -> tuple[GraphSimState, int]:
+    """Rank-priority EFT placement on the incremental engine: one
+    ``GraphSimState`` swept along the priority order, each (task, device)
+    candidate priced by the vectorized peek in O(deg·d) — falling back to
+    a snapshot re-simulation only when the candidate flips an earlier
+    producer's host-stage decision (DESIGN.md §12).  Selection and
+    resulting assignments are bit-identical to pricing every prefix from
+    scratch; returns the final state and the candidate-evaluation count.
+    """
+    ndev = len(ctx.devices)
+    st = GraphSimState(ctx, assign, placed=list(ctx.ext))
+    snaps = {0: st.clone()}
+    da = _DeviceArrays(ctx)
+    evals = 0
+    for pos, i in enumerate(ctx.order):
+        if i in pinned:
+            if i not in ctx.ext:   # frozen assignment still gets simulated
+                st = _commit_place(st, snaps, pos, i, st.assign[i],
+                                   st.stage_flip_pos(i, st.assign[i]))
+            continue
+        if i in ctx.ext:
+            # finish is fixed externally: every device prices identically,
+            # so the ascending scan commits device 0 (the tie rule)
+            evals += ndev
+            st = _commit_place(st, snaps, pos, i, 0,
+                               st.stage_flip_pos(i, 0))
+            continue
+        flips = [st.stage_flip_pos(i, j) for j in range(ndev)]
+        fin = _peek_batch(st, da, i)
+        best_j, best_t = 0, math.inf
+        for j in range(ndev):
+            t = (float(fin[j]) if flips[j] is None
+                 else _price_flip(st, snaps, pos, i, j, flips[j]))
+            evals += 1
+            if t < best_t - _EPS:
+                best_j, best_t = j, t
+        st = _commit_place(st, snaps, pos, i, best_j, flips[best_j])
+    return st, evals
+
+
+def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
+                    max_evals: int = 2000,
+                    free: Sequence[int] | None = None
+                    ) -> tuple[list[int], int, float]:
     """Reassignment descent on the exact graph makespan — ``_descend``'s
     pairwise-transfer loop in discrete per-task coordinates: move one task
     to another device, keep any strict improvement, repeat to a local
     optimum.  ``free`` restricts the moves to the given task indices
-    (partial solves pin the frozen tasks)."""
-    movable = list(free) if free is not None else list(range(len(tasks)))
-    if makespan is None:
-        def makespan(a: Sequence[int]) -> float:
-            return max(graph_finish_times(devices, tasks, edges, a,
-                                          topology=topo, order=order))
+    (partial solves pin the frozen tasks).
 
-    best = makespan(assign)
+    Each candidate move re-prices only the suffix of the priority order
+    from the moved task's position (or from the earliest producer whose
+    host-stage decision the move flips, if earlier), resumed from the
+    nearest ``GraphSimState`` snapshot — positions before it are provably
+    unaffected, so the makespans are exactly the from-scratch values.
+    Returns ``(assign, evals, makespan)`` — the local optimum's makespan
+    is the last accepted evaluation, so callers need no re-pricing."""
+    movable = list(free) if free is not None else list(range(ctx.n))
+    end = len(ctx.order)
+    st = GraphSimState(ctx, assign)
+    # descent never rewinds below the earliest movable task or simulated
+    # parent of one — skip snapshots below that floor (a partial re-solve
+    # freezes most of the order; this keeps its setup cost at O(free))
+    floor = end
+    for i in movable:
+        floor = min(floor, ctx.pos_of[i])
+        for u in ctx.parents[i]:
+            if u not in ctx.ext:
+                p = ctx.pos_of.get(u)
+                if p is not None:
+                    floor = min(floor, p)
+    min_key = floor // _SNAP_EVERY
+    snaps: dict[int, GraphSimState] = {}
+    if min_key == 0:
+        snaps[0] = st.clone()
+    _advance_snapped(st, snaps, end, min_key)
+    best = max(st.finish)
     evals = 1
     improved = True
     while improved and evals < max_evals:
         improved = False
         for i in movable:
-            for j in range(len(devices)):
-                if j == assign[i]:
+            pi = ctx.pos_of[i]
+            for j in range(len(ctx.devices)):
+                old = st.assign[i]
+                if j == old:
                     continue
-                cand = list(assign)
-                cand[i] = j
-                t = makespan(cand)
+                fp = st.stage_flip_pos(i, j)
+                p0 = pi if fp is None or fp > pi else fp
+                m = p0 // _SNAP_EVERY
+                tmp = snaps[m].clone()
+                st.assign[i] = j
+                tmp.assign = st.assign
+                tmp.placed = st.placed
+                tmp.advance(end)
+                t = max(tmp.finish)
                 evals += 1
                 if t < best - _EPS:
-                    assign, best, improved = cand, t, True
-    return assign, evals
+                    st = _rewind(st, snaps, m)
+                    _advance_snapped(st, snaps, end, min_key)
+                    best, improved = t, True
+                else:
+                    st.assign[i] = old
+    return st.assign, evals, best
 
 
 def solve_list_schedule(devices: Sequence[DeviceProfile],
@@ -521,25 +771,27 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     for i, j in pinned.items():
         assign[i] = j
     evals = 0
-    for pos, i in enumerate(order):
-        if i in pinned:
-            continue
-        prefix = order[: pos + 1]
-        best_j, best_t = 0, math.inf
-        for j in range(len(devices)):
-            assign[i] = j
-            if priority == "topo":
+    ctx = GraphSimContext(devices, tasks, edges, topo, order, clocks, ext)
+    if priority == "topo":
+        solo = [-1] * n   # scratch assignment, reused across candidates
+        for i in order:
+            if i in pinned:
+                continue
+            best_j, best_t = 0, math.inf
+            for j in range(len(devices)):
                 # myopic: the task alone, an empty timeline
-                solo = [-1] * n
                 solo[i] = j
                 t = graph_finish_times(devices, tasks, edges, solo,
                                        topology=topo, order=[i])[i]
-            else:
-                t = finish(assign, prefix)[i]
-            evals += 1
-            if t < best_t - _EPS:
-                best_j, best_t = j, t
-        assign[i] = best_j
+                evals += 1
+                if t < best_t - _EPS:
+                    best_j, best_t = j, t
+            solo[i] = -1
+            assign[i] = best_j
+    else:
+        st, e = _eft_place(ctx, assign, pinned)
+        assign = st.assign
+        evals += e
 
     def makespan(a) -> float:
         return max(finish(a, order))
@@ -549,8 +801,6 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
         # partial solve (mid-graph splice) must not sneak up to
         # exhaustive_limit full-graph simulations through a small free set
         if len(devices) ** len(free) <= min(exhaustive_limit, max_evals):
-            import itertools
-
             best_a, best_t = list(assign), makespan(assign)
             evals += 1
             for combo in itertools.product(range(len(devices)),
@@ -601,12 +851,9 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                     seeds.append(one)
             best_a, best_t = None, math.inf
             for seed in seeds:
-                cand, e = _descend_assign(devices, tasks, edges, seed,
-                                          order, topo, free=free,
-                                          makespan=makespan,
-                                          max_evals=budget)
+                cand, e, t = _descend_assign(ctx, seed, free=free,
+                                             max_evals=budget)
                 evals += e
-                t = makespan(cand)
                 if t < best_t - _EPS:
                     best_a, best_t = cand, t
             assign = best_a

@@ -1,0 +1,140 @@
+"""Incremental scheduling engine — exactness properties (DESIGN.md §12).
+
+The checkpoint/extend contract: a ``GraphSimState`` advanced in arbitrary
+chunks, under carried clocks and external ``ext`` finish times, must
+produce finish times *byte-identical* to the canonical from-scratch
+``graph_finish_times`` — and the EFT placement built on candidate peeks
+(scalar and vectorized) must reproduce the pre-PR full-prefix-resim
+placement exactly.
+"""
+import math
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BusTopology, ClockState, CopyModel, DeviceProfile,
+                        GraphSimContext, GraphSimState, LinearTimeModel,
+                        NO_COPY, TaskSpec, graph_finish_times,
+                        solve_list_schedule)
+from repro.core.optimize import _DeviceArrays, _EPS, _peek_batch
+
+
+def _devs():
+    return [
+        DeviceProfile("cpu", "cpu", LinearTimeModel(a=1 / 5e12, b=1e-4),
+                      NO_COPY),
+        DeviceProfile("gpu0", "gpu", LinearTimeModel(a=1 / 60e12, b=5e-5),
+                      CopyModel(16e9, dtype_size=4)),
+        DeviceProfile("gpu1", "gpu", LinearTimeModel(a=1 / 25e12, b=8e-5),
+                      CopyModel(8e9, dtype_size=4)),
+    ]
+
+
+_bytes = st.one_of(st.just(0.0), st.floats(1e3, 1e9))
+
+
+@st.composite
+def _dag(draw):
+    """A random DAG in natural topological order, with zero byte/op counts
+    mixed in so the no-copy / no-output fast paths are exercised."""
+    n = draw(st.integers(2, 8))
+    edges = tuple((u, v) for u in range(n) for v in range(u + 1, n)
+                  if draw(st.booleans()))
+    tasks = [TaskSpec(name=f"t{i}", ops=draw(st.floats(0.0, 1e12)),
+                      in_bytes=draw(_bytes), out_bytes=draw(_bytes))
+             for i in range(n)]
+    return tasks, edges
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=_dag(), data=st.data())
+def test_incremental_equals_from_scratch(case, data):
+    """Chunked GraphSimState.advance == graph_finish_times, exactly —
+    under random assignments (including unplaced), carried clocks, and
+    random ``ext`` maps (including infinite avail)."""
+    tasks, edges = case
+    n = len(tasks)
+    devs = _devs()
+    topo = BusTopology.from_spec("serialized", devs)
+    order = list(range(n))
+    assign = [data.draw(st.integers(-1, 2)) for _ in range(n)]
+    clocks = ClockState(
+        devices={d.name: data.draw(st.floats(0.0, 0.01)) for d in devs},
+        floor=data.draw(st.floats(0.0, 0.01)))
+    ext = {}
+    for i in range(n):
+        if data.draw(st.booleans()):
+            ce = data.draw(st.floats(0.0, 0.02))
+            av = (math.inf if data.draw(st.booleans())
+                  else ce + data.draw(st.floats(0.0, 0.01)))
+            ext[i] = (ce, av)
+    ctx = GraphSimContext(devs, tasks, edges, topo, order,
+                          clocks=clocks, ext=ext)
+    state = GraphSimState(ctx, list(assign))
+    for cut in sorted(data.draw(st.lists(st.integers(0, n), max_size=3))):
+        state.advance(cut)
+    state.advance(n)
+    ref = graph_finish_times(devs, tasks, edges, assign, topology=topo,
+                             order=order, clocks=clocks, ext=ext)
+    assert state.finish == ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(case=_dag(), data=st.data())
+def test_peek_prices_match_committed_engine(case, data):
+    """peek_finish (scalar) and _peek_batch (vectorized) price every
+    candidate byte-identically to what committing it would produce."""
+    tasks, edges = case
+    n = len(tasks)
+    devs = _devs()
+    topo = BusTopology.from_spec("serialized", devs)
+    order = list(range(n))
+    ctx = GraphSimContext(devs, tasks, edges, topo, order)
+    sim = GraphSimState(ctx, [-1] * n, placed=[])
+    da = _DeviceArrays(ctx)
+    for pos, i in enumerate(order):
+        peeks = [sim.peek_finish(i, j) for j in range(len(devs))]
+        assert [float(v) for v in _peek_batch(sim, da, i)] == peeks
+        j = data.draw(st.integers(0, len(devs) - 1))
+        sim.assign[i] = j
+        sim.placed[i] = 1
+        sim.advance(pos + 1)
+        assert sim.finish[i] == peeks[j]
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=_dag(), data=st.data())
+def test_solver_matches_scratch_eft(case, data):
+    """solve_list_schedule's incremental EFT placement (with random
+    pinned subsets) equals the pre-PR loop that re-simulated the whole
+    placed prefix for every (task, device) candidate."""
+    tasks, edges = case
+    n = len(tasks)
+    devs = _devs()
+    topo = BusTopology.from_spec("serialized", devs)
+    pinned = {i: data.draw(st.integers(0, len(devs) - 1))
+              for i in range(n) if data.draw(st.booleans())}
+    res = solve_list_schedule(devs, tasks, edges, bus=topo, refine=False,
+                              pinned=pinned)
+    order = list(res.order)
+    assign = [-1] * n
+    for i, j in pinned.items():
+        assign[i] = j
+    for pos, i in enumerate(order):
+        if i in pinned:
+            continue
+        best_j, best_t = 0, math.inf
+        for j in range(len(devs)):
+            assign[i] = j
+            t = graph_finish_times(devs, tasks, edges, assign,
+                                   topology=topo, order=order[:pos + 1])[i]
+            if t < best_t - _EPS:
+                best_j, best_t = j, t
+        assign[i] = best_j
+    assert list(res.assign) == assign
+    assert res.task_finish == graph_finish_times(
+        devs, tasks, edges, assign, topology=topo, order=order)

@@ -1,0 +1,45 @@
+"""transformer_stack — the scheduler bench's DAG generator (no hypothesis
+needed; the engine-exactness properties live in
+test_scheduler_incremental.py)."""
+import pytest
+
+from repro.core import transformer_stack
+
+
+def test_transformer_stack_shape():
+    L, M, G = 2, 3, 4
+    g = transformer_stack(layers=L, microbatches=M, groups=G)
+    per_block = 4 * G + 3
+    assert len(g) == L * M * per_block
+    assert len(g.edges) == L * M * (5 * G + 1) + (L - 1) * M * G
+    names = {nd.name for nd in g.nodes}
+    assert all(u in names and v in names for u, v in g.edges)
+
+
+def test_transformer_stack_from_config_zoo():
+    g = transformer_stack("stablelm-12b", layers=2, microbatches=2)
+    assert len(g) == 2 * 2 * (4 * 4 + 3)
+
+
+def test_transformer_stack_cost_signature():
+    a = transformer_stack(layers=2, microbatches=2)
+    b = transformer_stack(layers=2, microbatches=2)
+    c = transformer_stack(layers=2, microbatches=4)
+    assert a.cost_signature() == b.cost_signature()
+    assert a.cost_signature() != c.cost_signature()
+
+
+def test_transformer_stack_validation():
+    with pytest.raises(ValueError):
+        transformer_stack(layers=0)
+    with pytest.raises(ValueError):
+        transformer_stack(microbatches=0)
+
+
+def test_transformer_stack_microbatches_split_sequence():
+    whole = transformer_stack(layers=1, microbatches=1, seq=4096)
+    split = transformer_stack(layers=1, microbatches=4, seq=4096)
+    assert len(split) == 4 * len(whole)
+    # GEMM work is linear in seq (conserved); attention is quadratic, so
+    # shorter microbatch sequences do strictly less attention work
+    assert split.total_ops() < whole.total_ops()
