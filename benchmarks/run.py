@@ -18,6 +18,9 @@ Sections:
   §Sched    — incremental-engine placement throughput vs the from-scratch
               EFT baseline, partial re-solve latency (scheduler; writes
               BENCH_scheduler.json — uploaded in CI)
+  §Tenants  — weighted-fair + preemptive admission vs FIFO on one shared
+              core, per-tier latency percentiles (runtime_tenants; writes
+              BENCH_runtime.json — uploaded in CI)
 
 A failing section is reported as ``name,0,ERROR`` and the driver keeps
 going, but the failure is collected and the process exits non-zero — CI
@@ -40,7 +43,8 @@ import sys
 import traceback
 
 BENCH_FILES = ("BENCH_timeline.json", "BENCH_streaming.json",
-               "BENCH_graph.json", "BENCH_scheduler.json")
+               "BENCH_graph.json", "BENCH_scheduler.json",
+               "BENCH_runtime.json")
 TOLERANCE = float(os.environ.get("BENCH_REGRESSION_TOL", "0.10"))
 
 
@@ -145,12 +149,13 @@ def main() -> None:
         _check(sys.argv[2])
         return
     from . import (exec_time, graph, plan_cache, prediction_accuracy,
-                   roofline, scheduler, speedup, streaming, timeline,
-                   work_distribution)
+                   roofline, runtime_tenants, scheduler, speedup,
+                   streaming, timeline, work_distribution)
     baselines = load_baselines()
     failures: list[str] = []
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
-                roofline, plan_cache, timeline, streaming, graph, scheduler):
+                roofline, plan_cache, timeline, streaming, graph, scheduler,
+                runtime_tenants):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

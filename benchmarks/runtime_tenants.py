@@ -1,0 +1,190 @@
+"""Multi-tenant runtime benchmark — weighted-fair, SLO-aware admission with
+priority preemption vs plain FIFO on one shared core, emitted as
+``BENCH_runtime.json`` (a CI artifact alongside the other BENCH reports).
+
+The scenario (DESIGN.md §13): two tenants share one virtual-time runtime on
+``paper_mach1`` —
+
+* ``batch``   — weight 1, batch tier: bursts of transformer-block DAGs
+  (a backlog burst at t=0 and a second burst mid-stream);
+* ``latency`` — weight 4, latency tier: small diamond DAGs arriving
+  open-loop throughout the busy period.
+
+The same arrival schedule runs under two admission configurations:
+
+* ``fifo``         — submission order, no preemption (the pre-§13 queue);
+* ``fair_preempt`` — SFQ weighted-fair order within strict tier priority,
+  plus priority preemption (a latency arrival revokes the in-flight batch
+  victim's not-yet-started tickets and splices its re-solved frontier).
+
+Everything runs in deterministic virtual time, so the per-tier latency
+percentiles are exact model quantities, not wall-clock noise.  Acceptance
+(asserted): fair+preempt beats FIFO on latency-tier p99 by >= 1.2x, at
+least one preemption splice actually happened, an infeasible-deadline job
+is rejected at admission (and leaves no trace on the shared timeline), and
+the cross-plan stream invariants hold in every configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import (AdmissionRejected, CoExecutionRuntime, QoS,
+                        TIER_LATENCY, TaskGraphDomain, diamond,
+                        transformer_block, truth_from_profiles,
+                        verify_stream_invariants)
+
+from .common import MACHINES, emit, timed
+
+OUT_PATH = os.environ.get("BENCH_RUNTIME_PATH", "BENCH_runtime.json")
+MACHINE = "mach1"
+N_BATCH = 10          # transformer blocks across two bursts
+N_LATENCY = 8         # open-loop latency-tier arrivals
+LATENCY_WEIGHT = 4.0
+P99_TARGET = 1.2      # acceptance floor for the latency-tier p99 speedup
+
+
+def _block():
+    return transformer_block(d_model=2048, seq=4096, groups=4)
+
+
+def _probe_block_makespan() -> float:
+    """One block's solo makespan — the deterministic unit the arrival
+    schedule is expressed in (model seconds, machine-independent)."""
+    dom = TaskGraphDomain(MACHINES[MACHINE](), bus="serialized",
+                          dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual",
+                            truth=truth_from_profiles(MACHINES[MACHINE]()),
+                            max_inflight=1) as rt:
+        return rt.run_stream([_block()])[0].measured.makespan
+
+
+def _schedule(M: float):
+    """The open-loop arrival schedule: (arrival, tenant, workload) tuples
+    in arrival order — bursty batch traffic with latency-tier arrivals
+    landing inside the busy period."""
+    rows = []
+    for i in range(N_BATCH):
+        # burst 1: 6 jobs at t=0; burst 2: the rest at t = 4 blocks
+        rows.append((0.0 if i < 6 else 4.0 * M, "batch", _block()))
+    for i in range(N_LATENCY):
+        rows.append(((0.5 + 0.9 * i) * M, "latency",
+                     diamond(ops=2e9, width=3)))
+    rows.sort(key=lambda r: r[0])
+    return rows
+
+
+def run_config(admission: str, preempt: bool, M: float) -> dict:
+    machine = MACHINES[MACHINE]
+    rt = CoExecutionRuntime(None, executor="virtual",
+                            truth=truth_from_profiles(machine()),
+                            feedback=True, max_inflight=2,
+                            admission=admission, preempt=preempt)
+    try:
+        tenants = {
+            "batch": rt.register("batch",
+                                 TaskGraphDomain(machine(),
+                                                 bus="serialized",
+                                                 dynamic=True),
+                                 QoS(weight=1.0)),
+            "latency": rt.register("latency",
+                                   TaskGraphDomain(machine(),
+                                                   bus="serialized",
+                                                   dynamic=True),
+                                   QoS(weight=LATENCY_WEIGHT,
+                                       tier=TIER_LATENCY)),
+        }
+        rt.pause_admission()
+        for arrival, name, wl in _schedule(M):
+            tenants[name].submit(wl, arrival=arrival)
+        # one impossible SLO: predicted completion can never fit 1 us —
+        # admission must bounce it before a single ticket is issued
+        doomed = tenants["latency"].submit(diamond(ops=2e9, width=3),
+                                           arrival=0.6 * M,
+                                           deadline_s=1e-6)
+        rt.resume_admission()
+        rt.drain()
+        jobs = list(rt.jobs)
+        stats = rt.stats()
+        violations = verify_stream_invariants(jobs)
+    finally:
+        rt.shutdown()
+    done = [j for j in jobs if j.done and j.error is None]
+    assert doomed.rejected and isinstance(doomed.error, AdmissionRejected)
+    assert doomed.measured is None and doomed.planned is None
+    assert len(done) == N_BATCH + N_LATENCY, \
+        f"{len(done)} jobs finished, expected {N_BATCH + N_LATENCY}"
+    preempt_splices = sum(1 for j in jobs for r in j.replans
+                          if r.reason == "preempt")
+    return {
+        "admission": admission,
+        "preempt": preempt,
+        "total_makespan_s": stats["total_makespan_s"],
+        "rejected": stats["rejected"],
+        "preempt_splices": preempt_splices,
+        "invariant_violations": violations,
+        "tiers": {
+            name: {
+                "jobs_done": t["jobs_done"],
+                "p50_latency_s": t["p50_latency_s"],
+                "p95_latency_s": t["p95_latency_s"],
+                "p99_latency_s": t["p99_latency_s"],
+            } for name, t in stats["tenants"].items()
+        },
+    }
+
+
+def main() -> None:
+    M = _probe_block_makespan()
+    report: dict = {
+        "scenario": {
+            "machine": MACHINE, "n_batch": N_BATCH,
+            "n_latency": N_LATENCY, "latency_weight": LATENCY_WEIGHT,
+            "block_makespan_s": M,
+        },
+    }
+    for key, (admission, preempt) in (
+            ("fifo", ("fifo", False)),
+            ("fair_preempt", ("fair", True))):
+        row, dt = timed(run_config, admission, preempt, M, repeats=1)
+        report[key] = row
+        lat = row["tiers"]["latency"]
+        emit(f"runtime_tenants_{key}", dt * 1e6,
+             f"lat_p99={lat['p99_latency_s']*1e3:.2f}ms "
+             f"splices={row['preempt_splices']} "
+             f"viol={len(row['invariant_violations'])}")
+
+    fifo = report["fifo"]["tiers"]["latency"]
+    fair = report["fair_preempt"]["tiers"]["latency"]
+    report["latency_p50_speedup"] = (fifo["p50_latency_s"]
+                                     / fair["p50_latency_s"])
+    report["latency_p99_speedup"] = (fifo["p99_latency_s"]
+                                     / fair["p99_latency_s"])
+    report["acceptance"] = {
+        "latency_p99_speedup_ge_1p2":
+            report["latency_p99_speedup"] >= P99_TARGET,
+        "preemption_exercised":
+            report["fair_preempt"]["preempt_splices"] >= 1,
+        "infeasible_deadline_rejected": all(
+            report[k]["rejected"] == 1 for k in ("fifo", "fair_preempt")),
+        "invariants_clean": all(
+            not report[k]["invariant_violations"]
+            for k in ("fifo", "fair_preempt")),
+    }
+    assert report["acceptance"]["latency_p99_speedup_ge_1p2"], \
+        (f"fair+preempt latency p99 speedup "
+         f"{report['latency_p99_speedup']:.3f}x < {P99_TARGET}x")
+    assert report["acceptance"]["preemption_exercised"], \
+        "no preemption splice happened in the fair_preempt run"
+    assert report["acceptance"]["infeasible_deadline_rejected"]
+    assert report["acceptance"]["invariants_clean"]
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("runtime_tenants_report", 0.0,
+         f"{OUT_PATH} p99_speedup={report['latency_p99_speedup']:.3f}x "
+         f"p50_speedup={report['latency_p50_speedup']:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

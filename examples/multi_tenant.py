@@ -1,0 +1,85 @@
+"""Multi-tenant co-execution: weighted-fair, SLO-aware, preemptive.
+
+Two tenants share ONE runtime (one link namespace, one carried-clock
+timeline) on the paper's mach1 testbed: a batch tenant streaming
+transformer-block DAGs, and a latency-tier tenant firing small diamond
+DAGs open-loop into the middle of the backlog.  The same arrival
+schedule runs twice — plain FIFO admission, then SFQ weighted-fair
+admission with priority preemption — and the latency tier's percentiles
+collapse while total makespan stays put (DESIGN.md §13).  An
+infeasible-deadline job is rejected at admission in both runs: predicted
+completion on the carried clocks is the SLO gate.
+
+    PYTHONPATH=src python examples/multi_tenant.py
+"""
+from repro.core import (AdmissionRejected, CoExecutionRuntime, QoS,
+                        TIER_LATENCY, TaskGraphDomain, diamond,
+                        paper_mach1, transformer_block,
+                        truth_from_profiles, verify_stream_invariants)
+
+N_BATCH = 8
+N_LATENCY = 6
+
+
+def _block():
+    return transformer_block(d_model=2048, seq=4096, groups=4)
+
+
+def run(admission: str, preempt: bool, M: float):
+    rt = CoExecutionRuntime(None, executor="virtual",
+                            truth=truth_from_profiles(paper_mach1()),
+                            feedback=True, max_inflight=2,
+                            admission=admission, preempt=preempt)
+    try:
+        batch = rt.register("batch", TaskGraphDomain(
+            paper_mach1(), bus="serialized", dynamic=True), QoS(weight=1.0))
+        lat = rt.register("latency", TaskGraphDomain(
+            paper_mach1(), bus="serialized", dynamic=True),
+            QoS(weight=4.0, tier=TIER_LATENCY))
+        rt.pause_admission()
+        for _ in range(N_BATCH):
+            batch.submit(_block(), arrival=0.0)
+        for i in range(N_LATENCY):
+            lat.submit(diamond(ops=2e9, width=3), arrival=(0.5 + i) * M)
+        doomed = lat.submit(diamond(ops=2e9, width=3), arrival=0.5 * M,
+                            deadline_s=1e-6)
+        rt.resume_admission()
+        rt.drain()
+        assert doomed.rejected and isinstance(doomed.error,
+                                              AdmissionRejected)
+        assert verify_stream_invariants(list(rt.jobs)) == []
+        stats = rt.stats()
+        splices = sum(1 for j in rt.jobs for r in j.replans
+                      if r.reason == "preempt")
+        return stats, splices
+    finally:
+        rt.shutdown()
+
+
+def main():
+    # one block's solo makespan anchors the open-loop arrival schedule
+    with CoExecutionRuntime(
+            TaskGraphDomain(paper_mach1(), bus="serialized", dynamic=True),
+            executor="virtual", truth=truth_from_profiles(paper_mach1()),
+            max_inflight=1) as probe:
+        M = probe.run_stream([_block()])[0].measured.makespan
+
+    print(f"{'config':<14} {'lat p50':>9} {'lat p99':>9} "
+          f"{'batch p99':>10} {'total':>9} {'splices':>8}")
+    for label, admission, preempt in (("fifo", "fifo", False),
+                                      ("fair+preempt", "fair", True)):
+        stats, splices = run(admission, preempt, M)
+        t = stats["tenants"]
+        print(f"{label:<14} {t['latency']['p50_latency_s']*1e3:8.2f}m "
+              f"{t['latency']['p99_latency_s']*1e3:8.2f}m "
+              f"{t['batch']['p99_latency_s']*1e3:9.2f}m "
+              f"{stats['total_makespan_s']*1e3:8.2f}m {splices:>8}")
+        assert stats["rejected"] == 1    # the SLO gate fired in both runs
+    print("\nlatency tier jumps the backlog (strict tier priority), SFQ "
+          "keeps batch tenants\nweight-proportional, and preemption "
+          "revokes in-flight batch tickets — same\ntotal makespan, "
+          "collapsed tail latency.")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,18 +33,19 @@ from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
 from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
                        simulate_graph_timeline, simulate_timeline)
 from .graph import (GraphPlan, TaskGraph, TaskGraphDomain, TaskNode,
-                    diamond, transformer_block, transformer_stack,
-                    verify_graph_dependencies)
-from .domain import (Domain, FunctionDomain, PlanCache, Workload,
-                     device_signature, get_domain, list_domains,
-                     register_domain)
+                    diamond, moe_block, moe_stack, transformer_block,
+                    transformer_stack, verify_graph_dependencies)
+from .domain import (Domain, FunctionDomain, PlanCache, QoS, TIER_BATCH,
+                     TIER_LATENCY, Workload, device_signature, get_domain,
+                     list_domains, register_domain)
 from .executor import (DeviceTask, JobHandle, OverlappedExecutor, StreamCore,
                        TicketBus)
 from .framework import (GemmDomain, GemmWorkload, POAS, POASPlan,
                         make_gemm_poas)
 from .hgemms import ExecutionReport, HGemms
-from .runtime import (CoExecutionRuntime, ObservationPump, ReplanRecord,
-                      StreamJob, model_sleep_tasks, throttled,
+from .runtime import (AdmissionRejected, CoExecutionRuntime, FairAdmission,
+                      ObservationPump, ReplanRecord, StreamJob, Tenant,
+                      copy_throttled, model_sleep_tasks, throttled,
                       truth_from_profiles, verify_stream_invariants)
 
 __all__ = [
@@ -62,20 +63,23 @@ __all__ = [
     "ops_to_mnk", "squareness",
     "BusEvent", "DynamicScheduler", "Schedule", "StaticScheduler",
     "Timeline", "simulate_timeline",
-    "Domain", "FunctionDomain", "PlanCache", "Workload", "device_signature",
+    "Domain", "FunctionDomain", "PlanCache", "QoS", "TIER_BATCH",
+    "TIER_LATENCY", "Workload", "device_signature",
     "get_domain", "list_domains", "register_domain",
     "DeviceTask", "JobHandle", "OverlappedExecutor", "StreamCore",
     "TicketBus",
     "GemmDomain", "GemmWorkload", "POAS", "POASPlan", "make_gemm_poas",
     "ExecutionReport", "HGemms",
     "ClockState", "TimelineSpec", "carry_clocks",
-    "CoExecutionRuntime", "ObservationPump", "ReplanRecord", "StreamJob",
-    "model_sleep_tasks", "throttled", "truth_from_profiles",
-    "verify_stream_invariants",
+    "AdmissionRejected", "CoExecutionRuntime", "FairAdmission",
+    "ObservationPump", "ReplanRecord", "StreamJob", "Tenant",
+    "copy_throttled", "model_sleep_tasks", "throttled",
+    "truth_from_profiles", "verify_stream_invariants",
     "GraphSimContext", "GraphSimState",
     "GraphTimelineSpec", "TaskSpec", "build_graph_timeline",
     "graph_finish_times", "GraphScheduleResult", "solve_list_schedule",
     "simulate_graph_timeline",
     "GraphPlan", "TaskGraph", "TaskGraphDomain", "TaskNode", "diamond",
-    "transformer_block", "transformer_stack", "verify_graph_dependencies",
+    "moe_block", "moe_stack", "transformer_block", "transformer_stack",
+    "verify_graph_dependencies",
 ]

@@ -55,7 +55,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -180,6 +180,42 @@ class ClockState:
 
     def device(self, name: str) -> float:
         return max(self.devices.get(name, self.floor), self.floor)
+
+    # -- multi-tenant views (DESIGN.md §13) ---------------------------------
+
+    def with_floor(self, t: float) -> "ClockState":
+        """The same clocks with nothing allowed to start before ``t`` — an
+        arrival gate: a job admitted at ``t`` cannot occupy a link or device
+        in its past, even ones the stream has not touched yet."""
+        if t <= self.floor:
+            return self
+        return ClockState(links=self.links, devices=self.devices, floor=t)
+
+    def restrict(self, links: "Iterable[str]",
+                 devices: "Iterable[str]") -> "ClockState":
+        """A tenant's view of the shared clocks: only the named links and
+        devices (the ones its ``BusTopology`` can reach), same floor.  Keeps
+        one tenant's private link names from leaking into another tenant's
+        rebase while the SHARED names (the contended PCIe bus, the common
+        accelerators) still carry across tenants."""
+        lset, dset = set(links), set(devices)
+        return ClockState(
+            links={k: v for k, v in self.links.items() if k in lset},
+            devices={k: v for k, v in self.devices.items() if k in dset},
+            floor=self.floor)
+
+    def merge(self, other: "ClockState") -> "ClockState":
+        """Max-merge two clock states (same algebra as ``carry_clocks``):
+        every link/device takes the later of the two clocks, the floor the
+        higher of the two floors."""
+        links = dict(self.links)
+        for k, v in other.links.items():
+            links[k] = max(links.get(k, other.floor), v)
+        devices = dict(self.devices)
+        for k, v in other.devices.items():
+            devices[k] = max(devices.get(k, other.floor), v)
+        return ClockState(links=links, devices=devices,
+                          floor=max(self.floor, other.floor))
 
 
 ZERO_CLOCKS = ClockState()

@@ -76,6 +76,43 @@ class Domain(Protocol):
     def cost_signature(self, workload: Workload) -> Hashable: ...
 
 
+# ---------------------------------------------------------------------------
+# Tenant policy (multi-tenant runtime, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+TIER_LATENCY = 0
+TIER_BATCH = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QoS:
+    """What a tenant is *entitled to* — the domain-agnostic service policy
+    the multi-tenant runtime schedules by (DESIGN.md §13).
+
+    ``weight``      — weighted-fair share within a tier (2.0 = twice the
+                      admission bandwidth of a weight-1.0 tenant);
+    ``tier``        — strict priority class: every ``TIER_LATENCY`` job is
+                      admitted before any eligible ``TIER_BATCH`` job, and
+                      may preempt a batch job's not-yet-started frontier;
+    ``deadline_s``  — default relative deadline per job (None = best
+                      effort).  At admission the runtime prices the job's
+                      predicted completion on the carried clocks via the
+                      engine; an infeasible deadline is rejected before a
+                      single ticket is issued.
+    """
+
+    weight: float = 1.0
+    tier: int = TIER_BATCH
+    deadline_s: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.weight <= 0.0:
+            raise ValueError(f"QoS weight must be > 0, got {self.weight}")
+        if self.deadline_s is not None and self.deadline_s <= 0.0:
+            raise ValueError("QoS deadline_s must be > 0 when set")
+
+
 @dataclasses.dataclass
 class FunctionDomain:
     """Adapter: four loose callables as a ``Domain`` (legacy construction)."""

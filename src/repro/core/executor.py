@@ -155,6 +155,12 @@ class TicketBus:
         the grant sequence)."""
         self.cancel(lambda t: t not in tickets)
 
+    def depth(self) -> int:
+        """Pending (not-yet-granted) tickets — the admission-control queue
+        depth signal (DESIGN.md §13)."""
+        with self._cv:
+            return len(self._seq) - self._pos
+
 
 # ---------------------------------------------------------------------------
 # The persistent streaming core
@@ -347,6 +353,15 @@ class StreamCore:
             if reset:
                 self._events.clear()
         return Timeline(sorted(events, key=lambda e: (e.start, e.end)))
+
+    def link_depths(self) -> dict[str, int]:
+        """Pending-ticket depth per live bus — what the multi-tenant
+        admission controller inspects before pricing a deadline
+        (DESIGN.md §13).  HTS-style admission works at queue depth, not
+        at job completion granularity."""
+        with self._lock:
+            buses = dict(self._buses)
+        return {name: bus.depth() for name, bus in buses.items()}
 
     def shutdown(self) -> None:
         """Stop the worker threads after their queues drain."""

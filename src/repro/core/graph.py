@@ -413,6 +413,152 @@ def transformer_stack(config=None, *, layers: int | None = None,
     return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
 
 
+def moe_block(*, d_model: int = 4096, seq: int = 4096,
+              d_ff: int = 16384, experts: int = 8,
+              experts_per_token: int = 2, groups: int = 4,
+              dtype_size: int = 2, name: str = "moe") -> TaskGraph:
+    """A mixture-of-experts transformer block as a ``TaskGraph``.
+
+    The attention half is identical to ``transformer_block`` (grouped
+    qkv → attn → proj → res1); the dense MLP is replaced by the MoE
+    pattern: a cheap ``router`` fans out to ``experts`` *parallel* expert
+    branches — each an ``up``/``down`` matmul pair over its token share
+    ``seq * experts_per_token / experts`` — joined by a weighted
+    ``combine``.  Every expert reads its OWN weight slab
+    (``2 * d_model * d_ff`` bytes), so at low tokens-per-expert the DAG
+    is copy-bound where the dense block is compute-bound — exactly the
+    wide, link-pressured fan-out ALP co-execution is for.
+    """
+    f = d_ff
+    if groups < 1 or d_model % groups:
+        raise ValueError("groups must divide d_model")
+    if experts < 1 or experts_per_token < 1 or experts_per_token > experts:
+        raise ValueError("need 1 <= experts_per_token <= experts")
+    d, s, G, E = d_model, seq, groups, experts
+    dg = d // G
+    tok_e = float(s) * experts_per_token / E    # tokens per expert
+    x_bytes = float(s * d * dtype_size)
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+
+    for g in range(G):
+        qkv = f"{name}.qkv{g}"
+        attn = f"{name}.attn{g}"
+        nodes.append(TaskNode(qkv, ops=float(s) * d * (3 * dg),
+                              in_bytes=x_bytes + d * (3 * dg) * dtype_size,
+                              out_bytes=float(s * 3 * dg * dtype_size)))
+        nodes.append(TaskNode(attn, ops=2.0 * s * s * dg,
+                              out_bytes=float(s * dg * dtype_size)))
+        edges.append((qkv, attn))
+        edges.append((attn, f"{name}.proj"))
+    nodes.append(TaskNode(f"{name}.proj", ops=float(s) * d * d,
+                          in_bytes=float(d * d * dtype_size),
+                          out_bytes=x_bytes))
+    nodes.append(TaskNode(f"{name}.res1", ops=float(s * d),
+                          in_bytes=x_bytes, out_bytes=x_bytes))
+    edges.append((f"{name}.proj", f"{name}.res1"))
+    router = f"{name}.router"
+    nodes.append(TaskNode(router, ops=float(s) * d * E,
+                          in_bytes=float(d * E * dtype_size),
+                          out_bytes=float(s * E * dtype_size)))
+    edges.append((f"{name}.res1", router))
+    for e in range(E):
+        up = f"{name}.up{e}"
+        down = f"{name}.down{e}"
+        nodes.append(TaskNode(up, ops=tok_e * d * f,
+                              in_bytes=float(d * f * dtype_size)
+                              + tok_e * d * dtype_size,
+                              out_bytes=tok_e * f * dtype_size))
+        nodes.append(TaskNode(down, ops=tok_e * f * d,
+                              in_bytes=float(f * d * dtype_size),
+                              out_bytes=tok_e * d * dtype_size))
+        edges.append((router, up))
+        edges.append((up, down))
+        edges.append((down, f"{name}.combine"))
+    nodes.append(TaskNode(f"{name}.combine",
+                          ops=float(s * d * experts_per_token),
+                          out_bytes=x_bytes))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
+def moe_stack(config=None, *, layers: int | None = None,
+              microbatches: int = 1, seq: int = 4096,
+              experts: int | None = None,
+              experts_per_token: int | None = None,
+              moe_every: int | None = None,
+              groups: int = 4, dtype_size: int = 2,
+              name: str | None = None) -> TaskGraph:
+    """A whole MoE model DAG from the in-repo config zoo — expert fan-out
+    as parallel DAG branches (``moe_block``), dense ``transformer_block``
+    layers interleaved per the config's ``moe_every`` stride.
+
+    ``config`` is an ``ArchConfig``, a config name (``"dbrx-132b"``,
+    ``"llama4-maverick-400b-a17b"``), or None for the default geometry;
+    explicit keyword arguments override the config's
+    ``num_experts``/``experts_per_token``/``moe_every``.  Layer l is a
+    MoE layer when ``(l + 1) % moe_every == 0`` (llama4's interleaving
+    convention), so ``moe_every=1`` makes every layer MoE (dbrx).  Same
+    microbatch pipelining and group clamping as ``transformer_stack``.
+    """
+    d_model, d_ff = 4096, 16384
+    cfg_name = "moe"
+    if config is not None:
+        if isinstance(config, str):
+            from repro.configs import get_config   # lazy: avoids a cycle
+            cfg_name = config
+            config = get_config(config)
+        else:
+            cfg_name = getattr(config, "name", "model")
+        d_model = int(config.d_model)
+        d_ff = int(config.d_ff)
+        if layers is None:
+            layers = int(config.num_layers)
+        if experts is None and getattr(config, "num_experts", None):
+            experts = int(config.num_experts)
+        if experts_per_token is None \
+                and getattr(config, "experts_per_token", None):
+            experts_per_token = int(config.experts_per_token)
+        if moe_every is None and getattr(config, "moe_every", None):
+            moe_every = int(config.moe_every)
+    layers = 1 if layers is None else layers
+    experts = 8 if experts is None else experts
+    experts_per_token = min(2, experts) if experts_per_token is None \
+        else experts_per_token
+    moe_every = 1 if moe_every is None else moe_every
+    if layers < 1 or microbatches < 1 or moe_every < 1:
+        raise ValueError("layers, microbatches and moe_every must be >= 1")
+    g = max(1, min(groups, d_model, d_ff))
+    while d_model % g or d_ff % g:
+        g -= 1
+    seq_mb = max(1, seq // microbatches)
+    base = name if name is not None else str(cfg_name)
+
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+    for m in range(microbatches):
+        prev: str | None = None
+        for l in range(layers):
+            bname = f"{base}.l{l}.m{m}"
+            if (l + 1) % moe_every == 0:
+                block = moe_block(d_model=d_model, d_ff=d_ff, seq=seq_mb,
+                                  experts=experts,
+                                  experts_per_token=experts_per_token,
+                                  groups=g, dtype_size=dtype_size,
+                                  name=bname)
+            else:
+                block = transformer_block(d_model=d_model, d_ff=d_ff,
+                                          seq=seq_mb, groups=g,
+                                          dtype_size=dtype_size,
+                                          name=bname)
+            nodes.extend(block.nodes)
+            edges.extend(block.edges)
+            if prev is not None:
+                for gi in range(g):
+                    edges.append((prev, f"{bname}.qkv{gi}"))
+            prev = f"{bname}.combine"
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
 def diamond(ops: float = 1e9, *, bytes_per_edge: float = 1e6,
             width: int = 2, name: str = "dia") -> TaskGraph:
     """The textbook fork-join DAG (source → ``width`` parallel branches →

@@ -678,11 +678,20 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
     best = max(st.finish)
     evals = 1
     improved = True
+    # the budget binds mid-sweep, not only between sweeps: a single sweep
+    # is len(free)·(d-1) candidate moves, which at 10^3+ nodes dwarfs any
+    # reasonable budget — checking only in the while-condition made
+    # ``max_evals`` a dead letter exactly where it matters (the capped
+    # re-solve on a straggler's worker thread, DESIGN.md §11/§12)
     while improved and evals < max_evals:
         improved = False
         for i in movable:
+            if evals >= max_evals:
+                break
             pi = ctx.pos_of[i]
             for j in range(len(ctx.devices)):
+                if evals >= max_evals:
+                    break
                 old = st.assign[i]
                 if j == old:
                     continue

@@ -20,21 +20,29 @@ deployment serving sustained traffic, need a *continuous* loop instead.
   events into ``DynamicScheduler.observe`` calls, so model re-fits,
   ``PlanCache`` invalidation, and re-planning happen automatically inside
   the loop — a device that starts throttling mid-stream sheds load within
-  a few jobs without any caller wiring.
+  a few jobs without any caller wiring;
+* **multi-tenant admission** (DESIGN.md §13): one runtime serves jobs from
+  many registered ``Tenant``s (each its own domain, ``POAS``/``PlanCache``,
+  observation pump, and ``QoS`` policy) through a single weighted-fair,
+  deadline-aware admission queue onto ONE shared ``StreamCore`` and one
+  carried-clock timeline — with SLO rejection at admission (an infeasible
+  deadline never issues a ticket) and priority preemption of a batch-tier
+  job's not-yet-started frontier when a latency-tier job arrives (built on
+  the §11 ``reissue``/``rebase_partial`` splice machinery, unchanged).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import queue
 import threading
 import time
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Iterable, Mapping, Sequence
 
 from .bus import (ClockState, GraphTimelineSpec, Timeline, _has_copy,
                   carry_clocks, graph_finish_times)
 from .device_model import (DeviceProfile, LinearTimeModel, RooflineTimeModel)
-from .domain import Domain, PlanCache, Workload
+from .domain import (Domain, PlanCache, QoS, TIER_BATCH, TIER_LATENCY,
+                     Workload)
 from .executor import DeviceTask, StreamCore
 from .framework import POAS, POASPlan
 from .optimize import solve_list_schedule
@@ -126,6 +134,21 @@ def throttled(device: DeviceProfile, factor: float) -> DeviceProfile:
     return dataclasses.replace(device, compute=slow)
 
 
+def copy_throttled(device: DeviceProfile, factor: float) -> DeviceProfile:
+    """Ground-truth profile whose host<->device copies run ``factor``×
+    slower than ``device`` (a degraded PCIe lane, a saturated NIC).  The
+    engine prices copies from the device ``CopyModel`` capped by link
+    bandwidth, so this slows measured copy events in both the virtual and
+    the sleep-based threaded backends — the *link* straggler scenario."""
+    c = device.copy
+    if factor == 1.0 or math.isinf(c.bandwidth_bytes_per_s):
+        return device
+    slow = dataclasses.replace(
+        c, bandwidth_bytes_per_s=c.bandwidth_bytes_per_s / factor,
+        latency_s=c.latency_s * factor)
+    return dataclasses.replace(device, copy=slow)
+
+
 TruthFn = Callable[[int, DeviceProfile], DeviceProfile]
 """(job uid, planned device) -> the profile the hardware really runs at.
 
@@ -137,21 +160,26 @@ the model chases its own tail to infinity.  Use ``truth_from_profiles``.
 
 
 def truth_from_profiles(base: Sequence[DeviceProfile],
-                        slowdown: Callable[[int, str], float] | None = None
+                        slowdown: Callable[[int, str], float] | None = None,
+                        copy_slowdown: Callable[[int, str], float] | None = None
                         ) -> TruthFn:
     """A ``TruthFn`` pinned to fixed ground-truth ``base`` profiles.
 
-    ``slowdown(job_uid, device_name)`` returns the throttle factor in
-    effect for that job (1.0 = nominal) — e.g. a device overheating 2x
+    ``slowdown(job_uid, device_name)`` returns the compute throttle factor
+    in effect for that job (1.0 = nominal) — e.g. a device overheating 2x
     from job 8 onward is ``lambda uid, name: 2.0 if uid >= 8 and
-    name == "xpu" else 1.0``.
+    name == "xpu" else 1.0``.  ``copy_slowdown`` is the same contract for
+    the device's host<->device copy bandwidth (the link-straggler
+    scenario the copy-slack monitor catches).
     """
     by_name = {d.name: d for d in base}
 
     def fn(uid: int, planned: DeviceProfile) -> DeviceProfile:
         d = by_name.get(planned.name, planned)
         f = slowdown(uid, d.name) if slowdown is not None else 1.0
-        return throttled(d, f) if f != 1.0 else d
+        out = throttled(d, f) if f != 1.0 else d
+        cf = copy_slowdown(uid, d.name) if copy_slowdown is not None else 1.0
+        return copy_throttled(out, cf)
 
     return fn
 
@@ -260,11 +288,30 @@ class ReplanRecord:
     """
 
     at: float                    # stream time (model seconds) of the splice
-    straggler: str               # task whose slack tripped the monitor
+    straggler: str               # task (or preempting job id) that tripped it
     frozen: tuple[str, ...]
     spliced: tuple[str, ...]
     spec: GraphTimelineSpec
     planned: Timeline
+    # what tripped the splice: "straggler" (compute slack), "copy-straggler"
+    # (link slack), or "preempt" (a latency-tier arrival revoked this
+    # batch-tier job's frontier)
+    reason: str = "straggler"
+
+
+class AdmissionRejected(RuntimeError):
+    """The job's deadline was infeasible at admission: the engine-priced
+    predicted completion on the carried clocks exceeded it, so the job was
+    rejected *before* dispatch — no ticket was ever issued (DESIGN.md §13).
+    """
+
+    def __init__(self, uid: int, predicted: float, deadline: float):
+        super().__init__(
+            f"job {uid}: predicted completion {predicted:.6g}s exceeds "
+            f"deadline {deadline:.6g}s — rejected at admission")
+        self.uid = uid
+        self.predicted = predicted
+        self.deadline = deadline
 
 
 @dataclasses.dataclass
@@ -279,14 +326,24 @@ class StreamJob:
     error: BaseException | None = None
     epoch_at_plan: int = 0             # DynamicScheduler.epoch when planned
     replans: list[ReplanRecord] = dataclasses.field(default_factory=list)
+    # multi-tenant lifecycle (DESIGN.md §13)
+    tenant: "Tenant | None" = None
+    arrival: float = 0.0               # stream-axis submit time
+    deadline: float | None = None      # absolute stream-axis SLO deadline
+    vstart: float = 0.0                # SFQ start tag (fair-admission order)
+    vft: float = 0.0                   # SFQ finish tag (tenant's next floor)
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     # mid-execution bookkeeping (threads: the straggler monitor runs on
     # device worker threads; virtual: the deterministic replay)
     _fed_tasks: set = dataclasses.field(default_factory=set)
     _planned_compute: dict = dataclasses.field(default_factory=dict)
+    _planned_copy: dict = dataclasses.field(default_factory=dict)
     _handle: object = None
     _replan_attempts: int = 0
+    _preempt_attempts: int = 0
+    _admit_time: float = 0.0           # when the admission queue released it
+    _base_clocks: ClockState | None = None   # virtual: clocks it priced from
     # tasks whose straggler trigger was evaluated and produced no splice
     # (the re-solve confirmed the lock-in): don't re-solve for them again
     _checked_tasks: set = dataclasses.field(default_factory=set)
@@ -305,6 +362,11 @@ class StreamJob:
         return self._done.is_set()
 
     @property
+    def rejected(self) -> bool:
+        """True when SLO admission control rejected the job (never ran)."""
+        return isinstance(self.error, AdmissionRejected)
+
+    @property
     def start(self) -> float:
         if self.measured is None:
             return 0.0
@@ -318,6 +380,12 @@ class StreamJob:
     def span(self) -> float:
         """Measured latency of this job (first stage start → last end)."""
         return self.finish - self.start
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-completion latency on the stream axis (finish − the
+        arrival time) — queueing delay included, unlike ``span``."""
+        return max(0.0, self.finish - self.arrival)
 
     @property
     def final_spec(self):
@@ -357,6 +425,44 @@ def _ancestor_closed_freeze(spec: GraphTimelineSpec,
     return frozen_l, frontier
 
 
+def _planned_copy_map(spec: GraphTimelineSpec,
+                      devices: Sequence[DeviceProfile] | None = None
+                      ) -> dict[tuple[str, str], float]:
+    """Planned per-``(task, kind)`` copy seconds — what the copy-slack
+    monitor compares measured link transfers against (the link-straggler
+    counterpart of ``_planned_compute``)."""
+    out: dict[tuple[str, str], float] = {}
+    for task, stages in spec.stage_seconds(devices).items():
+        for kind, s in stages.items():
+            if kind != "compute" and s > 0.0:
+                out[(task, kind)] = s
+    return out
+
+
+def _copy_refit(devices: Sequence[DeviceProfile], events,
+                planned_stage: Mapping[str, Mapping[str, float]],
+                until: float = math.inf) -> list[DeviceProfile]:
+    """Fold measured copy slack into the re-solve's device profiles.
+
+    Compute models re-fit through the ``ObservationPump``, but nothing
+    observes the ``CopyModel`` — without this, a copy-straggler trip hands
+    the re-solve the same nominal link speeds the lock-in was planned
+    under, and it dutifully confirms the lock-in.  Scale each device's
+    copy model by the worst measured/planned ratio its link showed by the
+    detection time, so the re-solve prices the degraded lane honestly."""
+    ratio = {d.name: 1.0 for d in devices}
+    for e in events:
+        if e.kind not in ("copy_in", "copy_out") or e.task is None:
+            continue
+        if e.end > until + 1e-12:
+            continue
+        ps = planned_stage.get(e.task, {}).get(e.kind, 0.0)
+        if ps > 0.0 and e.duration > ps and e.device in ratio:
+            ratio[e.device] = max(ratio[e.device], e.duration / ps)
+    return [copy_throttled(d, ratio[d.name]) if ratio[d.name] > 1.0 else d
+            for d in devices]
+
+
 # Per-descent evaluation cap for the threaded mid-graph re-solve: it runs
 # in-line on the straggling device's worker thread (freezing its queue), and
 # on a serialized bus the other devices' first copies wait on the straggler's
@@ -370,19 +476,128 @@ _REPLAN_MIN_GAIN = 1.05
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant admission (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+class FairAdmission:
+    """Start-time Fair Queueing (SFQ) over tenants — pure tag algebra, no
+    clock reads, so the admission *order* is a deterministic function of
+    the submit sequence (Goyal et al.'s SFQ, the classic weighted-fair
+    discipline that needs no fluid-model reference clock).
+
+    Each job is stamped at submit with a virtual start tag
+    ``S = max(v, F_tenant)`` and finish tag ``F = S + cost / weight``
+    (``F_tenant`` = the tenant's previous job's finish tag); jobs are
+    admitted in increasing start-tag order and the system virtual time
+    ``v`` advances to the start tag of each job entering service.  While
+    two tenants stay backlogged, their admitted-work ratio tracks their
+    weight ratio within one job of slack — the property
+    ``tests/test_multi_tenant.py`` checks under hypothesis.
+    """
+
+    def __init__(self) -> None:
+        self._vtime = 0.0
+        self._last_finish: dict[str, float] = {}
+
+    def stamp(self, tenant: str, weight: float,
+              cost: float) -> tuple[float, float]:
+        """Tag one submitted job; returns ``(vstart, vfinish)``."""
+        if weight <= 0.0:
+            raise ValueError("weight must be > 0")
+        vstart = max(self._vtime, self._last_finish.get(tenant, 0.0))
+        vfinish = vstart + max(0.0, float(cost)) / float(weight)
+        self._last_finish[tenant] = vfinish
+        return vstart, vfinish
+
+    def on_admit(self, vstart: float) -> None:
+        """A job with this start tag entered service: advance ``v``."""
+        if vstart > self._vtime:
+            self._vtime = vstart
+
+
+class Tenant:
+    """One registered workload source on a shared ``CoExecutionRuntime``.
+
+    A tenant owns the *domain-specific* half of the loop — its ``Domain``,
+    ``POAS`` + ``PlanCache``, ``DynamicScheduler`` and ``ObservationPump``
+    — while the runtime owns the shared half: one ``StreamCore`` (or the
+    virtual-time engine), one carried-clock timeline, one weighted-fair
+    admission queue.  Per-tenant pumps mean one tenant's measurements
+    re-fit only its own models and invalidate only its own cache.
+    """
+
+    def __init__(self, name: str, domain: Domain, qos: QoS,
+                 runtime: "CoExecutionRuntime", *, cache: bool = True,
+                 feedback: bool = True):
+        self.name = name
+        self.domain = domain
+        self.qos = qos
+        self.runtime = runtime
+        self.poas = POAS(domain, cache=PlanCache() if cache else None)
+        self.dyn: DynamicScheduler | None = getattr(domain, "dyn", None)
+        self.pump: ObservationPump | None = None
+        if feedback and self.dyn is not None:
+            names = [d.name for d in domain.predict()]
+            self.pump = ObservationPump(self.dyn, names,
+                                        time_scale=runtime.time_scale)
+        self.jobs: list[StreamJob] = []
+        self.rejected = 0
+
+    @property
+    def plan_cache(self) -> PlanCache | None:
+        return self.poas.cache
+
+    def submit(self, workload: Workload, *,
+               deadline_s: float | None = None,
+               arrival: float | None = None) -> StreamJob:
+        return self.runtime.submit(workload, tenant=self,
+                                   deadline_s=deadline_s, arrival=arrival)
+
+    def stats(self) -> dict:
+        done = [j for j in self.jobs if j.done and j.error is None]
+        lats = sorted(j.latency for j in done)
+        p = lambda q: lats[max(0, math.ceil(q * len(lats)) - 1)] \
+            if lats else 0.0
+        return {
+            "jobs_done": len(done),
+            "rejected": self.rejected,
+            "p50_latency_s": p(0.50),
+            "p95_latency_s": p(0.95),
+            "p99_latency_s": p(0.99),
+            "observations": self.pump.observations if self.pump else 0,
+            "refit_epoch": self.dyn.epoch if self.dyn else 0,
+            "plan_cache": self.poas.cache.stats() if self.poas.cache else {},
+        }
+
+
+# ---------------------------------------------------------------------------
 # The runtime
 # ---------------------------------------------------------------------------
 
 
 class CoExecutionRuntime:
-    """Persistent plan→execute→observe→re-plan loop over one bound domain.
+    """Persistent plan→execute→observe→re-plan loop over one shared core.
+
+    Single-tenant (the classic shape): construct with a ``domain`` and
+    ``submit`` workloads.  Multi-tenant (DESIGN.md §13): ``register`` any
+    number of tenants — each its own ``Domain``, ``POAS``/``PlanCache``
+    and observation pump, all sharing ONE ``StreamCore`` (or virtual
+    engine), one ``BusTopology`` link namespace and one carried-clock
+    timeline.  Admission is weighted-fair (SFQ over ``QoS.weight`` within
+    strict ``QoS.tier`` priority), deadline-aware (an infeasible SLO is
+    rejected before a ticket is issued), and — with ``preempt`` on — a
+    latency-tier arrival revokes batch-tier jobs' not-yet-started tickets
+    and splices their re-solved frontiers behind it.
 
     Parameters
     ----------
     domain:
-        any registered POAS ``Domain``.  If it carries a ``DynamicScheduler``
-        (``domain.dyn``) and ``feedback`` is on, measured timelines are
-        pumped back into it.
+        any registered POAS ``Domain``; it becomes the ``"default"``
+        tenant (weight 1, batch tier).  If it carries a
+        ``DynamicScheduler`` (``domain.dyn``) and ``feedback`` is on,
+        measured timelines are pumped back into it.  ``None`` starts an
+        empty runtime — ``register`` tenants before submitting.
     executor:
         ``"threads"`` — the real ``StreamCore`` (long-lived per-device
         workers, per-link ticket buses surviving across plans); stage
@@ -420,9 +635,19 @@ class CoExecutionRuntime:
         minimum number of not-yet-started tasks worth re-solving for.
     max_replans_per_job:
         re-plan attempts allowed per job (1 = classic one-shot rescue).
+    admission:
+        ``"fair"`` — SFQ weighted-fair order within strict tier priority
+        (with a single tenant this degenerates to FIFO exactly);
+        ``"fifo"`` — raw submission order (the baseline the benchmark
+        compares against).
+    preempt:
+        priority preemption: a ``TIER_LATENCY`` job's dispatch revokes
+        every running batch-tier DAG job's not-yet-started tickets and
+        splices the re-solved frontier behind it (§11 machinery, reason
+        ``"preempt"``).
     """
 
-    def __init__(self, domain: Domain, *,
+    def __init__(self, domain: Domain | None = None, *,
                  executor: str = "threads",
                  task_factory: TaskFactory | None = None,
                  truth: TruthFn | None = None,
@@ -434,58 +659,146 @@ class CoExecutionRuntime:
                  replan: bool = False,
                  straggler_threshold: float = 1.5,
                  replan_min_frontier: int = 2,
-                 max_replans_per_job: int = 1):
+                 max_replans_per_job: int = 1,
+                 admission: str = "fair",
+                 preempt: bool = False):
         if executor not in ("threads", "virtual"):
             raise ValueError(f"unknown executor {executor!r}")
-        self.domain = domain
-        self.poas = POAS(domain, cache=PlanCache() if cache else None)
-        self.dyn: DynamicScheduler | None = getattr(domain, "dyn", None)
+        if admission not in ("fair", "fifo"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.carry = bool(carry_clocks)
         self.max_inflight = max(1, int(max_inflight))
         self.executor = executor
         self.truth = truth
         self.time_scale = time_scale
-        names = [d.name for d in domain.predict()]
-        self.pump: ObservationPump | None = None
-        if feedback and self.dyn is not None:
-            self.pump = ObservationPump(self.dyn, names,
-                                        time_scale=time_scale)
+        self.feedback = bool(feedback)
+        self.admission_policy = admission
+        self.preempt = bool(preempt)
         self.replan = bool(replan)
         self.straggler_threshold = float(straggler_threshold)
         self.replan_min_frontier = max(1, int(replan_min_frontier))
         self.max_replans_per_job = max(0, int(max_replans_per_job))
         self.jobs: list[StreamJob] = []
+        self.tenants: dict[str, Tenant] = {}
+        self._default_cache = bool(cache)
+        self._default: Tenant | None = None
         self._task_factory = task_factory or model_sleep_tasks(
             truth, time_scale=time_scale)
         self._core = StreamCore() if executor == "threads" else None
-        if self._core is not None and (self.pump is not None or self.replan):
+        if self._core is not None:
             # per-task measurements flow DURING execution, not only at job
-            # completion — the straggler monitor and the observation pump
+            # completion — the straggler monitor and the observation pumps
             # both hang off the core's event hook
             self._core.on_event = self._on_stream_event
         self._plan_clocks = ClockState()
         self._meas_clocks = ClockState()
         self._virtual_events: list = []
+        self._virtual_finishes: dict[int, float] = {}   # uid -> stream end
+        self._vnow = 0.0                   # virtual admission clock
+        self._dispatched = 0
+        self._last_virtual: StreamJob | None = None
+        self._preempt_pending: tuple | None = None
         self._pending_obs: list[StreamJob] = []   # virtual-mode obs lag
-        self._queue: queue.SimpleQueue = queue.SimpleQueue()
+        self._pending: list[StreamJob] = []       # submitted, not admitted
+        self._admission = FairAdmission()
         self._inflight = threading.Semaphore(self.max_inflight)
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._hold = False
         self._closed = False
+        if domain is not None:
+            self.register("default", domain, QoS())
         self._planner = threading.Thread(target=self._plan_loop,
                                          name="poas-planner", daemon=True)
         self._planner.start()
 
-    # -- admission ----------------------------------------------------------
+    # -- tenants ------------------------------------------------------------
 
-    def submit(self, workload: Workload) -> StreamJob:
-        """Admit one workload; returns immediately with its ``StreamJob``."""
-        with self._lock:
+    def register(self, name: str, domain: Domain,
+                 qos: QoS | None = None, *,
+                 cache: bool | None = None) -> Tenant:
+        """Register one tenant (its own POAS/cache/pump) on the shared
+        core.  The first registered tenant is the default ``submit``
+        target and backs the legacy ``.domain/.poas/.dyn/.pump`` aliases."""
+        with self._cv:
             if self._closed:
                 raise RuntimeError("runtime is shut down")
-            job = StreamJob(uid=len(self.jobs), workload=workload)
+            if name in self.tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            ten = Tenant(name, domain, qos or QoS(), self,
+                         cache=self._default_cache if cache is None
+                         else cache,
+                         feedback=self.feedback)
+            self.tenants[name] = ten
+            if self._default is None:
+                self._default = ten
+            return ten
+
+    # single-tenant aliases: the pre-§13 API (and the shipped tests) reach
+    # the loop's domain half through the runtime object itself
+    @property
+    def domain(self) -> Domain | None:
+        return self._default.domain if self._default else None
+
+    @property
+    def poas(self) -> POAS | None:
+        return self._default.poas if self._default else None
+
+    @property
+    def dyn(self) -> DynamicScheduler | None:
+        return self._default.dyn if self._default else None
+
+    @property
+    def pump(self) -> ObservationPump | None:
+        return self._default.pump if self._default else None
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, workload: Workload, *, tenant: Tenant | None = None,
+               deadline_s: float | None = None,
+               arrival: float | None = None) -> StreamJob:
+        """Admit one workload; returns immediately with its ``StreamJob``.
+
+        ``deadline_s`` (relative) overrides the tenant's ``QoS.deadline_s``
+        for this job; the absolute deadline is ``arrival + deadline_s`` on
+        the stream axis.  ``arrival`` places the submit on the virtual
+        stream axis (model seconds) for open-loop experiments — virtual
+        mode only; in threads mode the wall clock is the arrival.
+        """
+        now = self._core.now() / self.time_scale \
+            if self._core is not None else 0.0
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("runtime is shut down")
+            ten = tenant if tenant is not None else self._default
+            if ten is None:
+                raise ValueError("no tenant registered: construct with a "
+                                 "domain or call register() first")
+            job = StreamJob(uid=len(self.jobs), workload=workload,
+                            tenant=ten)
+            job.arrival = float(arrival) if arrival is not None else now
+            dl = deadline_s if deadline_s is not None else ten.qos.deadline_s
+            if dl is not None:
+                job.deadline = job.arrival + float(dl)
+            job.vstart, job.vft = self._admission.stamp(
+                ten.name, ten.qos.weight, float(workload.total_ops()))
             self.jobs.append(job)
-        self._queue.put(job)
+            ten.jobs.append(job)
+            self._pending.append(job)
+            self._cv.notify()
         return job
+
+    def pause_admission(self) -> None:
+        """Hold the admission queue (submissions still accepted): lets an
+        open-loop experiment enqueue its whole arrival schedule before any
+        job is planned, so the fair-admission order is deterministic."""
+        with self._cv:
+            self._hold = True
+
+    def resume_admission(self) -> None:
+        with self._cv:
+            self._hold = False
+            self._cv.notify_all()
 
     def run_stream(self, workloads: Sequence[Workload],
                    timeout: float | None = 120.0) -> list[StreamJob]:
@@ -502,11 +815,12 @@ class CoExecutionRuntime:
             j._done.wait(timeout)
 
     def shutdown(self) -> None:
-        with self._lock:
+        with self._cv:
             if self._closed:
                 return
             self._closed = True
-        self._queue.put(None)
+            self._hold = False
+            self._cv.notify_all()
         self._planner.join(timeout=60)
         if self._core is not None:
             self._core.shutdown()
@@ -521,7 +835,7 @@ class CoExecutionRuntime:
 
     @property
     def plan_cache(self) -> PlanCache | None:
-        return self.poas.cache
+        return self.poas.cache if self.poas is not None else None
 
     def stream_timeline(self) -> Timeline:
         """Every job's measured events on one time axis — the cross-plan
@@ -543,6 +857,7 @@ class CoExecutionRuntime:
         # returns the max for p50 of two samples
         p = lambda q: spans[max(0, math.ceil(q * len(spans)) - 1)] \
             if spans else 0.0
+        cache = self.plan_cache
         return {
             "jobs_done": len(done),
             "total_makespan_s": self.total_makespan(),
@@ -551,7 +866,10 @@ class CoExecutionRuntime:
             "observations": self.pump.observations if self.pump else 0,
             "refit_epoch": self.dyn.epoch if self.dyn else 0,
             "replans": sum(len(j.replans) for j in done),
-            "plan_cache": self.poas.cache.stats() if self.poas.cache else {},
+            "rejected": sum(t.rejected for t in self.tenants.values()),
+            "plan_cache": cache.stats() if cache else {},
+            "tenants": {name: t.stats()
+                        for name, t in self.tenants.items()},
         }
 
     # -- the loop -----------------------------------------------------------
@@ -561,41 +879,131 @@ class CoExecutionRuntime:
             return carry_clocks(timeline, clocks)
         return ClockState(floor=max(timeline.makespan, clocks.floor))
 
+    def _order_key(self, job: StreamJob):
+        if self.admission_policy == "fifo":
+            return (job.uid,)
+        # strict tier priority, then SFQ start tags, uid as the tiebreak
+        return (job.tenant.qos.tier, job.vstart, job.uid)
+
+    def _select_locked(self) -> StreamJob:
+        """Pick the next pending job (holding ``_cv``): min order key among
+        the *eligible* set.  In threads mode every pending job has already
+        arrived (the wall clock is the arrival); in virtual mode the
+        open-loop slot model decides eligibility — an admission slot frees
+        when the (d − max_inflight + 1)-th finish lands, the admission
+        clock is the later of that slot and the previous admission, and
+        only jobs arrived by then compete (an empty eligible set idles the
+        queue forward to the next arrival)."""
+        if self._core is not None:
+            job = min(self._pending, key=self._order_key)
+            job._admit_time = self._core.now() / self.time_scale
+            return job
+        m = self.max_inflight
+        slot = 0.0
+        if self._dispatched >= m:
+            slot = sorted(self._virtual_finishes.values())[
+                self._dispatched - m]
+        t_adm = max(self._vnow, slot)
+        elig = [j for j in self._pending if j.arrival <= t_adm + 1e-12]
+        if not elig:
+            t_adm = max(t_adm, min(j.arrival for j in self._pending))
+            elig = [j for j in self._pending
+                    if j.arrival <= t_adm + 1e-12]
+        job = min(elig, key=self._order_key)
+        self._vnow = t_adm
+        job._admit_time = t_adm
+        return job
+
+    def _next_job(self) -> StreamJob | None:
+        with self._cv:
+            while True:
+                if self._pending and not self._hold:
+                    job = self._select_locked()
+                    self._pending.remove(job)
+                    self._admission.on_admit(job.vstart)
+                    self._dispatched += 1
+                    return job
+                if self._closed and not self._pending:
+                    return None
+                self._cv.wait(timeout=0.1)
+
     def _plan_loop(self) -> None:
         while True:
-            job = self._queue.get()
+            job = self._next_job()
             if job is None:
                 return
             self._inflight.acquire()
             try:
                 self._plan_and_dispatch(job)
+            except AdmissionRejected as exc:
+                job.error = exc
+                job.tenant.rejected += 1
+                with self._lock:
+                    # the admission slot the job reserved frees instantly:
+                    # a rejected job never runs
+                    self._virtual_finishes[job.uid] = job._admit_time
+                job._done.set()
+                self._inflight.release()
             except BaseException as exc:
                 job.error = exc
                 job._done.set()
                 self._inflight.release()
 
     def _plan_and_dispatch(self, job: StreamJob) -> None:
+        ten = job.tenant
         if self.executor == "virtual":
             # flush observations old enough that a real pipeline would have
-            # seen them (jobs completed before this one was planned)
+            # seen them (jobs completed before this one was planned); under
+            # fair admission uids are NOT dispatch order, so the lag counts
+            # completed-but-unfed jobs, not uid distance
             lag = self.max_inflight - 1
-            while self._pending_obs and self._pending_obs[0].uid <= job.uid - 1 - lag:
+            while len(self._pending_obs) > lag:
                 self._feed(self._pending_obs.pop(0))
-        if self.dyn is not None:
-            job.epoch_at_plan = self.dyn.epoch
-        plan = self.poas.plan(job.workload)
+        if ten.dyn is not None:
+            job.epoch_at_plan = ten.dyn.epoch
+        plan = ten.poas.plan(job.workload)
         job.plan = plan
         spec = plan.schedule.spec
         if spec is not None:
-            job.planned = spec.rebase(self._plan_clocks)
-            self._plan_clocks = self._next_clocks(job.planned,
+            base = self._plan_clocks
+            if self._core is None and job.arrival > base.floor:
+                # open-loop virtual stream: nothing of this job can be
+                # planned to run before it arrived (carried clocks above
+                # the floor still overlap)
+                base = base.with_floor(job.arrival)
+            planned = spec.rebase(base)
+            self._check_deadline(job, spec, base, planned)
+            job.planned = planned
+            self._plan_clocks = self._next_clocks(planned,
                                                   self._plan_clocks)
         else:
             job.planned = plan.schedule.timeline
+            if job.deadline is not None \
+                    and job.planned.makespan > job.deadline + 1e-9:
+                raise AdmissionRejected(job.uid, job.planned.makespan,
+                                        job.deadline)
         if self.executor == "virtual":
             self._execute_virtual(job)
         else:
             self._execute_threads(job)
+
+    def _check_deadline(self, job: StreamJob, spec, base: ClockState,
+                        planned: Timeline) -> None:
+        """SLO admission control: reject BEFORE any plan clock advances or
+        any ticket is issued when the engine-priced completion of this
+        plan on the carried clocks exceeds the job's absolute deadline —
+        a rejected job leaves no trace on the shared timeline."""
+        if job.deadline is None:
+            return
+        predicted = planned.makespan
+        if self._core is not None:
+            # the carried plan clocks can lag the wall (planner idle):
+            # floor the prediction at 'now' so it cannot promise the past
+            now = self._core.now() / self.time_scale
+            if now > base.floor:
+                predicted = spec.rebase(base.with_floor(now)).makespan
+        if predicted > job.deadline + 1e-9:
+            raise AdmissionRejected(job.uid, predicted, job.deadline)
 
     # -- virtual-time execution --------------------------------------------
 
@@ -606,6 +1014,13 @@ class CoExecutionRuntime:
         truth_devs = [self.truth(job.uid, d) if self.truth else d
                       for d in spec.devices]
         base = self._meas_clocks
+        if job.arrival > base.floor:
+            # open-loop stream axis: no stage of this job can start before
+            # it arrived; carried clocks above the floor still overlap
+            base = base.with_floor(job.arrival)
+        if self.preempt and job.tenant.qos.tier == TIER_LATENCY:
+            base = self._preempt_virtual_prepare(job, base)
+        job._base_clocks = base
         job.measured = spec.rebase(base, devices=truth_devs)
         if self.replan and isinstance(spec, GraphTimelineSpec):
             replayed = self._replay_replan_virtual(job, spec, truth_devs,
@@ -615,9 +1030,110 @@ class CoExecutionRuntime:
         self._meas_clocks = self._next_clocks(job.measured, self._meas_clocks)
         with self._lock:
             self._virtual_events.extend(job.measured.events)
+            self._virtual_finishes[job.uid] = job.measured.makespan
+        if self._preempt_pending is not None:
+            self._preempt_virtual_commit(job)
+        self._last_virtual = job
         self._pending_obs.append(job)
         job._done.set()
         self._inflight.release()
+
+    def _preempt_virtual_prepare(self, lat: StreamJob,
+                                 base: ClockState) -> ClockState:
+        """Virtual-time priority preemption, half 1 (DESIGN.md §13):
+        retract the last dispatched batch-tier job's not-yet-started
+        frontier — in virtual time a stage's ticket is sound to revoke
+        exactly when it had not started by the preemptor's admission —
+        and hand back the clocks the frozen prefix leaves behind, so the
+        latency job prices as if its tickets went ahead of the revoked
+        ones.  Half 2 (``_preempt_virtual_commit``) re-solves and
+        re-prices the victim's frontier behind the latency job."""
+        victim = self._last_virtual
+        if victim is None or victim.measured is None \
+                or victim.tenant is lat.tenant \
+                or victim.tenant.qos.tier <= lat.tenant.qos.tier \
+                or victim._preempt_attempts >= 1:
+            return base
+        spec = victim.final_spec
+        if not isinstance(spec, GraphTimelineSpec):
+            return base
+        t_p = lat._admit_time
+        if victim.measured.makespan <= t_p + 1e-12:
+            return base   # victim already finished: nothing to revoke
+        first_start = {t.name: min((e.start for e in victim.measured.events
+                                    if e.task == t.name), default=math.inf)
+                       for t in spec.tasks}
+        started, frontier = _ancestor_closed_freeze(
+            spec, [t.name for t in spec.tasks
+                   if first_start[t.name] < t_p - 1e-12])
+        if not frontier:
+            return base
+        victim._preempt_attempts += 1
+        started_set = set(started)
+        frozen_events = [e for e in victim.measured.events
+                         if e.task in started_set]
+        # retract by event IDENTITY: task names collide across jobs that
+        # share a graph template, so name-keyed removal would strip other
+        # jobs' events from the stream
+        retracted = {id(e) for e in victim.measured.events
+                     if e.task not in started_set}
+        with self._lock:
+            self._virtual_events = [e for e in self._virtual_events
+                                    if id(e) not in retracted]
+        clocks = carry_clocks(Timeline(frozen_events),
+                              victim._base_clocks or ClockState())
+        self._meas_clocks = clocks
+        self._preempt_pending = (victim, spec, started, tuple(frontier),
+                                 frozen_events, t_p)
+        if lat.arrival > clocks.floor:
+            clocks = clocks.with_floor(lat.arrival)
+        return clocks
+
+    def _preempt_virtual_commit(self, lat: StreamJob) -> None:
+        """Half 2 of the virtual preemption splice: with the latency job
+        priced, re-solve the victim's revoked frontier (frozen tasks
+        pinned, §11 machinery unchanged) on the clocks the frozen prefix
+        AND the latency job leave behind, re-price it under ground truth,
+        and splice it back into the stream."""
+        victim, spec, started, frontier, frozen_events, t_p = \
+            self._preempt_pending
+        self._preempt_pending = None
+        index = {t.name: i for i, t in enumerate(spec.tasks)}
+        clocks = carry_clocks(
+            lat.measured,
+            carry_clocks(Timeline(frozen_events),
+                         victim._base_clocks or ClockState()))
+        devices = victim.tenant.dyn.snapshot() \
+            if victim.tenant.dyn is not None else list(spec.devices)
+        ext = self._frozen_ext(spec, started, Timeline(frozen_events),
+                               t_p, devices, 1.0)
+        pinned = {index[n]: spec.assign[index[n]] for n in started}
+        res = solve_list_schedule(devices, spec.tasks, spec.edges,
+                                  bus=spec.topology, pinned=pinned,
+                                  ext=ext, clocks=clocks,
+                                  seed_assign=spec.assign,
+                                  max_evals=_REPLAN_MAX_EVALS)
+        new_spec = dataclasses.replace(spec, devices=tuple(devices),
+                                       assign=tuple(res.assign),
+                                       order=tuple(res.order))
+        ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
+        planned_frontier = new_spec.rebase_partial(clocks, ext=ext_names)
+        truth_devs = [self.truth(victim.uid, d) if self.truth else d
+                      for d in new_spec.devices]
+        truth_frontier = new_spec.rebase_partial(clocks, ext=ext_names,
+                                                 devices=truth_devs)
+        victim.replans.append(ReplanRecord(
+            at=t_p, straggler=f"j{lat.uid}", frozen=tuple(started),
+            spliced=frontier, spec=new_spec, planned=planned_frontier,
+            reason="preempt"))
+        victim.measured = Timeline(sorted(
+            frozen_events + list(truth_frontier.events),
+            key=lambda e: (e.start, e.end)))
+        self._meas_clocks = self._next_clocks(truth_frontier,
+                                              self._meas_clocks)
+        with self._lock:
+            self._virtual_events.extend(truth_frontier.events)
+            self._virtual_finishes[victim.uid] = victim.measured.makespan
 
     def _replay_replan_virtual(self, job: StreamJob,
                                spec: GraphTimelineSpec,
@@ -635,15 +1151,26 @@ class CoExecutionRuntime:
         planned_s = {t.name: spec.devices[a].compute(t.ops)
                      for t, a in zip(spec.tasks, spec.assign) if a >= 0}
         comp = {e.task: e for e in measured.events if e.kind == "compute"}
-        stragglers = [n for n, e in comp.items()
-                      if planned_s.get(n, 0.0) > 0.0 and e.duration >
-                      self.straggler_threshold * planned_s[n]]
-        if not stragglers or job._replan_attempts >= self.max_replans_per_job:
+        # trip candidates: compute slack (§11) AND copy slack — a stage
+        # whose measured link transfer blows past its planned occupancy is
+        # the same lock-in evidence, from the other side of the bus
+        planned_stage = spec.stage_seconds()
+        cand: list[tuple[float, str, str]] = []
+        for n, e in comp.items():
+            if planned_s.get(n, 0.0) > 0.0 and e.duration > \
+                    self.straggler_threshold * planned_s[n]:
+                cand.append((e.end, n, "straggler"))
+        for e in measured.events:
+            if e.kind in ("copy_in", "copy_out") and e.task is not None:
+                ps = planned_stage.get(e.task, {}).get(e.kind, 0.0)
+                if ps > 0.0 and e.duration > \
+                        self.straggler_threshold * ps:
+                    cand.append((e.end, e.task, "copy-straggler"))
+        if not cand or job._replan_attempts >= self.max_replans_per_job:
             return None
-        # detection moment: the first straggling compute to finish — the
+        # detection moment: the first straggling stage to finish — the
         # earliest point a measured-vs-planned monitor has the evidence
-        trip = min(stragglers, key=lambda n: comp[n].end)
-        t_r = comp[trip].end
+        t_r, trip, reason = min(cand)
         first_start = {t.name: min((e.start for e in measured.events
                                     if e.task == t.name), default=math.inf)
                        for t in spec.tasks}
@@ -659,25 +1186,30 @@ class CoExecutionRuntime:
             return None
         if hasattr(job.workload, "frontier_subgraph"):
             job.workload.frontier_subgraph(started)
-        # observations the pump would have delivered by t_r
-        if self.pump is not None:
+        # observations the tenant's pump would have delivered by t_r
+        pump = job.tenant.pump if job.tenant is not None else None
+        if pump is not None:
             for name in started:
                 e = comp.get(name)
                 if e is not None and e.end <= t_r + 1e-12 \
                         and name not in job._fed_tasks \
                         and spec.tasks[index[name]].ops > 0.0:
                     job._fed_tasks.add(name)
-                    self.pump.observe(e.device,
-                                      spec.tasks[index[name]].ops,
-                                      e.duration * self.pump.time_scale)
+                    pump.observe(e.device,
+                                 spec.tasks[index[name]].ops,
+                                 e.duration * pump.time_scale)
         started_set = set(started)
         frozen_events = [e for e in measured.events
                          if e.task in started_set]
         # frozen tickets stay ahead of re-issued ones on every link, so the
         # frontier re-prices from the clocks the frozen tail leaves behind
         clocks = carry_clocks(Timeline(frozen_events), base)
-        devices = self.dyn.snapshot() if self.dyn is not None \
+        dyn = job.tenant.dyn if job.tenant is not None else None
+        devices = dyn.snapshot() if dyn is not None \
             else list(spec.devices)
+        if reason == "copy-straggler":
+            devices = _copy_refit(devices, measured.events, planned_stage,
+                                  until=t_r)
         # frozen pricing: same derivation as the threaded monitor (virtual
         # frozen events are complete, so the measured branches always hit)
         ext = self._frozen_ext(spec, started, Timeline(frozen_events),
@@ -699,7 +1231,8 @@ class CoExecutionRuntime:
                                                  devices=truth_devs)
         job.replans.append(ReplanRecord(
             at=t_r, straggler=trip, frozen=tuple(started),
-            spliced=tuple(pend), spec=new_spec, planned=planned_frontier))
+            spliced=tuple(pend), spec=new_spec, planned=planned_frontier,
+            reason=reason))
         return Timeline(sorted(frozen_events + truth_frontier.events,
                                key=lambda e: (e.start, e.end)))
 
@@ -710,21 +1243,106 @@ class CoExecutionRuntime:
         order = job.plan.schedule.timeline.link_ticket_order()
         spec = job.plan.schedule.spec
         if isinstance(spec, GraphTimelineSpec):
-            # what the straggler monitor compares measured computes against
+            # what the straggler monitors compare measured stages against
             job._planned_compute = {
                 t.name: spec.devices[a].compute(t.ops)
                 for t, a in zip(spec.tasks, spec.assign) if a >= 0}
+            job._planned_copy = _planned_copy_map(spec)
         handle = self._core.dispatch(tasks, order, job=f"j{job.uid}")
         job._handle = handle
         handle.add_done_callback(lambda h: self._complete(job, h))
+        if self.preempt and job.tenant.qos.tier == TIER_LATENCY:
+            # AFTER the latency job's dispatch: its tickets sit at the bus
+            # tails now, and each victim's reissue appends BEHIND them
+            self._preempt_threaded(job)
+
+    def _preempt_threaded(self, lat: StreamJob) -> None:
+        """Threads-mode priority preemption: revoke every running
+        batch-tier DAG job's not-yet-started tickets and splice its
+        re-solved frontier behind the just-dispatched latency job (§11
+        ``reissue``/``rebase_partial`` machinery, reason ``"preempt"``).
+        No predicted-gain gate — the point is the ticket ordering, not
+        the victim's makespan."""
+        with self._lock:
+            victims = [j for j in self.jobs
+                       if j is not lat and not j.done
+                       and j._handle is not None
+                       and j.tenant.qos.tier > lat.tenant.qos.tier
+                       and j._preempt_attempts < 1]
+        for victim in victims:
+            self._splice_victim_threaded(victim, lat)
+
+    def _splice_victim_threaded(self, victim: StreamJob,
+                                lat: StreamJob) -> None:
+        with victim._replan_lock:
+            handle = victim._handle
+            core = self._core
+            if handle is None or core is None or handle.done \
+                    or victim._preempt_attempts >= 1:
+                return
+            spec = victim.final_spec
+            if not isinstance(spec, GraphTimelineSpec):
+                return
+            pending = core.pending_tasks(handle.job)
+            started, frontier = _ancestor_closed_freeze(
+                spec, [t.name for t in spec.tasks
+                       if t.name not in pending])
+            pend = set(frontier)
+            if not pend:
+                return
+            victim._preempt_attempts += 1
+            ts = self.time_scale
+            dyn = victim.tenant.dyn if victim.tenant is not None else None
+            devices = dyn.snapshot() if dyn is not None \
+                else list(spec.devices)
+            now_model = core.now() / ts
+            measured = handle.timeline()
+            ext = self._frozen_ext(spec, started, measured, now_model,
+                                   devices, ts)
+            clocks = self._splice_clocks(spec, ext, core.stream_timeline(),
+                                         ts)
+            if lat.planned is not None:
+                # the latency job's planned occupancy: the victim's
+                # frontier must price around the tickets now ahead of it
+                clocks = clocks.merge(carry_clocks(lat.planned))
+            index = {t.name: i for i, t in enumerate(spec.tasks)}
+            pinned = {index[n]: spec.assign[index[n]] for n in started}
+            res = solve_list_schedule(devices, spec.tasks, spec.edges,
+                                      bus=spec.topology, pinned=pinned,
+                                      ext=ext, clocks=clocks,
+                                      seed_assign=spec.assign,
+                                      max_evals=_REPLAN_MAX_EVALS)
+            new_spec = dataclasses.replace(spec, devices=tuple(devices),
+                                           assign=tuple(res.assign),
+                                           order=tuple(res.order))
+            victim._planned_compute = {
+                t.name: devices[a].compute(t.ops)
+                for t, a in zip(new_spec.tasks, new_spec.assign) if a >= 0}
+            victim._planned_copy = _planned_copy_map(new_spec, devices)
+            ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
+            front_tl = new_spec.rebase_partial(clocks, ext=ext_names)
+            sched = dataclasses.replace(victim.plan.schedule,
+                                        spec=new_spec, timeline=front_tl)
+            plan2 = dataclasses.replace(victim.plan, schedule=sched)
+            repl = [t for t in self._task_factory(victim, plan2)
+                    if t.task in pend]
+            spliced = core.reissue(handle, repl,
+                                   front_tl.link_ticket_order())
+            victim.replans.append(ReplanRecord(
+                at=now_model, straggler=f"j{lat.uid}",
+                frozen=tuple(started), spliced=tuple(spliced),
+                spec=new_spec, planned=front_tl, reason="preempt"))
 
     # -- mid-graph re-planning (threads; DESIGN.md §11) ---------------------
 
     def _on_stream_event(self, jid: str, ev) -> None:
         """StreamCore event hook (runs on device worker threads): feed
-        per-task compute measurements into the pump the moment they land,
-        and trip the straggler monitor on planned-vs-measured slack."""
-        if ev.kind != "compute" or ev.task is None:
+        per-task compute measurements into the owning tenant's pump the
+        moment they land, and trip the straggler monitor on
+        planned-vs-measured slack — compute slack (§11) or copy slack
+        (the link-straggler extension: a transfer blowing past its
+        planned link occupancy is the same lock-in evidence)."""
+        if ev.task is None:
             return
         try:
             uid = int(jid.lstrip("j"))
@@ -737,22 +1355,29 @@ class CoExecutionRuntime:
         spec = job.final_spec
         if not isinstance(spec, GraphTimelineSpec):
             return
-        ops = next((float(t.ops) for t in spec.tasks if t.name == ev.task),
-                   0.0)
-        if self.pump is not None and ops > 0.0 and ev.duration > 0.0 \
-                and ev.task not in job._fed_tasks:
-            job._fed_tasks.add(ev.task)
-            self.pump.observe(ev.device, ops, ev.duration)
+        pump = job.tenant.pump if job.tenant is not None else None
+        if ev.kind == "compute":
+            ops = next((float(t.ops) for t in spec.tasks
+                        if t.name == ev.task), 0.0)
+            if pump is not None and ops > 0.0 and ev.duration > 0.0 \
+                    and ev.task not in job._fed_tasks:
+                job._fed_tasks.add(ev.task)
+                pump.observe(ev.device, ops, ev.duration)
         if not self.replan:
             return
-        planned_s = job._planned_compute.get(ev.task, 0.0)
         measured_s = ev.duration / self.time_scale
+        if ev.kind == "compute":
+            planned_s = job._planned_compute.get(ev.task, 0.0)
+            reason = "straggler"
+        else:
+            planned_s = job._planned_copy.get((ev.task, ev.kind), 0.0)
+            reason = "copy-straggler"
         if planned_s <= 0.0 or measured_s <= \
                 self.straggler_threshold * planned_s:
             return
-        if ev.task in job._checked_tasks:
-            return   # this task's slack was already re-solved: lock-in held
-        self._replan_threaded(job, ev)
+        if (ev.task, ev.kind) in job._checked_tasks:
+            return   # this stage's slack was already re-solved: lock-in held
+        self._replan_threaded(job, ev, reason)
 
     def _frozen_ext(self, spec: GraphTimelineSpec, started: Sequence[str],
                     measured: Timeline, now_model: float,
@@ -791,7 +1416,8 @@ class CoExecutionRuntime:
             ext[i] = (c_end, avail)
         return ext
 
-    def _replan_threaded(self, job: StreamJob, ev) -> None:
+    def _replan_threaded(self, job: StreamJob, ev,
+                         reason: str = "straggler") -> None:
         with job._replan_lock:
             if job._replan_attempts >= self.max_replans_per_job:
                 return
@@ -812,10 +1438,18 @@ class CoExecutionRuntime:
                 # corrupt
                 job.workload.frontier_subgraph(started)
             ts = self.time_scale
-            devices = self.dyn.snapshot() if self.dyn is not None \
+            dyn = job.tenant.dyn if job.tenant is not None else None
+            devices = dyn.snapshot() if dyn is not None \
                 else list(spec.devices)
             now_model = core.now() / ts
             measured = handle.timeline()
+            if reason == "copy-straggler":
+                # measured wall durations -> model seconds before comparing
+                scaled = [dataclasses.replace(e, start=e.start / ts,
+                                              end=e.end / ts)
+                          for e in measured.events]
+                devices = _copy_refit(devices, scaled,
+                                      spec.stage_seconds())
             ext = self._frozen_ext(spec, started, measured, now_model,
                                    devices, ts)
             clocks = self._splice_clocks(spec, ext, core.stream_timeline(),
@@ -845,12 +1479,14 @@ class CoExecutionRuntime:
                 job._planned_compute = {
                     t.name: devices[a].compute(t.ops)
                     for t, a in zip(spec.tasks, spec.assign) if a >= 0}
-                job._checked_tasks.add(ev.task)
+                job._planned_copy = _planned_copy_map(spec, devices)
+                job._checked_tasks.add((ev.task, ev.kind))
                 return
             job._replan_attempts += 1
             job._planned_compute = {
                 t.name: devices[a].compute(t.ops)
                 for t, a in zip(new_spec.tasks, new_spec.assign) if a >= 0}
+            job._planned_copy = _planned_copy_map(new_spec, devices)
             ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
             frontier = new_spec.rebase_partial(clocks, ext=ext_names)
             sched = dataclasses.replace(job.plan.schedule, spec=new_spec,
@@ -862,7 +1498,8 @@ class CoExecutionRuntime:
                                    frontier.link_ticket_order())
             job.replans.append(ReplanRecord(
                 at=now_model, straggler=ev.task, frozen=tuple(started),
-                spliced=tuple(spliced), spec=new_spec, planned=frontier))
+                spliced=tuple(spliced), spec=new_spec, planned=frontier,
+                reason=reason))
 
     def _worth_splicing(self, res, devices: Sequence[DeviceProfile],
                         spec: GraphTimelineSpec,
@@ -912,7 +1549,7 @@ class CoExecutionRuntime:
             job.measured = handle.timeline()
             if handle.errors:
                 job.error = handle.errors[0]
-            elif self.pump is not None:
+            else:
                 self._feed(job)
         except BaseException as exc:
             if job.error is None:
@@ -922,7 +1559,8 @@ class CoExecutionRuntime:
             self._inflight.release()
 
     def _feed(self, job: StreamJob) -> None:
-        if self.pump is None or job.measured is None:
+        pump = job.tenant.pump if job.tenant is not None else None
+        if pump is None or job.measured is None:
             return
         spec = job.final_spec
         if spec is None:
@@ -933,9 +1571,9 @@ class CoExecutionRuntime:
             # early feed) are skipped, not observed twice
             rows = [r for r in spec.task_ops()
                     if r[0] not in job._fed_tasks]
-            self.pump.feed_tasks(job.measured, rows)
+            pump.feed_tasks(job.measured, rows)
         else:
-            self.pump.feed(job.measured, spec.ops_by_device())
+            pump.feed(job.measured, spec.ops_by_device())
 
 
 # ---------------------------------------------------------------------------

@@ -207,6 +207,7 @@ class PoasDispatcher:
             self.pump = ObservationPump(self.domain.dyn,
                                         [g.name for g in self.groups])
         self.last_plan: POASPlan | None = None
+        self.tenant = None             # set by attach() (DESIGN.md §13)
         self._pending: list[Request] = []
         self._lock = threading.Lock()
 
@@ -248,6 +249,35 @@ class PoasDispatcher:
         tokens = float(sum(len(r.tokens) + r.max_new_tokens
                            for r in requests))
         self.pump.observe(self.groups[group_index].name, tokens, seconds)
+
+    # -- shared-runtime tenancy (DESIGN.md §13) -----------------------------
+
+    def attach(self, runtime, name: str = "serving", qos=None):
+        """Register this dispatcher's domain as a tenant on a shared
+        multi-tenant ``CoExecutionRuntime``: batches submitted through
+        ``submit_batch`` interleave with other tenants' jobs on the shared
+        carried-clock timeline under weighted-fair, SLO-aware admission
+        (latency-tier serving traffic can preempt batch tenants).  The
+        tenant's pump *replaces* the dispatcher's private one, so
+        completions reported through either path re-fit the same models."""
+        self.tenant = runtime.register(name, self.domain, qos)
+        if self.tenant.pump is not None:
+            self.pump = self.tenant.pump
+        return self.tenant
+
+    def submit_batch(self, requests: Sequence[Request], *,
+                     deadline_s: float | None = None,
+                     arrival: float | None = None):
+        """Submit one request batch as a ``StreamJob`` on the attached
+        runtime (``attach`` first).  The job's plan carries the same
+        ``DispatchPlan`` the ``split`` facade would produce — recover the
+        buckets with ``job.plan.adapted.assign(requests)``; an infeasible
+        ``deadline_s`` raises at the job, never dispatching a ticket."""
+        if self.tenant is None:
+            raise RuntimeError("attach() this dispatcher to a runtime "
+                               "before submit_batch()")
+        return self.tenant.submit(RequestBatch(requests=tuple(requests)),
+                                  deadline_s=deadline_s, arrival=arrival)
 
     # -- prediction ---------------------------------------------------------
 

@@ -365,3 +365,44 @@ def test_runtime_round_trip_with_per_task_observations_refits():
     share_pre = jobs[1].plan.optimize.shares()[xpu]
     share_post = jobs[-1].plan.optimize.shares()[xpu]
     assert share_post < share_pre
+
+
+# ------------------------------------------------------- solver budget ------
+
+def test_descend_assign_never_exceeds_max_evals():
+    """The reassignment descent's eval budget binds *mid-sweep*: with a
+    budget far below one full sweep (len(tasks) * (d-1) candidate moves)
+    the reported eval count must still stay within it."""
+    from repro.core.bus import BusTopology
+    from repro.core.optimize import _descend_assign, _rank_order
+    from repro.core import GraphSimContext
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    devices = _devices()
+    tasks, edges = g.task_specs(), g.edge_indices()
+    topo = BusTopology.from_spec("serialized", devices)
+    order = _rank_order(devices, tasks, edges)
+    sweep = len(tasks) * (len(devices) - 1)
+    for budget in (2, 5, max(3, sweep - 1)):
+        assert budget < sweep      # the cap can only hold inside a sweep
+        ctx = GraphSimContext(devices, tasks, edges, topo, order)
+        _, evals, span = _descend_assign(ctx, [0] * len(tasks),
+                                         max_evals=budget)
+        assert 1 <= evals <= budget
+        assert span > 0.0
+
+
+def test_solve_list_schedule_partial_iterations_track_budget():
+    """A partial re-solve (the splice path) splits ``max_evals`` across its
+    three seeds — total iterations stay within the documented accounting:
+    EFT placement (free x devices) plus per-seed capped descents."""
+    g = transformer_block(d_model=1024, seq=1024, groups=4)
+    devices = _devices()
+    tasks, edges = g.task_specs(), g.edge_indices()
+    n = len(tasks)
+    seed = [0] * n
+    for budget in (60, 200):
+        res = solve_list_schedule(devices, tasks, edges, bus="serialized",
+                                  seed_assign=seed, max_evals=budget)
+        per_seed = max(40, budget // 3)
+        assert res.iterations <= n * len(devices) + 3 * per_seed
+        assert res.makespan > 0.0

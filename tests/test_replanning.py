@@ -263,6 +263,48 @@ def test_threaded_replan_splices_live_job_with_clean_invariants():
     assert spans[False] / spans[True] >= 1.10
 
 
+def test_virtual_copy_straggler_trips_link_monitor():
+    """Satellite of DESIGN.md SS11/SS13: a device whose host<->device copies
+    blow past their planned link occupancy trips the *copy*-slack monitor
+    (reason="copy-straggler") and splices the frontier, with the same
+    invariants as the compute path."""
+    truth = truth_from_profiles(
+        _devices(),
+        copy_slowdown=lambda uid, name: 10.0 if name == "xpu" else 1.0)
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual", truth=truth,
+                            feedback=True, max_inflight=1, replan=True,
+                            straggler_threshold=1.3) as rt:
+        jobs = rt.run_stream([_block()])
+    j = jobs[0]
+    assert j.error is None
+    assert j.replans, "copy throttle never tripped the monitor"
+    assert j.replans[0].reason == "copy-straggler"
+    assert j.replans[0].spliced
+    assert verify_stream_invariants(jobs) == []
+    assert verify_graph_dependencies(j.final_spec, j.measured) == []
+
+
+def test_threaded_copy_straggler_trips_link_monitor():
+    """Threaded half: the StreamCore's measured copy events are checked
+    against the planned per-stage link occupancy, and a slow link splices
+    through the same reissue machinery as a slow device."""
+    truth = truth_from_profiles(
+        _devices(),
+        copy_slowdown=lambda uid, name: 10.0 if name == "xpu" else 1.0)
+    dom = TaskGraphDomain(_devices(), bus="serialized", dynamic=True)
+    with CoExecutionRuntime(dom, executor="threads", truth=truth,
+                            feedback=True, max_inflight=1, time_scale=10.0,
+                            replan=True, straggler_threshold=1.3) as rt:
+        jobs = rt.run_stream([_block()], timeout=120)
+        j = jobs[0]
+        assert j.error is None
+        assert verify_stream_invariants(jobs) == []
+        assert verify_graph_dependencies(j.final_spec, j.measured) == []
+        assert j.replans
+        assert any(r.reason == "copy-straggler" for r in j.replans)
+
+
 def test_threaded_replan_keeps_stream_correct_across_following_jobs():
     """A splice must not wedge the persistent buses: jobs dispatched after
     the re-planned one still run, and the whole stream passes the
