@@ -2,6 +2,7 @@
 and the two simulated testbeds (Tables 1-2)."""
 from __future__ import annotations
 
+import statistics
 import time
 
 from repro.core import HGemms, paper_mach1, paper_mach2
@@ -32,6 +33,34 @@ def timed(fn, *args, repeats: int = 3, **kw):
         dt = time.perf_counter() - t0
         best = dt if best is None else min(best, dt)
     return out, best
+
+
+def timed_quantiles(fn, *args, repeats: int = 5, warmup: int = 1, **kw):
+    """Latency distribution of ``fn``: (last result, median s, p95 s,
+    best s).
+
+    Single-shot wall clocks at the millisecond scale are noisy (allocator
+    state, frequency scaling, noisy VM neighbors); re-plan latencies are
+    therefore reported as median/p95 over ``repeats`` >= 5 runs after
+    ``warmup`` discarded calls (which also charge one-time costs like
+    context-cache fills to warmup, not to the quantiles).  ``best`` is
+    the regression-detection number: ambient contention only ever ADDS
+    time, so the floor over repeats isolates the code's own cost — one
+    quiet repeat is enough to prove a change didn't slow the path down."""
+    repeats = max(5, repeats)
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    med = statistics.median(samples)
+    # nearest-rank p95 (no interpolation past observed samples)
+    p95 = samples[min(len(samples) - 1, int(0.95 * len(samples)))]
+    return out, med, p95, samples[0]
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -34,6 +34,17 @@ baseline value with a relative tolerance (``BENCH_REGRESSION_TOL``, default
 on shared CI runners — and are skipped; everything else in these reports is
 a deterministic model quantity, so a drift beyond tolerance is a real
 performance regression and fails the job.
+
+One wall-clock exception IS guarded (DESIGN.md §14): the 3040-node partial
+re-solve latency (``partial_resolve/stack3040/resolve_best_ms`` in
+``BENCH_scheduler.json``), the quantity the straggler-rescue path blocks
+on.  The gated leaf is the BEST of >= 9 repeats, not the median: shared
+runners suffer ambient noisy-neighbor contention that only ever adds
+time, so one quiet repeat is enough to prove the code path didn't
+regress, while medians swing 1.3x run-to-run.  It gets its own tolerance
+(``BENCH_LATENCY_TOL``, default 15%) so CI fails when a change regresses
+re-plan latency, alongside the makespan/speedup guards.  The median
+(``resolve_ms``) stays in the report as the honest latency story.
 """
 from __future__ import annotations
 
@@ -46,6 +57,12 @@ BENCH_FILES = ("BENCH_timeline.json", "BENCH_streaming.json",
                "BENCH_graph.json", "BENCH_scheduler.json",
                "BENCH_runtime.json")
 TOLERANCE = float(os.environ.get("BENCH_REGRESSION_TOL", "0.10"))
+LATENCY_TOL = float(os.environ.get("BENCH_LATENCY_TOL", "0.15"))
+# wall-clock latency leaves that ARE gated (path suffix -> direction):
+# the ~3000-node refined re-solve best-of-repeats, DESIGN.md §14's
+# headline path (best, not median — noise only adds time, so the floor
+# is the stable regression signal on a shared runner)
+LATENCY_GATED = ("/partial_resolve/stack3040/resolve_best_ms",)
 
 
 def _metrics(obj, path: str = "") -> dict[str, tuple[str, float]]:
@@ -66,6 +83,8 @@ def _metrics(obj, path: str = "") -> dict[str, tuple[str, float]]:
                     out[sub] = ("higher", float(v))
                 elif k.endswith("makespan_s"):
                     out[sub] = ("lower", float(v))
+                elif sub.endswith(LATENCY_GATED):
+                    out[sub] = ("latency", float(v))
     elif isinstance(obj, list):
         for i, v in enumerate(obj):
             if isinstance(v, (dict, list)):
@@ -111,6 +130,12 @@ def check_regressions(baselines: dict[str, dict[str, tuple[str, float]]],
                 problems.append(
                     f"{fname}{path}: makespan {nval:.4g} rose above "
                     f"baseline {bval:.4g} (tolerance {tolerance:.0%})")
+            elif direction == "latency" and \
+                    nval > bval * (1.0 + LATENCY_TOL):
+                problems.append(
+                    f"{fname}{path}: re-plan latency {nval:.4g}ms rose "
+                    f"above baseline {bval:.4g}ms "
+                    f"(tolerance {LATENCY_TOL:.0%})")
     return problems
 
 

@@ -24,12 +24,28 @@ which machine's timeline the plan describes):
 * **partial_resolve** — the PR-5 re-planning path: 90% of the order
   pinned with ``ext`` carrying the already-committed finish times, the
   remainder re-solved with ``seed_assign`` + descent refinement
-  (``max_evals=80``).  Reports latency per size (``resolve_ms`` with
-  refinement, ``resolve_eft_ms`` for the EFT-only re-solve) and asserts
-  the reported finish times equal a from-scratch ``graph_finish_times``
-  replay.  Sub-10ms at ~3000 nodes is the design target (DESIGN.md §12),
-  reported but not gated: descent refinement sweeps every free (task,
-  device) move at least once, which dominates at that size.
+  (``max_evals=80``) through a per-size ``SolveContextCache`` (the
+  runtime holds one per job, so the warm path is what a rescue pays).
+  Latencies are median/p95/best over >= 5 repeats after a cache-filling
+  warmup (``resolve_ms``/``resolve_p95_ms``/``resolve_best_ms`` with
+  refinement, ``resolve_eft_*`` EFT-only; ``*_best_ms`` — the floor over
+  repeats — is what CI's latency guard gates, since ambient runner
+  contention only ever adds time); the reported
+  finish times must equal a from-scratch ``graph_finish_times`` replay.
+  Quality contract (DESIGN.md §14, gated here): the refined makespan
+  never exceeds the EFT seed's, and pruned descent stays within 2% of
+  the full-sweep (``prune=False``) descent.  Latency gates: refined
+  best-of-repeats <= 30 ms at ~3000 nodes, >= 8x the pre-§14 223 ms
+  baseline — which ``common.timed`` measured as a min-of-repeats too,
+  so floor-vs-floor is the like-for-like comparison (the median/p95
+  columns are the distribution story this PR adds).  The
+  EFT-only 10 ms target is reported, not gated: at this size the exact
+  placement must re-simulate ~60-position suffixes for the ~90 winning
+  host-stage flips the sweep adopts (DESIGN.md §12's staging semantics),
+  which floors the honest bit-identical path near ~16 ms.
+
+``--profile`` dumps a cProfile of one warm refined re-solve at the
+largest size (``bench_resolve.prof``) for future hot-path work.
 
 Wall-clock keys (``plans_per_s``, ``*_ms``, ``incremental_vs_scratch_x``)
 are named to stay outside the regression guard's speedup/makespan
@@ -46,9 +62,9 @@ import time
 from repro.core import (BusTopology, GraphSimContext, GraphSimState,
                         graph_finish_times, solve_list_schedule,
                         transformer_block, transformer_stack)
-from repro.core.optimize import _EPS
+from repro.core.optimize import _EPS, SolveContextCache
 
-from .common import MACHINES, emit, timed
+from .common import MACHINES, emit, timed, timed_quantiles
 
 OUT_PATH = os.environ.get("BENCH_SCHEDULER_PATH", "BENCH_scheduler.json")
 MACHINE = "mach2"
@@ -65,6 +81,16 @@ SCRATCH_STRIDE = 100     # sampled baseline positions beyond that
 PIN_FRACTION = 0.9
 RESOLVE_EVALS = 80
 THROUGHPUT_FLOOR = 10.0  # required incremental-vs-scratch x at >=300 nodes
+RESOLVE_MS_GATE_3000 = 30.0     # refined re-solve, best-of-repeats (§14)
+RESOLVE_NOISE_X = 1.5           # hard-fail margin over the gate: a gross-
+                                # regression backstop only — the precise
+                                # 15% guard is run.py's latency gate, and a
+                                # noisy shared runner (transient 1.3x wall-
+                                # clock swings observed) must not fail the
+                                # whole section on a clean change
+RESOLVE_BASELINE_MS_3000 = 223.48  # pre-§14 refined latency (PR-7 snapshot)
+RESOLVE_EFT_TARGET_MS = 10.0    # EFT-only aspiration — reported, not gated
+PRUNE_QUALITY_X = 1.02          # pruned descent within 2% of full sweep
 
 
 def _build(spec: dict):
@@ -169,7 +195,7 @@ def throughput_rows() -> dict:
     return out
 
 
-def resolve_rows() -> dict:
+def resolve_rows(profile: bool = False) -> dict:
     devs = MACHINES[MACHINE]()
     topo = BusTopology.from_spec("serialized", devs)
     out = {}
@@ -184,35 +210,67 @@ def resolve_rows() -> dict:
         pinned = {i: full.assign[i] for i in frozen}
         ext = {i: (full.task_finish[i], full.task_finish[i])
                for i in frozen}
-        reps = 3 if n <= SCRATCH_FULL_MAX else 1
-        res, t_ref = timed(solve_list_schedule, devs, tasks, edges,
-                           repeats=reps, bus=topo, refine=True,
-                           pinned=pinned, ext=ext,
-                           seed_assign=list(full.assign),
-                           max_evals=RESOLVE_EVALS)
+        # one cache per graph, exactly how the runtime holds it per job —
+        # the warmup call fills it, so the quantiles price a warm rescue
+        cache = SolveContextCache()
+        reps = 9
+
+        def refined(prune=True):
+            return solve_list_schedule(devs, tasks, edges, bus=topo,
+                                       refine=True, pinned=pinned, ext=ext,
+                                       seed_assign=list(full.assign),
+                                       max_evals=RESOLVE_EVALS,
+                                       prune=prune, cache=cache)
+
+        res, ref_med, ref_p95, ref_best = timed_quantiles(refined,
+                                                          repeats=reps)
         replay = graph_finish_times(devs, tasks, edges, res.assign,
                                     topology=topo, order=res.order, ext=ext)
         exact = replay == res.task_finish
         assert exact, f"{name}: partial re-solve finish times diverged"
-        _, t_eft = timed(solve_list_schedule, devs, tasks, edges,
-                         repeats=reps, bus=topo, refine=False,
-                         pinned=pinned, ext=ext)
+        _, eft_med, eft_p95, eft_best = timed_quantiles(
+            solve_list_schedule, devs, tasks, edges, repeats=reps, bus=topo,
+            refine=False, pinned=pinned, ext=ext, cache=cache)
+        # quality contract (§14): refined never worse than its EFT seed,
+        # pruned descent within PRUNE_QUALITY_X of the full-sweep descent
+        assert res.makespan <= full.makespan + _EPS, \
+            f"{name}: refined makespan exceeds the EFT seed's"
+        unpruned = refined(prune=False)
+        quality_x = (res.makespan / unpruned.makespan
+                     if unpruned.makespan > 0 else 1.0)
+        assert quality_x <= PRUNE_QUALITY_X, \
+            f"{name}: pruned descent {quality_x:.4f}x off the full sweep"
+        if profile and name == SIZES[-1][0]:
+            import cProfile
+            import pstats
+            prof = cProfile.Profile()
+            prof.runcall(refined)
+            prof.dump_stats("bench_resolve.prof")
+            pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
+            emit("scheduler_resolve_profile", 0.0, "bench_resolve.prof")
         out[name] = {
             "n_tasks": n,
             "free_tasks": n - cut,
-            "resolve_ms": t_ref * 1e3,
-            "resolve_eft_ms": t_eft * 1e3,
+            "resolve_ms": ref_med * 1e3,
+            "resolve_p95_ms": ref_p95 * 1e3,
+            "resolve_best_ms": ref_best * 1e3,
+            "resolve_eft_ms": eft_med * 1e3,
+            "resolve_eft_p95_ms": eft_p95 * 1e3,
+            "resolve_eft_best_ms": eft_best * 1e3,
+            "resolve_repeats": reps,
             "refine_evals": res.iterations,
             "partial_makespan_s": res.makespan,
+            "pruned_vs_unpruned_x": quality_x,
+            "refined_le_seed": bool(res.makespan <= full.makespan + _EPS),
             "resolve_exact": exact,
         }
     return out
 
 
-def main() -> None:
+def main(profile: bool = False) -> None:
     report: dict = {"machine": MACHINE}
     thr, t_t = timed(throughput_rows, repeats=1)
-    rsv, t_r = timed(resolve_rows, repeats=1)
+    rsv, t_r = timed(resolve_rows, profile, repeats=1)
     report["throughput"] = thr
     report["partial_resolve"] = rsv
     for name, row in thr.items():
@@ -222,12 +280,13 @@ def main() -> None:
              f"{' (est)' if row['scratch_estimated'] else ''}")
     for name, row in rsv.items():
         emit(f"scheduler_resolve_{name}", row["resolve_ms"] * 1e3,
-             f"free={row['free_tasks']} "
+             f"free={row['free_tasks']} p95={row['resolve_p95_ms']:.1f}ms "
              f"eft_only={row['resolve_eft_ms']:.1f}ms")
     emit("scheduler_sections", (t_t + t_r) * 1e6, "throughput+resolve")
 
     big = [r for r in thr.values()
            if r["n_tasks"] >= 300 and not r["scratch_estimated"]]
+    big_resolve = rsv[SIZES[-1][0]]
     report["acceptance"] = {
         "throughput_floor_x": THROUGHPUT_FLOOR,
         "incremental_10x_at_300_nodes": all(
@@ -236,13 +295,40 @@ def main() -> None:
                                     for r in thr.values()),
         "partial_resolve_exact": all(r["resolve_exact"]
                                      for r in rsv.values()),
-        "resolve_ms_target_3000_nodes": 10.0,   # reported, not gated
+        # §14 latency gate: refined re-solve at ~3000 nodes, gated on the
+        # repeat floor — the PR-7 223ms baseline was common.timed's min-
+        # of-repeats, and ambient runner contention only ever adds time
+        "resolve_ms_gate_3000_nodes": RESOLVE_MS_GATE_3000,
+        "resolve_under_gate_3000_nodes":
+            big_resolve["resolve_best_ms"] <= RESOLVE_MS_GATE_3000,
+        # wall-clock-derived: named outside the guard's speedup/makespan
+        # key patterns (run.py gates resolve_best_ms, with latency tol)
+        "resolve_x_vs_pr7_baseline":
+            RESOLVE_BASELINE_MS_3000 / big_resolve["resolve_best_ms"],
+        "refined_never_worse_than_seed": all(r["refined_le_seed"]
+                                             for r in rsv.values()),
+        "pruned_within_2pct_of_full_sweep": all(
+            r["pruned_vs_unpruned_x"] <= PRUNE_QUALITY_X
+            for r in rsv.values()),
+        # EFT-only aspiration — reported honestly, not gated: the exact
+        # staging-flip replays floor this path near ~16 ms at 3040 nodes
+        "resolve_eft_target_ms_3000_nodes": RESOLVE_EFT_TARGET_MS,
+        "resolve_eft_ms_3000_nodes": big_resolve["resolve_eft_ms"],
+        "resolve_eft_best_ms_3000_nodes":
+            big_resolve["resolve_eft_best_ms"],
     }
     assert big, "no fully-measured size at >=300 nodes"
     assert report["acceptance"]["incremental_10x_at_300_nodes"], \
         "incremental EFT under 10x the from-scratch baseline at >=300 nodes"
     assert report["acceptance"]["engine_bit_identical"]
     assert report["acceptance"]["partial_resolve_exact"]
+    # the hard failure allows the CI gate's wall-clock noise margin; the
+    # committed snapshot's boolean above is the <= 30 ms acceptance record
+    assert big_resolve["resolve_best_ms"] <= RESOLVE_MS_GATE_3000 * \
+        RESOLVE_NOISE_X, \
+        (f"refined re-solve floor {big_resolve['resolve_best_ms']:.1f}ms "
+         f"over the {RESOLVE_MS_GATE_3000:.0f}ms gate "
+         f"(+{RESOLVE_NOISE_X:.2f}x noise margin) at 3040 nodes")
 
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
@@ -250,4 +336,9 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--profile", action="store_true",
+                    help="dump a cProfile of one warm refined re-solve at "
+                         "the largest size to bench_resolve.prof")
+    main(profile=ap.parse_args().profile)

@@ -677,7 +677,16 @@ class GraphSimContext:
                  "ext", "n", "parents", "children", "pos_of", "has_copy",
                  "in_link", "in_lname", "out_link", "out_lname", "dev_name",
                  "sim_positions", "link_names", "in_lid", "out_lid",
-                 "has_out", "ext_in", "par_in", "stage_out", "comp")
+                 "has_out", "has_in", "ext_in", "par_in", "stage_out",
+                 "comp", "_np", "_ext_seed")
+
+    # every per-graph table that depends only on (devices, tasks, edges,
+    # topo, order) — shared, not copied, by ``rebind``
+    _SHARED_SLOTS = ("devices", "tasks", "edges", "topo", "order", "n",
+                     "parents", "children", "pos_of", "has_copy", "in_link",
+                     "in_lname", "out_link", "out_lname", "dev_name",
+                     "link_names", "in_lid", "out_lid", "has_out", "has_in",
+                     "ext_in", "par_in", "stage_out", "comp", "_np")
 
     def __init__(self, devices: Sequence[DeviceProfile],
                  tasks: Sequence[TaskSpec],
@@ -723,6 +732,7 @@ class GraphSimContext:
         self.in_lid = [link_id[nm] for nm in self.in_lname]
         self.out_lid = [link_id[nm] for nm in self.out_lname]
         self.has_out = [t.out_bytes > 0.0 for t in self.tasks]
+        self.has_in = [t.in_bytes > 0.0 for t in self.tasks]
         # per-(device, task) duration tables — every copy/compute duration
         # the simulation loop can ever need, priced once via the same
         # formulas as _bytes_in_time/_bytes_out_time/DeviceProfile.compute
@@ -757,6 +767,78 @@ class GraphSimContext:
                 self.comp.append((tm.a * ops + tm.b).tolist())
             else:
                 self.comp.append([tm(t.ops) for t in self.tasks])
+        self._np = None   # lazy numpy views of the duration tables
+        self._ext_seed = None   # lazy (compute_end, avail, finish) template
+
+    def ext_seed(self) -> tuple[list[float], list[float], list[float]]:
+        """Per-task ``(compute_end, avail, finish)`` start lists with the
+        ``ext`` entries already written — built once per context (or
+        ``rebind``) and list-copied by every ``GraphSimState``, so repeated
+        state construction against the same frozen set stops re-walking the
+        ext dict (a partial re-solve freezes ~90% of a large order, and a
+        refined solve builds several states per call)."""
+        if self._ext_seed is None:
+            n = self.n
+            ce_l = [0.0] * n
+            av_l = [0.0] * n
+            fin_l = [0.0] * n
+            for i, (c_end, av) in self.ext.items():
+                ce_l[i] = c_end
+                av_l[i] = av
+                fin_l[i] = c_end   # fixed past/in-flight work; never inf
+            self._ext_seed = (ce_l, av_l, fin_l)
+        return self._ext_seed
+
+    def rebind(self, clocks: ClockState,
+               ext: Mapping[int, tuple[float, float]] | None
+               ) -> "GraphSimContext":
+        """A context sharing every per-graph table with ``self``, re-keyed
+        onto fresh carried clocks and a fresh ``ext`` map — the only inputs
+        a repeated re-solve of the *same* graph changes between calls.
+        O(n): only ``sim_positions`` is rebuilt; the duration tables,
+        adjacency, and link ids (the expensive part of ``__init__``) are
+        shared.  The straggler-rescue path re-plans the same DAG every few
+        milliseconds; paying full context construction per re-plan was a
+        measurable slice of the re-solve latency (DESIGN.md §14)."""
+        c = GraphSimContext.__new__(GraphSimContext)
+        for slot in GraphSimContext._SHARED_SLOTS:
+            setattr(c, slot, getattr(self, slot))
+        c.clocks = clocks
+        c.ext = dict(ext) if ext else {}
+        eset = c.ext
+        c.sim_positions = [p for p, i in enumerate(c.order) if i not in eset]
+        c._ext_seed = None
+        return c
+
+    def np_tables(self) -> "_NpTables":
+        """The per-(device, task) duration tables as (d, n) numpy arrays
+        (built once, cached; shared across ``rebind``s) — the vectorized
+        candidate-pricing lanes index these instead of the python lists."""
+        if self._np is None:
+            self._np = _NpTables(self)
+        return self._np
+
+
+class _NpTables:
+    """Numpy views of a ``GraphSimContext``'s duration tables, for the
+    vectorized pricing paths (``optimize._peek_batch``, ``GraphSimBatch``).
+    Built from the same python lists the scalar loop reads, so elementwise
+    IEEE float64 operations over them match the scalar engine exactly."""
+
+    __slots__ = ("has_copy", "ext_in", "par_in", "stage_out", "comp",
+                 "in_lid", "out_lid", "idx", "same_link")
+
+    def __init__(self, ctx: "GraphSimContext"):
+        self.has_copy = np.array(ctx.has_copy, dtype=bool)
+        self.ext_in = np.array(ctx.ext_in)
+        self.par_in = np.array(ctx.par_in)
+        self.stage_out = np.array(ctx.stage_out)
+        self.comp = np.array(ctx.comp)
+        self.in_lid = np.array(ctx.in_lid, dtype=np.intp)
+        self.out_lid = np.array(ctx.out_lid, dtype=np.intp)
+        self.idx = np.arange(len(ctx.devices))
+        self.same_link = np.array([a == b for a, b in
+                                   zip(ctx.in_lid, ctx.out_lid)])
 
 
 class GraphSimState:
@@ -783,7 +865,7 @@ class GraphSimState:
     """
 
     __slots__ = ("ctx", "pos", "lclock", "dclock", "finish", "compute_end",
-                 "avail", "assign", "placed")
+                 "avail", "reclaim", "assign", "placed")
 
     def __init__(self, ctx: GraphSimContext, assign: Sequence[int],
                  placed: Sequence[int] | None = None):
@@ -805,13 +887,17 @@ class GraphSimState:
         # carried-over start value from ctx.clocks
         self.lclock: list[float | None] = [None] * len(ctx.link_names)
         self.dclock: list[float | None] = [None] * len(ctx.devices)
-        self.finish = [0.0] * ctx.n
-        self.compute_end = [0.0] * ctx.n
-        self.avail = [0.0] * ctx.n
-        for i, (c_end, av) in ctx.ext.items():
-            self.compute_end[i] = c_end
-            self.avail[i] = av
-            self.finish[i] = c_end   # fixed past/in-flight work; never inf
+        ce_l, av_l, fin_l = ctx.ext_seed()
+        self.finish = list(fin_l)
+        self.compute_end = list(ce_l)
+        self.avail = list(av_l)
+        # link time a task's host-stage holds, INCLUDING the idle gap its
+        # compute-end barrier inserts: stage end minus the link clock as
+        # the stage was scheduled.  This is the exact span a vanish flip
+        # returns to the link, so ``stage_flip_pos`` callers can LOWER-
+        # bound a flipped candidate's price by ``stale peek - reclaim``
+        # (DESIGN.md §14).  0.0 for tasks that do not stage.
+        self.reclaim = [0.0] * ctx.n
 
     def clone(self) -> "GraphSimState":
         st = GraphSimState.__new__(GraphSimState)
@@ -822,8 +908,28 @@ class GraphSimState:
         st.finish = list(self.finish)
         st.compute_end = list(self.compute_end)
         st.avail = list(self.avail)
+        st.reclaim = list(self.reclaim)
         st.assign = list(self.assign)
         st.placed = bytearray(self.placed)
+        return st
+
+    def snap_clone(self) -> "GraphSimState":
+        """A clone for snapshot chains: clocks and per-task times are
+        copied, but ``assign``/``placed`` *alias* the live lists — every
+        chain snapshot is rebound onto its caller's live assign/placed
+        before use (``_SnapChain.state_at``), so copying them per snapshot
+        was pure overhead on the hot re-solve path."""
+        st = GraphSimState.__new__(GraphSimState)
+        st.ctx = self.ctx
+        st.pos = self.pos
+        st.lclock = list(self.lclock)
+        st.dclock = list(self.dclock)
+        st.finish = list(self.finish)
+        st.compute_end = list(self.compute_end)
+        st.avail = list(self.avail)
+        st.reclaim = list(self.reclaim)
+        st.assign = self.assign
+        st.placed = self.placed
         return st
 
     # -- clock reads (None = carried-over start) -----------------------------
@@ -842,22 +948,136 @@ class GraphSimState:
 
     # -- the one simulation loop ---------------------------------------------
 
-    def advance(self, stop: int, events: list[BusEvent] | None = None
-                ) -> None:
+    def advance(self, stop: int, events: list[BusEvent] | None = None,
+                bound: float | None = None) -> bool:
         """Simulate order positions ``[pos, stop)`` (ext/unassigned tasks
-        skipped), appending ``BusEvent``s when ``events`` is a list."""
+        skipped), appending ``BusEvent``s when ``events`` is a list.
+
+        ``bound`` is a branch-and-bound early exit (DESIGN.md §14): every
+        simulated task's finish time lower-bounds the final makespan (link
+        and device clocks never rewind), so the moment a finish exceeds
+        ``bound`` the caller's candidate cannot beat its incumbent and the
+        walk aborts, returning False with the state mid-advance (throwaway
+        states only).  A completed advance (returns True) is byte-identical
+        to an unbounded one — the bound only *skips* work, it never changes
+        a simulated value."""
         if stop <= self.pos:
-            return
+            return True
         ctx = self.ctx
         sp = ctx.sim_positions
         lo = bisect.bisect_left(sp, self.pos)
         hi = bisect.bisect_left(sp, stop)
         assign = self.assign
+        if events is not None:
+            # event-recording path: the readable reference loop
+            finish = self.finish
+            for idx in range(lo, hi):
+                i = ctx.order[sp[idx]]
+                if assign[i] >= 0:
+                    self._sim_task(i, events)
+                    if bound is not None and finish[i] > bound:
+                        self.pos = sp[idx] + 1
+                        return False
+            self.pos = stop
+            return True
+        # hot path: ``_sim_task`` inlined with every per-step attribute
+        # lookup hoisted out of the loop — the adoption re-simulations of
+        # a large partial re-solve run this body thousands of times per
+        # solve, where method dispatch and repeated ``self.``/``ctx.``
+        # loads were a measured ~30% of the re-plan latency (DESIGN.md
+        # §14).  Any semantic change here must be mirrored in _sim_task
+        # (the property suite pins the two paths to identical results).
+        order = ctx.order
+        placed = self.placed
+        lclock, dclock = self.lclock, self.dclock
+        finish, compute_end = self.finish, self.compute_end
+        avail, reclaim = self.avail, self.reclaim
+        parents, children = ctx.parents, ctx.children
+        has_out, has_in, has_copy = ctx.has_out, ctx.has_in, ctx.has_copy
+        in_lid_t, out_lid_t = ctx.in_lid, ctx.out_lid
+        ext_in_t, par_in_t = ctx.ext_in, ctx.par_in
+        stage_out_t, comp_t = ctx.stage_out, ctx.comp
+        link_names, dev_name = ctx.link_names, ctx.dev_name
+        clocks = ctx.clocks
+        inf = math.inf
         for idx in range(lo, hi):
-            i = ctx.order[sp[idx]]
-            if assign[i] >= 0:
-                self._sim_task(i, events)
+            i = order[sp[idx]]
+            j = assign[i]
+            if j < 0:
+                continue
+            lid = in_lid_t[j]
+            hc = has_copy[j]
+            ready = 0.0
+            if hc and has_in[i]:
+                s = lclock[lid]
+                if s is None:
+                    s = clocks.link(link_names[lid])
+                s += ext_in_t[j][i]
+                lclock[lid] = s
+                ready = s
+            pin = par_in_t[j]
+            for u in parents[i]:
+                if not placed[u]:
+                    continue
+                if assign[u] == j:
+                    r = compute_end[u]             # same device: free
+                elif not hc or not has_out[u]:
+                    r = avail[u]                   # host reads staged copy
+                else:
+                    s = lclock[lid]
+                    if s is None:
+                        s = clocks.link(link_names[lid])
+                    au = avail[u]
+                    if au > s:
+                        s = au
+                    s += pin[u]
+                    lclock[lid] = s
+                    r = s
+                if r > ready:
+                    ready = r
+            s = dclock[j]
+            if s is None:
+                s = clocks.device(dev_name[j])
+            if ready > s:
+                s = ready
+            ce = s + comp_t[j][i]
+            dclock[j] = ce
+            compute_end[i] = ce
+            fin_i = ce
+            av_i = ce
+            rec_i = 0.0
+            if has_out[i] and hc:
+                # inlined _would_need_out: pseudo-sink or cross consumer
+                seen = False
+                need = False
+                for c in children[i]:
+                    if not placed[c]:
+                        continue
+                    seen = True
+                    if assign[c] != j:
+                        need = True
+                        break
+                if need or not seen:
+                    ol = out_lid_t[j]
+                    s = lclock[ol]
+                    if s is None:
+                        s = clocks.link(link_names[ol])
+                    prev = s
+                    if ce > s:
+                        s = ce
+                    nd = s + stage_out_t[j][i]
+                    lclock[ol] = nd
+                    av_i = nd
+                    fin_i = nd
+                    rec_i = 0.0 if prev == inf else nd - prev
+            finish[i] = fin_i
+            avail[i] = av_i
+            reclaim[i] = rec_i
+            if bound is not None and fin_i > bound:
+                self.pos = sp[idx] + 1
+                return False
         self.pos = stop
+        return True
 
     def _sim_task(self, i: int, events: list[BusEvent] | None = None
                   ) -> None:
@@ -928,6 +1148,7 @@ class GraphSimState:
         compute_end[i] = ce
         self.finish[i] = ce
         avail[i] = ce   # no-copy device: output is host-resident now
+        self.reclaim[i] = 0.0
 
         # staged / returned output
         if self._would_need_out(i, j):
@@ -936,6 +1157,7 @@ class GraphSimState:
             s = lclock[out_lid]
             if s is None:
                 s = ctx.clocks.link(ctx.link_names[out_lid])
+            prev = s
             if ce > s:
                 s = ce
             if events is not None:
@@ -944,6 +1166,10 @@ class GraphSimState:
             lclock[out_lid] = s + dur
             avail[i] = s + dur
             self.finish[i] = s + dur
+            # inf - inf guard: an already-infinite link clock stays
+            # infinite whether or not this stage exists, so the vanish
+            # reclaims nothing
+            self.reclaim[i] = 0.0 if prev == math.inf else s + dur - prev
 
     # -- stage decision ------------------------------------------------------
 
@@ -1017,6 +1243,128 @@ class GraphSimState:
             return s + ctx.stage_out[j][i]
         return ce
 
+    def price_lanes(self, i: int, nd: int
+                    ) -> tuple[list[float], list[int | None], list[float]]:
+        """Fused ``peek_finish`` + ``_stage_flip_info`` over every device
+        lane in ONE walk of ``i``'s neighborhood: returns per-device
+        ``(peeks, flip_positions, vanish_slacks)``.
+
+        The scalar EFT placer calls this once per task instead of ``d``
+        peeks plus ``d`` flip scans — the dominant redundancy was each
+        per-lane flip scan re-walking every producer's children, when one
+        walk yields the producer's (seen, cross) pair from which every
+        lane's flip direction follows in O(1): a producer staging for a
+        pseudo-sink (``not seen and not cross``) vanishes only on its own
+        lane, one with co-located consumers (``seen and not cross``)
+        appears on every other lane, and a cross-feeding producer never
+        flips.  Per-lane float operations replicate ``peek_finish``'s
+        sequence exactly, so selection stays bit-identical (pinned by the
+        property suite)."""
+        ctx = self.ctx
+        placed, assign = self.placed, self.assign
+        pos_of, ext = ctx.pos_of, ctx.ext
+        children = ctx.children
+        has_out, has_copy = ctx.has_out, ctx.has_copy
+        in_lid, out_lid = ctx.in_lid, ctx.out_lid
+        compute_end, avail, reclaim = self.compute_end, self.avail, \
+            self.reclaim
+        mypos = self.pos
+        flip: list[int | None] = [None] * nd
+        slack = [0.0] * nd
+        lc: list[float | None] = [None] * nd
+        ready = [0.0] * nd
+        if ctx.has_in[i]:
+            ext_in = ctx.ext_in
+            for j in range(nd):
+                if has_copy[j]:
+                    s = self.link_clock_id(in_lid[j])
+                    s += ext_in[j][i]
+                    lc[j] = s
+                    ready[j] = s
+        par_in = ctx.par_in
+        for u in ctx.parents[i]:
+            if not placed[u]:
+                continue
+            au = assign[u]
+            hou = has_out[u]
+            # flip scan: one children walk per qualifying producer
+            if au >= 0 and hou and has_copy[au] and u not in ext:
+                pu = pos_of.get(u)
+                if pu is not None and pu < mypos:
+                    seen = False
+                    cross = False
+                    for c in children[u]:
+                        if placed[c]:
+                            seen = True
+                            if assign[c] != au:
+                                cross = True
+                                break
+                    if not cross:
+                        if not seen:
+                            # staged as pseudo-sink: vanishes iff i lands
+                            # co-located (lane au only)
+                            slack[au] += reclaim[u]
+                            f = flip[au]
+                            if f is None or pu < f:
+                                flip[au] = pu
+                        else:
+                            # co-located consumers: appears on every
+                            # cross lane
+                            for j in range(nd):
+                                if j != au:
+                                    f = flip[j]
+                                    if f is None or pu < f:
+                                        flip[j] = pu
+            # peek contribution, lane by lane (scalar op order per lane)
+            ceu = compute_end[u]
+            avu = avail[u]
+            for j in range(nd):
+                if au == j:
+                    r = ceu
+                elif not has_copy[j] or not hou:
+                    r = avu
+                else:
+                    s = lc[j]
+                    if s is None:
+                        s = self.link_clock_id(in_lid[j])
+                    if avu > s:
+                        s = avu
+                    s += par_in[j][u]
+                    lc[j] = s
+                    r = s
+                if r > ready[j]:
+                    ready[j] = r
+        hoi = has_out[i]
+        kid_devs = ([assign[c] for c in children[i] if placed[c]]
+                    if hoi else None)
+        comp, stage_out = ctx.comp, ctx.stage_out
+        peeks = [0.0] * nd
+        for j in range(nd):
+            s = self.dev_clock_id(j)
+            if ready[j] > s:
+                s = ready[j]
+            ce = s + comp[j][i]
+            if hoi and has_copy[j]:
+                if kid_devs:
+                    need = False
+                    for d in kid_devs:
+                        if d != j:
+                            need = True
+                            break
+                else:
+                    need = True   # pseudo-sink: output returns to host
+                if need:
+                    ol = out_lid[j]
+                    if ol == in_lid[j] and lc[j] is not None:
+                        s2 = lc[j]
+                    else:
+                        s2 = self.link_clock_id(ol)
+                    if ce > s2:
+                        s2 = ce
+                    ce = s2 + stage_out[j][i]
+            peeks[j] = ce
+        return peeks, flip, slack
+
     def stage_flip_pos(self, i: int, j: int) -> int | None:
         """Earliest already-simulated order position whose host-stage
         decision would change if ``assign[i]`` became ``j`` and ``i``
@@ -1026,9 +1374,35 @@ class GraphSimState:
         co-located (vanish), and one whose placed consumers were all
         co-located starts staging when ``i`` lands cross-device (appear).
         """
+        return self._stage_flip_info(i, j)[0]
+
+    def _stage_flip_info(self, i: int, j: int
+                         ) -> tuple[int | None, bool, bool, float]:
+        """``(earliest flip pos | None, appear_only, vanish_only, slack)``.
+
+        Direction of each flip, for the interval bounds the EFT placer
+        uses on its stale peeks (DESIGN.md §14): an *appear* flip (a
+        producer starts staging) only inserts extra link occupancy, so
+        the stale peek is a LOWER bound on the exact price; a *vanish*
+        flip (a pseudo-sink producer stops staging) only removes
+        occupancy, so the stale peek is an UPPER bound.  ``slack`` is the
+        total link time the vanishes return: each flipped producer's
+        ``reclaim`` span — its stage duration PLUS the idle gap the
+        compute-end barrier inserted on the link (the barrier matters:
+        deleting the stage lets queued transfers restart from the
+        pre-stage link clock, not merely ``stage_out`` earlier).  The
+        engine's clocks are (max, +) compositions of their inputs, so
+        returning ``s`` seconds of link time pulls any downstream event
+        earlier by at most ``s`` — ``stale peek - slack`` therefore
+        LOWER-bounds the exact price for ANY flip mix (appears only push
+        it up).  The flags are vacuously True (slack 0.0) on None.
+        """
         ctx = self.ctx
         placed, assign = self.placed, self.assign
         best: int | None = None
+        appear_only = True
+        vanish_only = True
+        slack = 0.0
         for u in ctx.parents[i]:
             if not placed[u] or assign[u] < 0 or u in ctx.ext:
                 continue
@@ -1056,9 +1430,298 @@ class GraphSimState:
                 if ac is not None and ac != a:
                     new = True
                     break
-            if old != new and (best is None or pu < best):
-                best = pu
-        return best
+            if old != new:
+                if old:
+                    appear_only = False   # True -> False: a vanish
+                    slack += self.reclaim[u]
+                else:
+                    vanish_only = False   # False -> True: an appear
+                if best is None or pu < best:
+                    best = pu
+        return best, appear_only, vanish_only, slack
+
+
+class GraphSimBatch:
+    """Price every device move of ONE task in parallel numpy lanes.
+
+    Lane ``l`` simulates the same suffix as a scalar
+    ``clone(); assign[mv] = cand[l]; advance(stop)`` walk, but all lanes
+    share one clone of the base state: clocks, ``finish``/``avail``/
+    ``compute_end`` become ``(L, ·)`` arrays and each engine step applies
+    the exact ``_sim_task`` formula elementwise per lane.  Per-lane IEEE
+    float64 elementwise ops match the scalar engine op for op, so a lane's
+    values are byte-identical to the scalar walk's (pinned by the
+    hypothesis suite).
+
+    Only ``mv``'s device varies across lanes, which keeps the per-task
+    control flow almost scalar: lanes diverge arithmetically only at
+    ``mv`` itself, at tasks reading ``mv`` as a parent, and at producers
+    whose host-stage decision depends on ``mv``'s device (the flip case —
+    which is why the caller rewinds the base state to the flip floor
+    before batching).
+
+    ``run(stop, bound)`` applies the same branch-and-bound rule as
+    ``GraphSimState.advance``: a lane whose simulated finish exceeds
+    ``bound`` is dead (its final makespan reads +inf); the walk aborts
+    once every lane is dead.  Crossover caveat: per-step numpy dispatch
+    costs ~3-5x a scalar step, so batching only wins with enough lanes —
+    ``optimize._BATCH_MIN_LANES`` gates it (DESIGN.md §14).
+    """
+
+    __slots__ = ("ctx", "mv", "cand", "pos", "lanes", "lclock", "dclock",
+                 "finish", "compute_end", "avail", "reclaim", "assign",
+                 "placed", "alive", "_li", "_npt")
+
+    def __init__(self, base: GraphSimState, mv: int,
+                 cand: Sequence[int]):
+        ctx = self.ctx = base.ctx
+        self.mv = mv
+        self.cand = np.array(cand, dtype=np.intp)
+        L = self.lanes = len(cand)
+        self.pos = base.pos
+        self._li = np.arange(L)
+        self._npt = ctx.np_tables()
+        # resolve carried-over (None) clocks eagerly: link_clock_id is a
+        # pure read of ctx.clocks, so this matches the scalar lazy resolve
+        self.lclock = np.tile(
+            [base.link_clock_id(k) for k in range(len(ctx.link_names))],
+            (L, 1))
+        self.dclock = np.tile(
+            [base.dev_clock_id(j) for j in range(len(ctx.devices))],
+            (L, 1))
+        self.finish = np.tile(base.finish, (L, 1))
+        self.compute_end = np.tile(base.compute_end, (L, 1))
+        self.avail = np.tile(base.avail, (L, 1))
+        self.reclaim = np.tile(base.reclaim, (L, 1))
+        self.assign = base.assign          # scalar; mv's entry is ignored
+        self.placed = base.placed
+        self.alive = np.ones(L, dtype=bool)
+
+    def run(self, stop: int, bound: float | None = None) -> bool:
+        """Advance every lane to ``stop``; False once all lanes are dead
+        (their finishes exceeded ``bound``) — surviving lanes are exact."""
+        if stop <= self.pos:
+            return True
+        ctx = self.ctx
+        sp = ctx.sim_positions
+        lo = bisect.bisect_left(sp, self.pos)
+        hi = bisect.bisect_left(sp, stop)
+        assign = self.assign
+        alive = self.alive
+        for idx in range(lo, hi):
+            i = ctx.order[sp[idx]]
+            if assign[i] >= 0:
+                self._sim(i)
+                if bound is not None:
+                    alive &= self.finish[:, i] <= bound
+                    if not alive.any():
+                        self.pos = sp[idx] + 1
+                        return False
+        self.pos = stop
+        return True
+
+    def makespans(self) -> np.ndarray:
+        """Per-lane makespan over simulated tasks; +inf for dead lanes."""
+        ms = self.finish.max(axis=1)
+        return np.where(self.alive, ms, np.inf)
+
+    def extract(self, l: int) -> GraphSimState:
+        """Lane ``l`` as a scalar ``GraphSimState`` (clocks resolved) —
+        adopted as the new head state when the lane's move is accepted."""
+        st = GraphSimState.__new__(GraphSimState)
+        st.ctx = self.ctx
+        st.pos = self.pos
+        st.lclock = self.lclock[l].tolist()
+        st.dclock = self.dclock[l].tolist()
+        st.finish = self.finish[l].tolist()
+        st.compute_end = self.compute_end[l].tolist()
+        st.avail = self.avail[l].tolist()
+        st.reclaim = self.reclaim[l].tolist()
+        st.assign = list(self.assign)
+        st.assign[self.mv] = int(self.cand[l])
+        st.placed = bytearray(self.placed)
+        return st
+
+    # -- engine step (exact per-lane _sim_task) ------------------------------
+
+    def _sim(self, i: int) -> None:
+        if i == self.mv:
+            self._sim_moved(i)
+        else:
+            self._sim_scalar_dev(i)
+
+    def _sim_scalar_dev(self, i: int) -> None:
+        """Task on its committed device ``j`` in every lane; values may
+        still lane-vary through clocks/parent avail perturbed by ``mv``."""
+        ctx = self.ctx
+        mv = self.mv
+        j = self.assign[i]
+        t = ctx.tasks[i]
+        in_lid = ctx.in_lid[j]
+        has_copy = ctx.has_copy[j]
+        placed = self.placed
+        lclock, compute_end, avail = self.lclock, self.compute_end, self.avail
+
+        ready = None
+        if has_copy and t.in_bytes > 0.0:
+            nd = lclock[:, in_lid] + ctx.ext_in[j][i]
+            lclock[:, in_lid] = nd
+            ready = nd
+        par_in = ctx.par_in[j]
+        for u in ctx.parents[i]:
+            if not placed[u]:
+                continue
+            if u == mv:
+                if not has_copy or not ctx.has_out[u]:
+                    same = self.cand == j
+                    r = np.where(same, compute_end[:, u], avail[:, u])
+                else:
+                    same = self.cand == j
+                    s = np.maximum(lclock[:, in_lid], avail[:, u])
+                    nd = s + par_in[u]
+                    lclock[:, in_lid] = np.where(same, lclock[:, in_lid],
+                                                 nd)
+                    r = np.where(same, compute_end[:, u], nd)
+            elif self.assign[u] == j:
+                r = compute_end[:, u]
+            elif not has_copy or not ctx.has_out[u]:
+                r = avail[:, u]
+            else:
+                s = np.maximum(lclock[:, in_lid], avail[:, u])
+                nd = s + par_in[u]
+                lclock[:, in_lid] = nd
+                r = nd
+            ready = r if ready is None else np.maximum(ready, r)
+
+        s = self.dclock[:, j]
+        if ready is not None:
+            s = np.maximum(s, ready)
+        ce = s + ctx.comp[j][i]
+        self.dclock[:, j] = ce
+        compute_end[:, i] = ce
+        self.finish[:, i] = ce
+        avail[:, i] = ce
+        self.reclaim[:, i] = 0.0
+
+        need = self._need_out_mask(i, j)
+        if need is not None:
+            out_lid = ctx.out_lid[j]
+            prev = lclock[:, out_lid]
+            s = np.maximum(prev, ce)
+            nd = s + ctx.stage_out[j][i]
+            # before the in-place lclock write; inf-prev lanes reclaim 0.0
+            # (mirrors the scalar inf - inf guard)
+            fin = prev != np.inf
+            rec = np.subtract(nd, prev, out=np.zeros_like(nd), where=fin)
+            if need is True:
+                lclock[:, out_lid] = nd
+                avail[:, i] = nd
+                self.finish[:, i] = nd
+                self.reclaim[:, i] = rec
+            else:
+                lclock[:, out_lid] = np.where(need, nd, prev)
+                avail[:, i] = np.where(need, nd, ce)
+                self.finish[:, i] = np.where(need, nd, ce)
+                self.reclaim[:, i] = np.where(need, rec, 0.0)
+
+    def _need_out_mask(self, i: int, j: int) -> "bool | np.ndarray | None":
+        """``_would_need_out(i, j)`` per lane: None = False everywhere,
+        True = every lane, else an (L,) mask (``mv`` is the only consumer
+        whose device lane-varies; it always counts as placed)."""
+        ctx = self.ctx
+        if not ctx.has_out[i] or not ctx.has_copy[j]:
+            return None
+        placed, assign = self.placed, self.assign
+        mv = self.mv
+        seen = False
+        has_mv = False
+        for c in ctx.children[i]:
+            if c == mv:
+                has_mv = True
+                continue
+            if not placed[c]:
+                continue
+            seen = True
+            if assign[c] != j:
+                return True
+        if has_mv:
+            # mv counts as a placed consumer, so "no consumers" is off
+            # the table; need(l) = mv cross-device in lane l
+            mask = self.cand != j
+            if mask.all():
+                return True
+            if not mask.any():
+                return None
+            return mask
+        return None if seen else True
+
+    def _sim_moved(self, i: int) -> None:
+        """The moved task itself: device ``cand[l]`` in lane ``l`` — the
+        fancy-indexed mirror of ``_sim_task`` (the ``_peek_batch`` idiom,
+        committed instead of peeked)."""
+        ctx = self.ctx
+        npt = self._npt
+        t = ctx.tasks[i]
+        jv = self.cand
+        li = self._li
+        in_l = npt.in_lid[jv]
+        hc = npt.has_copy[jv]
+        placed = self.placed
+        lclock, compute_end, avail = self.lclock, self.compute_end, self.avail
+
+        ready = None
+        if t.in_bytes > 0.0 and hc.any():
+            s = lclock[li, in_l]
+            nd = s + npt.ext_in[jv, i]
+            lclock[li, in_l] = np.where(hc, nd, s)
+            ready = np.where(hc, nd, 0.0)
+        for u in ctx.parents[i]:
+            if not placed[u]:
+                continue
+            same = jv == self.assign[u]
+            if not ctx.has_out[u]:
+                r = np.where(same, compute_end[:, u], avail[:, u])
+            else:
+                docopy = ~same & hc
+                s = np.maximum(lclock[li, in_l], avail[:, u])
+                nd = s + npt.par_in[jv, u]
+                lclock[li, in_l] = np.where(docopy, nd, lclock[li, in_l])
+                r = np.where(same, compute_end[:, u],
+                             np.where(docopy, nd, avail[:, u]))
+            ready = r if ready is None else np.maximum(ready, r)
+
+        s = self.dclock[li, jv]
+        if ready is not None:
+            s = np.maximum(s, ready)
+        ce = s + npt.comp[jv, i]
+        self.dclock[li, jv] = ce
+        compute_end[:, i] = ce
+        self.finish[:, i] = ce
+        avail[:, i] = ce
+        self.reclaim[:, i] = 0.0
+
+        # stage decision per lane: mv's children have scalar devices
+        if ctx.has_out[i]:
+            cross = None
+            seen = False
+            for c in ctx.children[i]:
+                if not placed[c]:
+                    continue
+                seen = True
+                cc = jv != self.assign[c]
+                cross = cc if cross is None else (cross | cc)
+            need = hc if not seen else (hc & cross)
+            if need.any():
+                out_l = npt.out_lid[jv]
+                prev = lclock[li, out_l]   # fancy index: a copy, not a view
+                s = np.maximum(prev, ce)
+                nd = s + npt.stage_out[jv, i]
+                rec = np.subtract(nd, prev, out=np.zeros_like(nd),
+                                  where=prev != np.inf)
+                lclock[li, out_l] = np.where(need, nd, prev)
+                avail[:, i] = np.where(need, nd, ce)
+                self.finish[:, i] = np.where(need, nd, ce)
+                self.reclaim[:, i] = np.where(need, rec, 0.0)
 
 
 def _simulate_graph(devices: Sequence[DeviceProfile],

@@ -38,8 +38,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .bus import (BusTopology, ClockState, GraphSimContext, GraphSimState,
-                  TaskSpec, ZERO_CLOCKS, _graph_topo_order,
+from .bus import (BusTopology, ClockState, GraphSimBatch, GraphSimContext,
+                  GraphSimState, TaskSpec, ZERO_CLOCKS, _graph_topo_order,
                   engine_finish_times, graph_finish_times)
 from .device_model import DeviceProfile, LinearTimeModel, priority_order
 
@@ -458,68 +458,96 @@ def _rank_order(devices: Sequence[DeviceProfile], tasks: Sequence[TaskSpec],
     return sorted(range(len(tasks)), key=lambda i: (-rank[i], topo_pos[i]))
 
 
-# -- incremental EFT machinery (DESIGN.md §12) ------------------------------
+# -- incremental EFT machinery (DESIGN.md §12, §14) -------------------------
 
 _SNAP_EVERY = 24   # order positions between simulation-state snapshots
+_PEEK_BATCH_MIN_DEVS = 6    # below this, d scalar peeks beat the numpy lanes
+_BATCH_MIN_LANES = 4        # GraphSimBatch lanes needed to beat scalar walks
+_PRUNE_MIN_MOVABLE = 48     # full descent sweeps below this many movables
+_PRUNE_TAIL = 24            # latest-finishing movables kept by the pruner
 
 
-def _advance_snapped(st: GraphSimState, snaps: dict[int, GraphSimState],
-                     stop: int, min_key: int = 0) -> None:
-    """Advance ``st`` to order position ``stop``, dropping an O(n) clone
-    into ``snaps`` at every ``_SNAP_EVERY`` boundary crossed (boundaries
-    below ``min_key`` snapshots are skipped — descent never rewinds below
-    the earliest movable task or movable-task parent)."""
-    while st.pos < stop:
-        nxt = (st.pos // _SNAP_EVERY + 1) * _SNAP_EVERY
-        if nxt > stop:
-            nxt = stop
-        st.advance(nxt)
-        if nxt % _SNAP_EVERY == 0 and nxt // _SNAP_EVERY >= min_key:
-            snaps[nxt // _SNAP_EVERY] = st.clone()
+class _SnapChain:
+    """Block-keyed snapshot chain under a moving head state (DESIGN.md §14).
+
+    Snapshots are ``GraphSimState`` clones keyed by ``pos // _SNAP_EVERY``,
+    recorded as the head advances (``advance_snapped``) and invalidated
+    above a flip/move position when an accepted candidate rewrites history
+    (``invalidate_above``).  ``state_at(m)`` resumes from the nearest
+    recorded block at or below ``m``: *adoption* — a priced re-simulation
+    becoming the new head instead of being re-simulated a second time —
+    leaves gaps in the chain, and the engine's ``sim_positions`` bisect
+    makes re-advancing across a gap cost only the simulated (non-frozen)
+    tasks inside it, so tolerating gaps is cheaper than eagerly re-recording
+    clones (an O(n) copy each) ever was."""
+
+    __slots__ = ("snaps", "min_key")
+
+    def __init__(self, min_key: int = 0):
+        self.snaps: dict[int, GraphSimState] = {}
+        self.min_key = min_key
+
+    def advance_snapped(self, st: GraphSimState, stop: int) -> None:
+        """Advance the head to ``stop``, recording a clone at every
+        ``_SNAP_EVERY`` boundary crossed at or above ``min_key`` (descent
+        never rewinds below the earliest movable task or movable-task
+        parent, so snapshots under that floor would be dead weight)."""
+        while st.pos < stop:
+            nxt = (st.pos // _SNAP_EVERY + 1) * _SNAP_EVERY
+            if nxt > stop:
+                nxt = stop
+            st.advance(nxt)
+            if nxt % _SNAP_EVERY == 0 and nxt // _SNAP_EVERY >= self.min_key:
+                self.snaps[nxt // _SNAP_EVERY] = st.snap_clone()
+
+    def state_at(self, m: int, assign: list[int],
+                 placed: bytearray) -> GraphSimState:
+        """A throwaway state resumed from the nearest block <= ``m``,
+        carrying the caller's *live* assign/placed lists (the snapshots'
+        own copies are stale by design).
+
+        When adoption has left a gap below ``m``, the catch-up advance
+        repairs the chain by recording the missing boundary clones.
+        Every caller's candidate world diverges from the committed
+        trajectory only at or after ``m * _SNAP_EVERY`` (``m`` is the
+        block of the earliest flip/move position), so the blocks crossed
+        here simulate identically in both worlds and are valid committed
+        snapshots — without this, one far-back adoption wipes the chain
+        and every later resume replays the same gap again."""
+        k = m if m in self.snaps else max(k for k in self.snaps if k <= m)
+        tmp = self.snaps[k].snap_clone()
+        tmp.assign = assign
+        tmp.placed = placed
+        while k < m:
+            k += 1
+            tmp.advance(k * _SNAP_EVERY)
+            self.snaps[k] = tmp.snap_clone()
+        return tmp
+
+    def invalidate_above(self, m: int) -> None:
+        """Drop blocks simulated past the rewrite point — block ``b`` is
+        still valid iff its boundary ``b * _SNAP_EVERY`` <= the rewrite
+        position, i.e. ``b <= m``."""
+        for k in [k for k in self.snaps if k > m]:
+            del self.snaps[k]
 
 
-def _rewind(st: GraphSimState, snaps: dict[int, GraphSimState],
-            m: int) -> GraphSimState:
-    """Resume from snapshot ``m`` carrying ``st``'s *live* assign/placed
-    (the snapshot's own copies are stale), invalidating later snapshots."""
-    for k in [k for k in snaps if k > m]:
-        del snaps[k]
-    base = snaps[m].clone()
-    base.assign = st.assign
-    base.placed = st.placed
-    return base
-
-
-def _commit_place(st: GraphSimState, snaps: dict[int, GraphSimState],
-                  pos: int, i: int, j: int,
-                  fp: int | None) -> GraphSimState:
-    """Commit task ``i`` on device ``j`` at order position ``pos``: extend
-    the checkpoint through ``pos`` when no earlier host-stage decision
-    flips (``fp`` is None), else re-simulate from the nearest snapshot at
-    or before the flip position."""
-    st.assign[i] = j
-    st.placed[i] = 1
-    if fp is not None:
-        st = _rewind(st, snaps, fp // _SNAP_EVERY)
-    _advance_snapped(st, snaps, pos + 1)
-    return st
-
-
-def _price_flip(st: GraphSimState, snaps: dict[int, GraphSimState],
-                pos: int, i: int, j: int, fp: int) -> float:
-    """Price candidate ``(i, j)`` whose placement flips an earlier
+def _resim_place(st: GraphSimState, chain: _SnapChain, pos: int, i: int,
+                 j: int, fp: int) -> tuple[GraphSimState, float]:
+    """Exact price of candidate ``(i, j)`` whose placement flips an earlier
     producer's host-stage decision: re-simulate positions [snapshot, pos]
-    on a throwaway clone under the tentative assignment."""
-    tmp = snaps[fp // _SNAP_EVERY].clone()
+    on a throwaway state under the tentative assignment.  Returns the
+    re-simulated state too — if the lane wins, the caller *adopts* it as
+    the new head instead of re-simulating the same span a second time
+    (the old rewind-and-re-advance commit)."""
     old_a, old_p = st.assign[i], st.placed[i]
     st.assign[i] = j
     st.placed[i] = 1
-    tmp.assign = st.assign
-    tmp.placed = st.placed
+    tmp = chain.state_at(fp // _SNAP_EVERY, st.assign, st.placed)
     tmp.advance(pos + 1)
     st.assign[i] = old_a
     st.placed[i] = old_p
-    return tmp.finish[i]
+    return tmp, tmp.finish[i]
 
 
 class _DeviceArrays:
@@ -531,14 +559,14 @@ class _DeviceArrays:
                  "same_link")
 
     def __init__(self, ctx: GraphSimContext):
-        self.idx = np.arange(len(ctx.devices))
-        self.has_copy = np.array(ctx.has_copy, dtype=bool)
-        self.ext_in = np.array(ctx.ext_in)
-        self.par_in = np.array(ctx.par_in)
-        self.stage_out = np.array(ctx.stage_out)
-        self.comp = np.array(ctx.comp)
-        self.same_link = np.array([a == b for a, b in
-                                   zip(ctx.in_lid, ctx.out_lid)])
+        npt = ctx.np_tables()   # built once per graph, shared by rebind
+        self.idx = npt.idx
+        self.has_copy = npt.has_copy
+        self.ext_in = npt.ext_in
+        self.par_in = npt.par_in
+        self.stage_out = npt.stage_out
+        self.comp = npt.comp
+        self.same_link = npt.same_link
 
 
 def _peek_batch(st: GraphSimState, da: _DeviceArrays, i: int) -> np.ndarray:
@@ -606,43 +634,138 @@ def _eft_place(ctx: GraphSimContext, assign: Sequence[int],
     a snapshot re-simulation only when the candidate flips an earlier
     producer's host-stage decision (DESIGN.md §12).  Selection and
     resulting assignments are bit-identical to pricing every prefix from
-    scratch; returns the final state and the candidate-evaluation count.
+    scratch; returns the final state, the candidate-evaluation count, and
+    the snapshot chain (which a following descent can adopt via ``init``
+    instead of rebuilding state and snapshots from scratch).
     """
     ndev = len(ctx.devices)
     st = GraphSimState(ctx, assign, placed=list(ctx.ext))
-    snaps = {0: st.clone()}
-    da = _DeviceArrays(ctx)
+    sp = ctx.sim_positions
+    chain = _SnapChain(sp[0] // _SNAP_EVERY if sp else 0)
+    if chain.min_key == 0:
+        chain.snaps[0] = st.snap_clone()
+    use_batch = ndev >= _PEEK_BATCH_MIN_DEVS
+    da = _DeviceArrays(ctx) if use_batch else None
     evals = 0
-    for pos, i in enumerate(ctx.order):
+
+    def commit(stc: GraphSimState, pos: int, i: int, j: int,
+               fp: int | None) -> GraphSimState:
+        stc.assign[i] = j
+        stc.placed[i] = 1
+        if fp is not None:
+            stc = chain.state_at(fp // _SNAP_EVERY, stc.assign, stc.placed)
+            chain.invalidate_above(fp // _SNAP_EVERY)
+        chain.advance_snapped(stc, pos + 1)
+        return stc
+
+    # a partial solve's order is mostly pinned∩ext positions — pure no-ops
+    # (frozen AND externally priced); enumerate only the ones with work
+    ext = ctx.ext
+    if pinned:
+        work = [(pos, i) for pos, i in enumerate(ctx.order)
+                if i not in pinned or i not in ext]
+    else:
+        work = enumerate(ctx.order)
+    for pos, i in work:
         if i in pinned:
             if i not in ctx.ext:   # frozen assignment still gets simulated
-                st = _commit_place(st, snaps, pos, i, st.assign[i],
-                                   st.stage_flip_pos(i, st.assign[i]))
+                st = commit(st, pos, i, st.assign[i],
+                            st.stage_flip_pos(i, st.assign[i]))
             continue
         if i in ctx.ext:
             # finish is fixed externally: every device prices identically,
             # so the ascending scan commits device 0 (the tie rule)
             evals += ndev
-            st = _commit_place(st, snaps, pos, i, 0,
-                               st.stage_flip_pos(i, 0))
+            st = commit(st, pos, i, 0, st.stage_flip_pos(i, 0))
             continue
-        flips = [st.stage_flip_pos(i, j) for j in range(ndev)]
-        fin = _peek_batch(st, da, i)
+        if use_batch:
+            fin = _peek_batch(st, da, i)
+            peeks = None
+            flips = slacks = None
+        else:
+            # one fused neighborhood walk prices every lane: all-device
+            # peeks plus each lane's earliest flip position and vanish
+            # slack (replaces d peeks + d per-lane flip scans)
+            peeks, flips, slacks = st.price_lanes(i, ndev)
         best_j, best_t = 0, math.inf
+        best_tmp: GraphSimState | None = None
+        best_fp: int | None = None
         for j in range(ndev):
-            t = (float(fin[j]) if flips[j] is None
-                 else _price_flip(st, snaps, pos, i, j, flips[j]))
             evals += 1
+            if use_batch:
+                fp, _, _, slack = st._stage_flip_info(i, j)
+            else:
+                fp, slack = flips[j], slacks[j]
+            if fp is None:
+                t = float(fin[j]) if use_batch else peeks[j]
+                tmp = None
+            else:
+                # the stale peek minus the vanishing stages' reclaimable
+                # link time LOWER-bounds the exact price (appears only
+                # insert occupancy; a vanish pulls events earlier by at
+                # most the span it returns to the link — the clocks are
+                # (max, +) so perturbations never amplify): a lane whose
+                # bound already loses provably cannot win, and skipping
+                # it leaves the selection exactly the all-lanes argmin
+                peek = float(fin[j]) if use_batch else peeks[j]
+                if peek - slack >= best_t - _EPS:
+                    continue
+                tmp, t = _resim_place(st, chain, pos, i, j, fp)
             if t < best_t - _EPS:
-                best_j, best_t = j, t
-        st = _commit_place(st, snaps, pos, i, best_j, flips[best_j])
-    return st, evals
+                best_j, best_t, best_tmp, best_fp = j, t, tmp, fp
+        st.assign[i] = best_j
+        st.placed[i] = 1
+        if best_tmp is not None:
+            # adopt the winning lane's re-simulation as the new head —
+            # it IS the committed state (advanced through pos), so the
+            # old rewind-and-re-advance second pass is gone
+            chain.invalidate_above(best_fp // _SNAP_EVERY)
+            st = best_tmp
+        else:
+            chain.advance_snapped(st, pos + 1)
+    return st, evals, chain
+
+
+def _prune_movable(ctx: GraphSimContext, st: GraphSimState,
+                   movable: Sequence[int]) -> list[int]:
+    """The pruned candidate set (DESIGN.md §14): movable tasks on or
+    adjacent to the data-critical chain — walked backwards from the
+    makespan task through each task's latest-finishing placed producer —
+    plus the ``_PRUNE_TAIL`` latest-finishing movable tasks (the
+    neighborhood of whatever straggled).  Moves of other tasks rarely
+    shift the makespan; the descent only falls back to the full sweep
+    when this set goes dry and budget remains."""
+    finish = st.finish
+    placed = st.placed
+    keep: set[int] = set()
+    c = max(range(ctx.n), key=lambda i: finish[i])
+    while c not in keep:
+        keep.add(c)
+        best_u, best_f = c, -1.0
+        for u in ctx.parents[c]:
+            if placed[u] and finish[u] > best_f:
+                best_u, best_f = u, finish[u]
+        c = best_u
+    for c in list(keep):
+        keep.update(ctx.parents[c])
+        keep.update(ctx.children[c])
+    keep.update(sorted(movable, key=lambda i: finish[i],
+                       reverse=True)[:_PRUNE_TAIL])
+    # tail-first: later order positions first — their candidate walks
+    # re-simulate the shortest suffixes (cheapest evals), they neighbor
+    # the straggler (likeliest improvements), and each early accept
+    # tightens the incumbent bound for the longer walks that follow.
+    # Matters because a capped budget usually binds mid-sweep.
+    return sorted((i for i in movable if i in keep),
+                  key=ctx.pos_of.__getitem__, reverse=True)
 
 
 def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
                     max_evals: int = 2000,
-                    free: Sequence[int] | None = None
-                    ) -> tuple[list[int], int, float]:
+                    free: Sequence[int] | None = None,
+                    prune: bool = True,
+                    init: tuple[GraphSimState, _SnapChain] | None = None
+                    ) -> tuple[list[int], int, float, list[float]]:
     """Reassignment descent on the exact graph makespan — ``_descend``'s
     pairwise-transfer loop in discrete per-task coordinates: move one task
     to another device, keep any strict improvement, repeat to a local
@@ -654,64 +777,153 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
     host-stage decision the move flips, if earlier), resumed from the
     nearest ``GraphSimState`` snapshot — positions before it are provably
     unaffected, so the makespans are exactly the from-scratch values.
-    Returns ``(assign, evals, makespan)`` — the local optimum's makespan
-    is the last accepted evaluation, so callers need no re-pricing."""
+    Returns ``(assign, evals, makespan, finish)`` — the local optimum's
+    makespan and per-task finish times come from the last accepted head,
+    so callers need no re-pricing replay.
+
+    ``init`` hands over an already-advanced ``(state, chain)`` whose
+    assignment equals ``assign`` — the EFT placement's final head — so the
+    seed-pricing advance (a full suffix walk plus state construction) is
+    skipped; its makespan was already computed by the placement."""
     movable = list(free) if free is not None else list(range(ctx.n))
     end = len(ctx.order)
-    st = GraphSimState(ctx, assign)
-    # descent never rewinds below the earliest movable task or simulated
-    # parent of one — skip snapshots below that floor (a partial re-solve
-    # freezes most of the order; this keeps its setup cost at O(free))
-    floor = end
-    for i in movable:
-        floor = min(floor, ctx.pos_of[i])
-        for u in ctx.parents[i]:
-            if u not in ctx.ext:
-                p = ctx.pos_of.get(u)
-                if p is not None:
-                    floor = min(floor, p)
-    min_key = floor // _SNAP_EVERY
-    snaps: dict[int, GraphSimState] = {}
-    if min_key == 0:
-        snaps[0] = st.clone()
-    _advance_snapped(st, snaps, end, min_key)
+    ndev = len(ctx.devices)
+    if init is not None:
+        st, chain = init
+    else:
+        st = GraphSimState(ctx, assign)
+        # descent never rewinds below the earliest movable task or simulated
+        # parent of one — skip snapshots below that floor (a partial
+        # re-solve freezes most of the order; this keeps its setup cost at
+        # O(free))
+        floor = end
+        for i in movable:
+            floor = min(floor, ctx.pos_of[i])
+            for u in ctx.parents[i]:
+                if u not in ctx.ext:
+                    p = ctx.pos_of.get(u)
+                    if p is not None:
+                        floor = min(floor, p)
+        chain = _SnapChain(floor // _SNAP_EVERY)
+        if chain.min_key == 0:
+            chain.snaps[0] = st.snap_clone()
+        chain.advance_snapped(st, end)
     best = max(st.finish)
     evals = 1
-    improved = True
+    # candidate-move pruning: sweep the critical-path neighborhood first,
+    # falling back to the full sweep only when the pruned sweep goes dry
+    # with budget remaining (and re-pruning when the full sweep improves)
+    do_prune = prune and ndev > 1 and len(movable) >= _PRUNE_MIN_MOVABLE
+    cands = _prune_movable(ctx, st, movable) if do_prune else movable
+    pruned_now = do_prune
+    use_batch = ndev - 1 >= _BATCH_MIN_LANES
     # the budget binds mid-sweep, not only between sweeps: a single sweep
     # is len(free)·(d-1) candidate moves, which at 10^3+ nodes dwarfs any
     # reasonable budget — checking only in the while-condition made
     # ``max_evals`` a dead letter exactly where it matters (the capped
     # re-solve on a straggler's worker thread, DESIGN.md §11/§12)
-    while improved and evals < max_evals:
+    while evals < max_evals:
         improved = False
-        for i in movable:
+        for i in cands:
             if evals >= max_evals:
                 break
             pi = ctx.pos_of[i]
-            for j in range(len(ctx.devices)):
+            old = st.assign[i]
+            if use_batch and max_evals - evals >= _BATCH_MIN_LANES:
+                # batched move pricing: every alternative device of task i
+                # in one GraphSimBatch sharing a single snapshot resume
+                cand_devs = [j for j in range(ndev) if j != old]
+                p0 = pi
+                for j in cand_devs:
+                    fp = st.stage_flip_pos(i, j)
+                    if fp is not None and fp < p0:
+                        p0 = fp
+                m = p0 // _SNAP_EVERY
+                base = chain.state_at(m, st.assign, st.placed)
+                batch = GraphSimBatch(base, i, cand_devs)
+                batch.run(end, bound=best - _EPS)
+                evals += len(cand_devs)
+                ms = batch.makespans()
+                l = int(ms.argmin())
+                t = float(ms[l])
+                if t < best - _EPS:
+                    st.assign[i] = cand_devs[l]
+                    new_st = batch.extract(l)
+                    new_st.assign = st.assign
+                    new_st.placed = st.placed
+                    chain.invalidate_above(m)
+                    st = new_st
+                    best, improved = t, True
+                continue
+            for j in range(ndev):
                 if evals >= max_evals:
                     break
-                old = st.assign[i]
                 if j == old:
                     continue
                 fp = st.stage_flip_pos(i, j)
                 p0 = pi if fp is None or fp > pi else fp
                 m = p0 // _SNAP_EVERY
-                tmp = snaps[m].clone()
                 st.assign[i] = j
-                tmp.assign = st.assign
-                tmp.placed = st.placed
-                tmp.advance(end)
-                t = max(tmp.finish)
+                tmp = chain.state_at(m, st.assign, st.placed)
+                # bound-aware early exit: every simulated finish lower-
+                # bounds the candidate's makespan, so the walk aborts the
+                # moment one exceeds the incumbent; a completed walk is
+                # byte-identical to an unbounded one, so accepted heads
+                # (and the unpruned trajectory) are unchanged
+                done = tmp.advance(end, bound=best - _EPS)
                 evals += 1
-                if t < best - _EPS:
-                    st = _rewind(st, snaps, m)
-                    _advance_snapped(st, snaps, end, min_key)
+                t = max(tmp.finish) if done else math.inf
+                if done and t < best - _EPS:
+                    # adopt: the candidate walk already IS the new head
+                    chain.invalidate_above(m)
+                    st = tmp
                     best, improved = t, True
+                    old = j
                 else:
                     st.assign[i] = old
-    return st.assign, evals, best
+        if improved:
+            if do_prune and not pruned_now:
+                cands = _prune_movable(ctx, st, movable)  # re-center
+                pruned_now = True
+        else:
+            if pruned_now and evals < max_evals:
+                # pruned sweep dry: one full sweep, same tail-first order
+                cands = sorted(movable, key=ctx.pos_of.__getitem__,
+                               reverse=True)
+                pruned_now = False
+            else:
+                break
+    return st.assign, evals, best, st.finish
+
+
+class SolveContextCache:
+    """Single-entry cache of (priority order, simulation context) for
+    repeated re-solves of ONE task graph (DESIGN.md §14).
+
+    The straggler-rescue path re-plans the same DAG every few milliseconds;
+    the upward-rank order and the context's per-(device, task) duration
+    tables depend only on (devices, tasks, edges, topology), while
+    everything a re-plan changes — carried clocks, the frozen ``ext`` set,
+    pins, seeds — is re-keyed per call via ``GraphSimContext.rebind`` in
+    O(n).  The owner must dedicate one instance per graph (per
+    ``StreamJob`` in the runtime); the entry is verified against
+    (devices tuple, priority, topology spec), which covers model re-fits:
+    a re-fit builds new frozen ``DeviceProfile``s, misses, and forces a
+    rebuild against the fresh cost tables."""
+
+    __slots__ = ("_entry",)
+
+    def __init__(self):
+        self._entry: tuple | None = None
+
+    def lookup(self, key) -> tuple[list[int], GraphSimContext] | None:
+        e = self._entry
+        if e is not None and e[0] == key:
+            return e[1], e[2]
+        return None
+
+    def store(self, key, order: list[int], ctx: GraphSimContext) -> None:
+        self._entry = (key, order, ctx)
 
 
 def solve_list_schedule(devices: Sequence[DeviceProfile],
@@ -725,7 +937,10 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                         ext: Mapping[int, tuple[float, float]] | None = None,
                         clocks: ClockState = ZERO_CLOCKS,
                         seed_assign: Sequence[int] | None = None,
-                        max_evals: int = 2000) -> GraphScheduleResult:
+                        max_evals: int = 2000,
+                        prune: bool = True,
+                        cache: SolveContextCache | None = None
+                        ) -> GraphScheduleResult:
     """Minimize a task graph's makespan by list scheduling on the engine.
 
     HEFT shape: tasks are placed in decreasing upward-rank order
@@ -764,23 +979,41 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
         return GraphScheduleResult(z, 0.0, z, spec)
     pinned = dict(pinned) if pinned else {}
     free = [i for i in range(n) if i not in pinned]
-    if priority == "rank":
-        order = _rank_order(devices, tasks, edges)
-    elif priority == "topo":
-        order = _graph_topo_order(n, edges)
+    ckey = (tuple(devices), priority, spec) if cache is not None else None
+    hit = cache.lookup(ckey) if cache is not None else None
+    if hit is not None:
+        order, tmpl = hit
+        ctx = tmpl.rebind(clocks, ext)
     else:
-        raise ValueError(f"unknown priority {priority!r} "
-                         "(expected 'rank' or 'topo')")
+        if priority == "rank":
+            order = _rank_order(devices, tasks, edges)
+        elif priority == "topo":
+            order = _graph_topo_order(n, edges)
+        else:
+            raise ValueError(f"unknown priority {priority!r} "
+                             "(expected 'rank' or 'topo')")
+        ctx = GraphSimContext(devices, tasks, edges, topo, order, clocks,
+                              ext)
+        if cache is not None:
+            cache.store(ckey, order, ctx)
 
-    def finish(a, o) -> list[float]:
-        return graph_finish_times(devices, tasks, edges, a, topology=topo,
-                                  order=o, clocks=clocks, ext=ext)
+    def finish(a) -> list[float]:
+        # the engine replay on the (possibly cached) context — the same
+        # single simulation loop ``graph_finish_times`` wraps, minus its
+        # per-call context construction
+        stf = GraphSimState(ctx, list(a))
+        stf.advance(len(order))
+        return stf.finish
 
     assign = [-1] * n
     for i, j in pinned.items():
         assign[i] = j
     evals = 0
-    ctx = GraphSimContext(devices, tasks, edges, topo, order, clocks, ext)
+    # the final head state's finish times, when a path produces them —
+    # saves the closing ``finish(assign)`` replay (an extra full state
+    # construction + suffix walk per solve on the re-plan hot path)
+    task_fin: list[float] | None = None
+    eft_init: tuple[GraphSimState, _SnapChain] | None = None
     if priority == "topo":
         solo = [-1] * n   # scratch assignment, reused across candidates
         for i in order:
@@ -798,12 +1031,14 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
             solo[i] = -1
             assign[i] = best_j
     else:
-        st, e = _eft_place(ctx, assign, pinned)
+        st, e, eft_chain = _eft_place(ctx, assign, pinned)
         assign = st.assign
         evals += e
+        task_fin = st.finish
+        eft_init = (st, eft_chain)
 
     def makespan(a) -> float:
-        return max(finish(a, order))
+        return max(finish(a))
 
     if refine and free:
         # the exhaustive branch honours max_evals too: a latency-capped
@@ -822,6 +1057,7 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                 if t < best_t - _EPS:
                     best_a, best_t = list(cand), t
             assign = best_a
+            task_fin = None   # enumerate picked a new assignment; replay
         else:
             # Descend from the EFT placement AND from every degenerate
             # all-one-device assignment (the §3.4.3 caveat, in DAG form):
@@ -836,9 +1072,12 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
             # replaced (``seed_assign``), so a re-plan is never worse than
             # staying locked in — under the re-fitted models.
             seeds = [list(assign)]
-            budget = max_evals
+            best_a, best_t = None, math.inf
+            best_fin: list[float] | None = None
             if seed_assign is not None:
-                seeds.append(list(seed_assign))
+                sa = list(seed_assign)
+                if sa != seeds[0]:   # identical seed: don't split the pool
+                    seeds.append(sa)
                 # the straggler-rescue seed: every free task on the fastest
                 # (re-fitted) device — the shape the re-plan usually wants
                 # when one device just slowed down, and one the capped
@@ -848,26 +1087,43 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                 rescue = list(assign)
                 for i in free:
                     rescue[i] = fastest
-                seeds.append(rescue)
-                # a partial solve runs inside a live splice: split the eval
-                # budget across the seeds instead of paying it per seed
-                budget = max(40, max_evals // len(seeds))
+                if rescue not in seeds:
+                    seeds.append(rescue)
+                # a partial solve runs inside a live splice: the eval
+                # budget is one shared pool the seeds draw down in turn —
+                # the old per-seed split (``max_evals // len(seeds)`` with
+                # a floor of 40) let the *sum* overshoot the cap whenever
+                # it was small (3 seeds x 40 at max_evals=60 spent double
+                # the latency the splice asked for).  Every seed still
+                # gets >= 1 eval — pricing the seed assignment itself —
+                # preserving the never-worse-than-any-seed floor.
+                remaining = max_evals
+                for k, seed in enumerate(seeds):
+                    share = max(1, remaining // (len(seeds) - k))
+                    cand, e, t, fin = _descend_assign(
+                        ctx, seed, free=free, max_evals=share, prune=prune,
+                        init=eft_init if k == 0 else None)
+                    remaining = max(0, remaining - e)
+                    evals += e
+                    if best_a is None or t < best_t - _EPS:
+                        best_a, best_t, best_fin = cand, t, fin
             else:
                 for j in range(len(devices)):
                     one = list(assign)
                     for i in free:
                         one[i] = j
                     seeds.append(one)
-            best_a, best_t = None, math.inf
-            for seed in seeds:
-                cand, e, t = _descend_assign(ctx, seed, free=free,
-                                             max_evals=budget)
-                evals += e
-                if t < best_t - _EPS:
-                    best_a, best_t = cand, t
+                for k, seed in enumerate(seeds):
+                    cand, e, t, fin = _descend_assign(
+                        ctx, seed, free=free, max_evals=max_evals,
+                        prune=prune, init=eft_init if k == 0 else None)
+                    evals += e
+                    if best_a is None or t < best_t - _EPS:
+                        best_a, best_t, best_fin = cand, t, fin
             assign = best_a
+            task_fin = best_fin
 
-    task_finish = finish(assign, order)
+    task_finish = task_fin if task_fin is not None else finish(assign)
     ops = [0.0] * len(devices)
     dev_finish = [0.0] * len(devices)
     for i, t in enumerate(tasks):

@@ -45,7 +45,7 @@ from .domain import (Domain, PlanCache, QoS, TIER_BATCH, TIER_LATENCY,
                      Workload)
 from .executor import DeviceTask, StreamCore
 from .framework import POAS, POASPlan
-from .optimize import solve_list_schedule
+from .optimize import SolveContextCache, solve_list_schedule
 from .schedule import DynamicScheduler
 
 
@@ -349,6 +349,11 @@ class StreamJob:
     _checked_tasks: set = dataclasses.field(default_factory=set)
     _replan_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock)
+    # every rescue re-solves this job's one DAG: reuse the priority order
+    # and per-(device, task) duration tables across re-plans (§14) — only
+    # clocks/pinned/ext change, and those are per-state, not per-context
+    _solve_cache: SolveContextCache = dataclasses.field(
+        default_factory=SolveContextCache)
 
     def wait(self, timeout: float | None = None) -> "StreamJob":
         if not self._done.wait(timeout):
@@ -1112,7 +1117,8 @@ class CoExecutionRuntime:
                                   bus=spec.topology, pinned=pinned,
                                   ext=ext, clocks=clocks,
                                   seed_assign=spec.assign,
-                                  max_evals=_REPLAN_MAX_EVALS)
+                                  max_evals=_REPLAN_MAX_EVALS,
+                                  cache=victim._solve_cache)
         new_spec = dataclasses.replace(spec, devices=tuple(devices),
                                        assign=tuple(res.assign),
                                        order=tuple(res.order))
@@ -1218,7 +1224,8 @@ class CoExecutionRuntime:
         res = solve_list_schedule(devices, spec.tasks, spec.edges,
                                   bus=spec.topology, pinned=pinned,
                                   ext=ext, clocks=clocks,
-                                  seed_assign=spec.assign)
+                                  seed_assign=spec.assign,
+                                  cache=job._solve_cache)
         job._replan_attempts += 1
         if not self._worth_splicing(res, devices, spec, ext, clocks):
             return None   # the re-solve confirms the lock-in
@@ -1311,7 +1318,8 @@ class CoExecutionRuntime:
                                       bus=spec.topology, pinned=pinned,
                                       ext=ext, clocks=clocks,
                                       seed_assign=spec.assign,
-                                      max_evals=_REPLAN_MAX_EVALS)
+                                      max_evals=_REPLAN_MAX_EVALS,
+                                      cache=victim._solve_cache)
             new_spec = dataclasses.replace(spec, devices=tuple(devices),
                                            assign=tuple(res.assign),
                                            order=tuple(res.order))
@@ -1464,7 +1472,8 @@ class CoExecutionRuntime:
                                       bus=spec.topology, pinned=pinned,
                                       ext=ext, clocks=clocks,
                                       seed_assign=spec.assign,
-                                      max_evals=_REPLAN_MAX_EVALS)
+                                      max_evals=_REPLAN_MAX_EVALS,
+                                      cache=job._solve_cache)
             new_spec = dataclasses.replace(spec, devices=tuple(devices),
                                            assign=tuple(res.assign),
                                            order=tuple(res.order))

@@ -385,24 +385,26 @@ def test_descend_assign_never_exceeds_max_evals():
     for budget in (2, 5, max(3, sweep - 1)):
         assert budget < sweep      # the cap can only hold inside a sweep
         ctx = GraphSimContext(devices, tasks, edges, topo, order)
-        _, evals, span = _descend_assign(ctx, [0] * len(tasks),
-                                         max_evals=budget)
+        _, evals, span, _ = _descend_assign(ctx, [0] * len(tasks),
+                                            max_evals=budget)
         assert 1 <= evals <= budget
         assert span > 0.0
 
 
 def test_solve_list_schedule_partial_iterations_track_budget():
-    """A partial re-solve (the splice path) splits ``max_evals`` across its
-    three seeds — total iterations stay within the documented accounting:
-    EFT placement (free x devices) plus per-seed capped descents."""
+    """A partial re-solve (the splice path) draws its three seeds' descents
+    from ONE shared ``max_evals`` pool — the old per-seed split
+    (``max(40, budget // 3)`` each) let the sum overshoot the cap by up to
+    3x at small budgets, which on a live splice is real added latency.
+    Total iterations: EFT placement (free x devices) plus at most the pool,
+    plus the >= 1-eval-per-seed floor that preserves the quality contract."""
     g = transformer_block(d_model=1024, seq=1024, groups=4)
     devices = _devices()
     tasks, edges = g.task_specs(), g.edge_indices()
     n = len(tasks)
     seed = [0] * n
-    for budget in (60, 200):
+    for budget in (6, 60, 200):
         res = solve_list_schedule(devices, tasks, edges, bus="serialized",
                                   seed_assign=seed, max_evals=budget)
-        per_seed = max(40, budget // 3)
-        assert res.iterations <= n * len(devices) + 3 * per_seed
+        assert res.iterations <= n * len(devices) + budget + 3
         assert res.makespan > 0.0

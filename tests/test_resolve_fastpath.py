@@ -1,0 +1,251 @@
+"""Fast-path re-solve properties (DESIGN.md §14).
+
+The §14 latency work changed the descent's quality contract from
+bit-identical to *bounded*: pruned descent may visit fewer moves than the
+full sweep, but its result must never be worse than the seed assignment
+it started from, and a bound-aware ``advance`` that runs to completion
+must remain byte-identical to the unbounded engine.  The deterministic
+tests below always run; the hypothesis variants widen the same properties
+over generated DAGs when hypothesis is installed.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import (BusTopology, ClockState, CopyModel, DeviceProfile,
+                        GraphSimContext, GraphSimState, LinearTimeModel,
+                        NO_COPY, TaskSpec, solve_list_schedule)
+from repro.core.optimize import (SolveContextCache, _descend_assign,
+                                 _EPS)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _devs():
+    return [
+        DeviceProfile("cpu", "cpu", LinearTimeModel(a=1 / 5e12, b=1e-4),
+                      NO_COPY),
+        DeviceProfile("gpu0", "gpu", LinearTimeModel(a=1 / 60e12, b=5e-5),
+                      CopyModel(16e9, dtype_size=4)),
+        DeviceProfile("gpu1", "gpu", LinearTimeModel(a=1 / 25e12, b=8e-5),
+                      CopyModel(8e9, dtype_size=4)),
+    ]
+
+
+def _random_case(rng, n_lo=3, n_hi=14):
+    n = rng.randint(n_lo, n_hi)
+    edges = tuple((u, v) for u in range(n) for v in range(u + 1, n)
+                  if rng.random() < 0.35)
+    tasks = [
+        TaskSpec(name=f"t{i}",
+                 ops=rng.choice([0.0, rng.uniform(0.0, 1e12)]),
+                 in_bytes=rng.choice([0.0, rng.uniform(1e3, 1e9)]),
+                 out_bytes=rng.choice([0.0, rng.uniform(1e3, 1e9)]))
+        for i in range(n)]
+    return tasks, edges
+
+
+def _ctx(tasks, edges, devs, **kw):
+    topo = BusTopology.from_spec("serialized", devs)
+    return GraphSimContext(devs, tasks, edges, topo,
+                           list(range(len(tasks))), **kw)
+
+
+def test_pruned_descent_never_worse_than_seed():
+    """Descent from any seed — pruned or not — returns a makespan <= the
+    seed's own engine makespan (the §14 bounded-quality floor)."""
+    rng = random.Random(0x5EED)
+    devs = _devs()
+    for _ in range(40):
+        tasks, edges = _random_case(rng)
+        n = len(tasks)
+        ctx = _ctx(tasks, edges, devs)
+        seed = [rng.randrange(len(devs)) for _ in range(n)]
+        base = GraphSimState(ctx, list(seed))
+        base.advance(n)
+        seed_span = max(base.finish)
+        for prune in (True, False):
+            _, _, span, fin = _descend_assign(ctx, list(seed),
+                                              max_evals=60, prune=prune)
+            assert span <= seed_span + _EPS
+            assert span == max(fin)
+
+
+def test_bounded_advance_byte_identical_when_completed():
+    """advance(bound=...) either aborts (returns False) or produces the
+    exact finish vector of the unbounded engine — no drift from the
+    early-exit bookkeeping."""
+    rng = random.Random(0xB0D)
+    devs = _devs()
+    for _ in range(60):
+        tasks, edges = _random_case(rng)
+        n = len(tasks)
+        ctx = _ctx(tasks, edges, devs)
+        assign = [rng.randrange(len(devs)) for _ in range(n)]
+        ref = GraphSimState(ctx, list(assign))
+        assert ref.advance(n) is True
+        span = max(ref.finish)
+        for bound in (math.inf, span + 1.0, span,
+                      span * rng.uniform(0.1, 1.0) - _EPS):
+            stb = GraphSimState(ctx, list(assign))
+            done = stb.advance(n, bound=bound)
+            if done:
+                assert stb.finish == ref.finish
+                assert stb.compute_end == ref.compute_end
+                assert stb.avail == ref.avail
+            else:
+                # aborted: some simulated finish exceeded the bound
+                assert any(f > bound for f in stb.finish
+                           if not math.isinf(f) or bound != math.inf)
+        # a bound at the exact makespan must complete (abort is strict >)
+        st_eq = GraphSimState(ctx, list(assign))
+        assert st_eq.advance(n, bound=span) is True
+
+
+def test_seed_budget_pool_never_overshoots():
+    """Regression for the per-seed budget split: with a small cap and the
+    3-way seed fan-out (EFT, seed_assign, rescue), total descent evals
+    must stay within the shared pool, not len(seeds) * floor."""
+    rng = random.Random(0xCAFE)
+    devs = _devs()
+    for _ in range(10):
+        tasks, edges = _random_case(rng, n_lo=6, n_hi=14)
+        n = len(tasks)
+        eft = solve_list_schedule(devs, tasks, edges, refine=False)
+        seed = [rng.randrange(len(devs)) for _ in range(n)]
+        for cap in (3, 10, 60):
+            res = solve_list_schedule(devs, tasks, edges, refine=True,
+                                      seed_assign=seed, max_evals=cap)
+            spent = res.iterations - eft.iterations
+            # >= 1 eval per seed keeps the never-worse-than-seed floor
+            # even when the cap is smaller than the seed count
+            assert spent <= max(cap, 3)
+            assert res.makespan <= eft.makespan + _EPS
+
+
+def test_context_cache_equals_cold_solve():
+    """A warm SolveContextCache re-solve — across changing clocks, pins,
+    ext sets, and seeds — returns exactly what a cold solve returns; a
+    device swap (model re-fit) misses and still matches."""
+    rng = random.Random(0xCAC4E)
+    devs = _devs()
+    tasks, edges = _random_case(rng, n_lo=8, n_hi=14)
+    n = len(tasks)
+    cache = SolveContextCache()
+    for trial in range(8):
+        full = solve_list_schedule(devs, tasks, edges, refine=False)
+        cut = rng.randint(1, n - 1)
+        done = list(full.order)[:cut]
+        pinned = {i: full.assign[i] for i in done}
+        ext = {i: (full.task_finish[i], full.task_finish[i]) for i in done}
+        clocks = ClockState(
+            devices={d.name: rng.uniform(0.0, 0.005) for d in devs},
+            floor=0.0)
+        kw = dict(refine=True, pinned=pinned, ext=ext, clocks=clocks,
+                  seed_assign=list(full.assign), max_evals=40)
+        warm = solve_list_schedule(devs, tasks, edges, cache=cache, **kw)
+        cold = solve_list_schedule(devs, tasks, edges, **kw)
+        assert list(warm.assign) == list(cold.assign)
+        assert warm.task_finish == cold.task_finish
+        assert warm.makespan == cold.makespan
+    # re-fit: new DeviceProfile objects -> key miss -> fresh tables
+    refit = _devs()
+    refit[1] = DeviceProfile("gpu0", "gpu",
+                             LinearTimeModel(a=1 / 30e12, b=5e-5),
+                             CopyModel(16e9, dtype_size=4))
+    warm = solve_list_schedule(refit, tasks, edges, cache=cache,
+                               refine=False)
+    cold = solve_list_schedule(refit, tasks, edges, refine=False)
+    assert list(warm.assign) == list(cold.assign)
+    assert warm.task_finish == cold.task_finish
+
+
+def test_price_lanes_matches_scalar_pricing():
+    """The fused per-task pricing (one neighborhood walk for all lanes)
+    is bit-identical to the scalar peek_finish/_stage_flip_info pair it
+    replaced on the EFT hot path."""
+    rng = random.Random(0xFA57)
+    devs = _devs()
+    for _ in range(40):
+        tasks, edges = _random_case(rng)
+        n = len(tasks)
+        ext = {}
+        for i in range(n):
+            if rng.random() < 0.25:
+                ce = rng.uniform(0.0, 0.02)
+                av = (math.inf if rng.random() < 0.3
+                      else ce + rng.uniform(0.0, 0.01))
+                ext[i] = (ce, av)
+        ctx = _ctx(tasks, edges, devs, ext=ext,
+                   clocks=ClockState(devices={d.name: rng.uniform(0, 0.01)
+                                              for d in devs}, floor=0.0))
+        sim = GraphSimState(ctx, [-1] * n, placed=list(ext))
+        nd = len(devs)
+        for pos, i in enumerate(ctx.order):
+            if i not in ext:
+                ref_peeks = [sim.peek_finish(i, j) for j in range(nd)]
+                ref_fp, ref_slack = [], []
+                for j in range(nd):
+                    fp, _, _, sl = sim._stage_flip_info(i, j)
+                    ref_fp.append(fp)
+                    ref_slack.append(sl)
+                peeks, flips, slacks = sim.price_lanes(i, nd)
+                assert peeks == ref_peeks
+                assert flips == ref_fp
+                assert slacks == ref_slack
+                sim.assign[i] = rng.randrange(nd)
+            sim.placed[i] = 1
+            sim.advance(pos + 1)
+
+
+if HAVE_HYPOTHESIS:
+    _bytes = st.one_of(st.just(0.0), st.floats(1e3, 1e9))
+
+    @st.composite
+    def _dag(draw):
+        n = draw(st.integers(2, 8))
+        edges = tuple((u, v) for u in range(n) for v in range(u + 1, n)
+                      if draw(st.booleans()))
+        tasks = [TaskSpec(name=f"t{i}", ops=draw(st.floats(0.0, 1e12)),
+                          in_bytes=draw(_bytes), out_bytes=draw(_bytes))
+                 for i in range(n)]
+        return tasks, edges
+
+    @settings(max_examples=40, deadline=None)
+    @given(case=_dag(), data=st.data())
+    def test_hyp_pruned_descent_never_worse(case, data):
+        tasks, edges = case
+        n = len(tasks)
+        devs = _devs()
+        ctx = _ctx(tasks, edges, devs)
+        seed = [data.draw(st.integers(0, len(devs) - 1))
+                for _ in range(n)]
+        base = GraphSimState(ctx, list(seed))
+        base.advance(n)
+        seed_span = max(base.finish)
+        prune = data.draw(st.booleans())
+        _, _, span, _ = _descend_assign(ctx, list(seed), max_evals=40,
+                                        prune=prune)
+        assert span <= seed_span + _EPS
+
+    @settings(max_examples=40, deadline=None)
+    @given(case=_dag(), data=st.data())
+    def test_hyp_bounded_advance_identity(case, data):
+        tasks, edges = case
+        n = len(tasks)
+        devs = _devs()
+        ctx = _ctx(tasks, edges, devs)
+        assign = [data.draw(st.integers(-1, len(devs) - 1))
+                  for _ in range(n)]
+        ref = GraphSimState(ctx, list(assign))
+        ref.advance(n)
+        bound = data.draw(st.one_of(
+            st.just(math.inf), st.floats(0.0, 1.0)))
+        stb = GraphSimState(ctx, list(assign))
+        if stb.advance(n, bound=bound):
+            assert stb.finish == ref.finish
