@@ -17,6 +17,10 @@ Three sections per machine (DESIGN.md §10):
   with the expert count.  Acceptance: co-execution never regresses, and
   each machine shows real gain on at least one config (copy-bound expert
   slabs legitimately stay single-device).
+* **ssm** — mamba2-style scan-chain stacks (``ssm_stack``): the serial
+  state recurrence bounds DAG width, so co-execution must *never lose* to
+  the best single device but is not required to gain — the section records
+  the measured speedups and the scan-dominated critical-path fraction.
 * **runtime** — a short stream of DAG jobs through ``CoExecutionRuntime``
   (deterministic virtual time) with a mid-stream throttle: per-task
   observations must re-fit the models and the dependency invariants must
@@ -36,7 +40,7 @@ import os
 
 from repro.core import (CoExecutionRuntime, TaskGraphDomain, diamond,
                         graph_finish_times, moe_stack, solve_list_schedule,
-                        transformer_block, truth_from_profiles,
+                        ssm_stack, transformer_block, truth_from_profiles,
                         verify_graph_dependencies, verify_stream_invariants)
 
 from .common import MACHINES, emit, timed
@@ -46,6 +50,9 @@ CASE_STUDY = dict(d_model=4096, seq=16384, ff_mult=4, groups=8)
 MOE_CASES = (("dbrx-132b", dict(layers=1, seq=8192, groups=4)),
              ("llama4-maverick-400b-a17b", dict(layers=2, seq=8192,
                                                 groups=4)))
+SSM_CASES = (("mamba2-2_7b-2x8k", "mamba2-2_7b", dict(layers=2, seq=8192)),
+             ("mamba2-2_7b-1x16k", "mamba2-2_7b",
+              dict(layers=1, seq=16384)))
 RUNTIME_BLOCK = dict(d_model=1024, seq=2048, groups=4)
 N_JOBS = 8
 THROTTLE_AT = 3
@@ -125,6 +132,35 @@ def moe_rows(machine: str) -> dict:
             "best_single_device": single_name,
             "best_single_makespan_s": single_t,
             "speedup_vs_best_single": single_t / res.makespan,
+        }
+    return out
+
+
+def ssm_rows(machine: str) -> dict:
+    """Scan-chain stacks (``ssm_stack``): the serial state recurrence
+    caps the exploitable width, so the contract is never-loses rather
+    than must-gain — the rows record the measured co-execution speedup
+    and how much of the critical path the scan spine owns."""
+    devs = MACHINES[machine]()
+    out = {}
+    for label, cfg, kw in SSM_CASES:
+        g = ssm_stack(cfg, **kw)
+        res = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                                  bus="serialized")
+        single_name, single_t = _best_single(devs, g, res.order)
+        cp_ops, path = g.critical_path()
+        out[label] = {
+            "config": cfg,
+            "params": kw,
+            "n_tasks": len(g),
+            "total_tops": g.total_ops() / 1e12,
+            "critical_path_ops_fraction": cp_ops / g.total_ops(),
+            "scan_nodes_on_critical_path": sum(
+                1 for p in path if ".state" in p),
+            "coexec_makespan_s": res.makespan,
+            "best_single_device": single_name,
+            "best_single_makespan_s": single_t,
+            "ssm_vs_best_single_x": single_t / res.makespan,
         }
     return out
 
@@ -220,11 +256,13 @@ def main() -> None:
         coexec, t_c = timed(coexec_rows, machine, repeats=1)
         naive, t_n = timed(naive_rows, machine, repeats=1)
         moe, t_m = timed(moe_rows, machine, repeats=1)
+        ssm, t_ssm = timed(ssm_rows, machine, repeats=1)
         runtime, t_r = timed(runtime_rows, machine, repeats=1)
         straggler, t_s = timed(straggler_rows, machine, repeats=1)
         report["machines"][machine] = {"coexec": coexec,
                                        "list_vs_naive": naive,
                                        "moe": moe,
+                                       "ssm": ssm,
                                        "runtime": runtime,
                                        "straggler": straggler}
         emit(f"graph_coexec_{machine}", t_c * 1e6,
@@ -233,6 +271,9 @@ def main() -> None:
         emit(f"graph_moe_{machine}", t_m * 1e6,
              " ".join(f"{cfg}={row['speedup_vs_best_single']:.3f}x"
                       for cfg, row in moe.items()))
+        emit(f"graph_ssm_{machine}", t_ssm * 1e6,
+             " ".join(f"{label}={row['ssm_vs_best_single_x']:.3f}x"
+                      for label, row in ssm.items()))
         emit(f"graph_list_vs_naive_{machine}", t_n * 1e6,
              "block="
              f"{naive['transformer_block']['list_vs_naive_speedup']:.3f}x "
@@ -266,6 +307,13 @@ def main() -> None:
             any(row["speedup_vs_best_single"] > 1.0
                 for row in m["moe"].values())
             for m in report["machines"].values()),
+        # the SSM scan spine is serial, so width (and hence gain) is
+        # structurally limited: the contract is only that co-execution
+        # never regresses below the best single device
+        "ssm_coexec_never_loses": all(
+            row["ssm_vs_best_single_x"] >= 1.0 - 1e-9
+            for m in report["machines"].values()
+            for row in m["ssm"].values()),
         "runtime_refits_on_per_task_obs": all(
             m["runtime"]["refit_epoch"] > 0
             for m in report["machines"].values()),
@@ -292,6 +340,8 @@ def main() -> None:
         "MoE expert fan-out regressed vs the best single device"
     assert report["acceptance"]["moe_coexec_gains_somewhere"], \
         "no MoE config co-executed with real gain on some machine"
+    assert report["acceptance"]["ssm_coexec_never_loses"], \
+        "SSM scan-chain stack regressed vs the best single device"
     assert report["acceptance"]["runtime_refits_on_per_task_obs"]
     assert report["acceptance"]["invariants_clean"]
     assert report["acceptance"]["replan_beats_locked_in_virtual"], \

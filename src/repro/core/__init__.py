@@ -25,15 +25,17 @@ from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            TPU_VMEM_BYTES)
 from .predict import (Profiler, fit_linear, host_cpu_runner, load_profiles,
                       relative_error, rmse, save_profiles, simulated_runner)
-from .optimize import (GraphScheduleResult, OptimizeResult, solve_analytic,
-                       solve_bisection, solve_list_schedule,
-                       solve_local_search)
+from .optimize import (GraphScheduleResult, OptimizeResult,
+                       SHARED_TEMPLATE_CACHE, TemplatePlanCache,
+                       solve_analytic, solve_bisection, solve_hierarchical,
+                       solve_list_schedule, solve_local_search)
 from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
                     ops_to_mnk, squareness)
 from .schedule import (DynamicScheduler, Schedule, StaticScheduler,
                        simulate_graph_timeline, simulate_timeline)
 from .graph import (GraphPlan, TaskGraph, TaskGraphDomain, TaskNode,
-                    diamond, moe_block, moe_stack, transformer_block,
+                    TemplatePartition, detect_templates, diamond, moe_block,
+                    moe_stack, ssm_block, ssm_stack, transformer_block,
                     transformer_stack, verify_graph_dependencies)
 from .domain import (Domain, FunctionDomain, PlanCache, QoS, TIER_BATCH,
                      TIER_LATENCY, Workload, device_signature, get_domain,
@@ -80,6 +82,9 @@ __all__ = [
     "graph_finish_times", "GraphScheduleResult", "solve_list_schedule",
     "simulate_graph_timeline",
     "GraphPlan", "TaskGraph", "TaskGraphDomain", "TaskNode", "diamond",
-    "moe_block", "moe_stack", "transformer_block", "transformer_stack",
+    "moe_block", "moe_stack", "ssm_block", "ssm_stack",
+    "transformer_block", "transformer_stack",
     "verify_graph_dependencies",
+    "SHARED_TEMPLATE_CACHE", "TemplatePlanCache", "TemplatePartition",
+    "detect_templates", "solve_hierarchical",
 ]

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import heapq
 import math
 from typing import Iterable, Mapping, Sequence
 
@@ -641,22 +642,25 @@ class TaskSpec:
 
 def _graph_topo_order(n: int, edges: Sequence[tuple[int, int]]) -> list[int]:
     """Kahn topological order, stable by task index (callers validate
-    acyclicity; a cycle here raises)."""
+    acyclicity; a cycle here raises).  The ready frontier is a heap: a
+    wide DAG (microbatched whole-model stacks keep dozens of chains open
+    at once) made the old ``min(ready)`` + ``list.remove`` frontier a
+    measurable O(n·width) slice of the 10^4-node hierarchical solve."""
     indeg = [0] * n
     children: list[list[int]] = [[] for _ in range(n)]
     for u, v in edges:
         indeg[v] += 1
         children[u].append(v)
     ready = [i for i in range(n) if indeg[i] == 0]
+    heapq.heapify(ready)
     out: list[int] = []
     while ready:
-        i = min(ready)
-        ready.remove(i)
+        i = heapq.heappop(ready)
         out.append(i)
         for c in children[i]:
             indeg[c] -= 1
             if indeg[c] == 0:
-                ready.append(c)
+                heapq.heappush(ready, c)
     if len(out) != n:
         raise ValueError("task graph contains a cycle")
     return out

@@ -34,7 +34,7 @@ from .bus import (BusTopology, GraphTimelineSpec, TaskSpec, Timeline,
 from .device_model import DeviceProfile, priority_order
 from .domain import register_domain
 from .optimize import (GraphScheduleResult, OptimizeResult,
-                       solve_list_schedule)
+                       solve_hierarchical, solve_list_schedule)
 from .schedule import DynamicScheduler, Schedule
 
 
@@ -67,8 +67,14 @@ class TaskGraph:
 
     nodes: tuple[TaskNode, ...]
     edges: tuple[tuple[str, str], ...] = ()
+    #: optional structural metadata from builders: a partition of (some of)
+    #: the task names into repeated blocks, in construction order — the
+    #: template detector's free fast path (``detect_templates``).  Carries
+    #: no cost information, so it is excluded from ``cost_signature``.
+    blocks: tuple[tuple[str, ...], ...] = ()
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "_memo", {})
         names = [t.name for t in self.nodes]
         if len(set(names)) != len(names):
             dup = sorted(n for n, c in Counter(names).items() if c > 1)
@@ -90,6 +96,14 @@ class TaskGraph:
                            {n: tuple(ps) for n, ps in parents.items()})
         object.__setattr__(self, "_children",
                            {n: tuple(cs) for n, cs in children.items()})
+        seen_blk: set[str] = set()
+        for blk in self.blocks:
+            for bn in blk:
+                if bn not in index:
+                    raise ValueError(f"block references unknown task {bn!r}")
+                if bn in seen_blk:
+                    raise ValueError(f"task {bn!r} appears in two blocks")
+                seen_blk.add(bn)
         _graph_topo_order(len(self.nodes), self.edge_indices())  # acyclic?
 
     # -- queries -------------------------------------------------------------
@@ -104,7 +118,13 @@ class TaskGraph:
         return self.nodes[self._index[name]]
 
     def edge_indices(self) -> tuple[tuple[int, int], ...]:
-        return tuple((self._index[u], self._index[v]) for u, v in self.edges)
+        memo = self._memo
+        out = memo.get("edge_indices")
+        if out is None:
+            out = tuple((self._index[u], self._index[v])
+                        for u, v in self.edges)
+            memo["edge_indices"] = out
+        return out
 
     def parents(self, name: str) -> tuple[str, ...]:
         return self._parents[name]
@@ -116,7 +136,12 @@ class TaskGraph:
         return float(sum(t.ops for t in self.nodes))
 
     def topo_order(self) -> list[int]:
-        return _graph_topo_order(len(self.nodes), self.edge_indices())
+        memo = self._memo
+        out = memo.get("topo_order")
+        if out is None:
+            out = _graph_topo_order(len(self.nodes), self.edge_indices())
+            memo["topo_order"] = out
+        return list(out)
 
     def critical_path(self) -> tuple[float, list[str]]:
         """Ops-weighted longest path: the lower bound no schedule can beat
@@ -144,14 +169,36 @@ class TaskGraph:
         return length[start], path
 
     def task_specs(self) -> tuple[TaskSpec, ...]:
-        return tuple(TaskSpec(t.name, float(t.ops), float(t.in_bytes),
-                              float(t.out_bytes)) for t in self.nodes)
+        memo = self._memo
+        out = memo.get("task_specs")
+        if out is None:
+            out = tuple(TaskSpec(t.name, float(t.ops), float(t.in_bytes),
+                                 float(t.out_bytes)) for t in self.nodes)
+            memo["task_specs"] = out
+        return out
 
     def cost_signature(self) -> Hashable:
         """Everything the solved plan depends on: per-task numbers plus the
-        edge structure (device models are keyed separately by the cache)."""
-        return (tuple((t.name, t.ops, t.in_bytes, t.out_bytes)
-                      for t in self.nodes), self.edges)
+        edge structure (device models are keyed separately by the cache).
+        Memoized — the graph is immutable and this tuple is rebuilt on every
+        ``PlanCache`` probe, which at 10^4 nodes dominated cache hits."""
+        memo = self._memo
+        out = memo.get("cost_signature")
+        if out is None:
+            out = (tuple((t.name, t.ops, t.in_bytes, t.out_bytes)
+                         for t in self.nodes), self.edges)
+            memo["cost_signature"] = out
+        return out
+
+    def template_partition(self, *, min_repeats: int = 4
+                           ) -> "TemplatePartition | None":
+        """Memoized ``detect_templates`` (the graph is immutable, and the
+        domain re-detects on every plan-cache miss)."""
+        memo = self._memo
+        key = ("template_partition", min_repeats)
+        if key not in memo:
+            memo[key] = detect_templates(self, min_repeats=min_repeats)
+        return memo[key]
 
     def frontier_subgraph(self, started: Iterable[str]
                           ) -> tuple["TaskGraph",
@@ -195,6 +242,192 @@ class TaskGraph:
 
 
 # ---------------------------------------------------------------------------
+# Template detection (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TemplatePartition:
+    """A partition of a ``TaskGraph`` into repeated template instances.
+
+    ``instances[a]`` lists instance *a*'s node indices in topological
+    order (slot order); ``template_of[a]`` is its template id;
+    ``signatures[t]`` is template *t*'s canonical signature — per-slot
+    costs, internal edges in slot coordinates, and boundary arity
+    (in-edges as ``(consumer_slot, producer_out_bytes)``, out-edges as
+    ``(producer_slot, count)``).  Names are excluded, so structurally
+    equal blocks match across layers, microbatches, graphs, and tenants;
+    the signature is also everything ``solve_hierarchical`` needs to
+    build and cache a representative sub-solve, so the template cache
+    key *is* the solve input."""
+
+    instances: tuple[tuple[int, ...], ...]
+    template_of: tuple[int, ...]
+    signatures: tuple[Hashable, ...]
+
+    @property
+    def n_templates(self) -> int:
+        return len(self.signatures)
+
+    def repeats(self) -> Counter:
+        """Template id -> instance count."""
+        return Counter(self.template_of)
+
+
+def _generic_instances(n: int, children: Sequence[Sequence[int]],
+                       topo: Sequence[int], nodes: Sequence[TaskNode]
+                       ) -> list[list[int]]:
+    """Fallback instance discovery for graphs without builder blocks.
+
+    Per weakly-connected component (in topological order): cut after
+    position ``p`` whenever at most one producer's edges cross into the
+    suffix — computed with a difference array over producer spans
+    ``[pos(u), last_child_pos(u))`` — giving *minimal* segments; then
+    merge consecutive segments at the smallest period under which the
+    segment-key sequence (costs + internal edge shape, boundary-blind)
+    is fully periodic, so one instance spans one structural repeat
+    rather than one articulation slice."""
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u in range(n):
+        for v in children[u]:
+            ru, rv = find(u), find(v)
+            if ru != rv:
+                parent[ru] = rv
+    comps: dict[int, list[int]] = {}
+    for i in topo:
+        comps.setdefault(find(i), []).append(i)
+
+    def seg_key(comp: list[int], cpos: dict[int, int], lo: int,
+                hi: int) -> Hashable:
+        seg = comp[lo:hi]
+        costs = tuple((nodes[i].ops, nodes[i].in_bytes, nodes[i].out_bytes)
+                      for i in seg)
+        internal = sorted((cpos[i] - lo, cpos[c] - lo)
+                          for i in seg for c in children[i]
+                          if lo <= cpos[c] < hi)
+        return costs, tuple(internal)
+
+    instances: list[list[int]] = []
+    for comp in comps.values():
+        m = len(comp)
+        cpos = {node: k for k, node in enumerate(comp)}
+        diff = [0] * (m + 1)
+        for node in comp:
+            ch = children[node]
+            if ch:
+                diff[cpos[node]] += 1
+                diff[max(cpos[c] for c in ch)] -= 1
+        bounds = [0]
+        run = 0
+        for k in range(m):
+            run += diff[k]
+            if run <= 1:
+                bounds.append(k + 1)
+        segs = list(zip(bounds[:-1], bounds[1:]))
+        keys = [seg_key(comp, cpos, lo, hi) for lo, hi in segs]
+        msg = len(segs)
+        merged = None
+        for p in range(1, msg // 2 + 1):
+            if all(keys[i] == keys[i + p] for i in range(msg - p)):
+                merged = [comp[segs[i][0]:segs[min(i + p, msg) - 1][1]]
+                          for i in range(0, msg, p)]
+                break
+        if merged is not None:
+            instances.extend(merged)
+        else:
+            instances.extend(comp[lo:hi] for lo, hi in segs)
+    return instances
+
+
+def detect_templates(graph: TaskGraph, *, min_repeats: int = 4
+                     ) -> TemplatePartition | None:
+    """Partition ``graph`` into repeated template instances, or ``None``
+    when the graph is not repetitive enough for tiling to pay off.
+
+    Builder-emitted ``blocks`` are the free fast path (uncovered nodes
+    become singleton instances); otherwise the generic detector cuts
+    each weakly-connected component at single-crossing-producer points
+    and merges the minimal segments at the smallest structural period.
+    Instances are grouped into templates by canonical signature — node
+    costs, internal edge shape, boundary arity — so blocks differing in
+    any one node's costs or in how they are fed never merge.  Returns
+    ``None`` unless the dominant template repeats ``min_repeats`` times
+    AND template-covered instances span most of the graph (tiling a
+    mostly-unique graph would just be per-fragment EFT)."""
+    n = len(graph.nodes)
+    if n == 0 or min_repeats < 2:
+        return None
+    edges = graph.edge_indices()
+    topo = graph.topo_order()
+    pos = [0] * n
+    for p, i in enumerate(topo):
+        pos[i] = p
+
+    if graph.blocks:
+        inst = [sorted((graph.index(b) for b in blk), key=pos.__getitem__)
+                for blk in graph.blocks]
+        covered = {i for s in inst for i in s}
+        inst.extend([i] for i in topo if i not in covered)
+    else:
+        children: list[list[int]] = [[] for _ in range(n)]
+        for u, v in edges:
+            children[u].append(v)
+        inst = _generic_instances(n, children, topo, graph.nodes)
+    if not inst or n < 2.0 * len(inst):
+        return None   # degenerate: near-singleton instances, nothing to tile
+
+    inst_of = [-1] * n
+    slot_of = [0] * n
+    for a, s in enumerate(inst):
+        for k, i in enumerate(s):
+            inst_of[i] = a
+            slot_of[i] = k
+    internal: list[list[tuple[int, int]]] = [[] for _ in inst]
+    inb: list[list[tuple[int, float]]] = [[] for _ in inst]
+    outb: list[list[int]] = [[] for _ in inst]
+    for u, v in edges:
+        a, b = inst_of[u], inst_of[v]
+        if a == b:
+            internal[a].append((slot_of[u], slot_of[v]))
+        else:
+            outb[a].append(slot_of[u])
+            inb[b].append((slot_of[v], float(graph.nodes[u].out_bytes)))
+
+    sig_id: dict[Hashable, int] = {}
+    signatures: list[Hashable] = []
+    template_of: list[int] = []
+    for a, s in enumerate(inst):
+        costs = tuple((graph.nodes[i].ops, graph.nodes[i].in_bytes,
+                       graph.nodes[i].out_bytes) for i in s)
+        sig = (costs, tuple(sorted(internal[a])), tuple(sorted(inb[a])),
+               tuple(sorted(Counter(outb[a]).items())))
+        t = sig_id.get(sig)
+        if t is None:
+            t = len(signatures)
+            sig_id[sig] = t
+            signatures.append(sig)
+        template_of.append(t)
+
+    counts = Counter(template_of)
+    if max(counts.values()) < min_repeats:
+        return None
+    covered_nodes = sum(len(s) for a, s in enumerate(inst)
+                        if counts[template_of[a]] >= min_repeats)
+    if 2 * covered_nodes < n:
+        return None
+    return TemplatePartition(instances=tuple(tuple(s) for s in inst),
+                             template_of=tuple(template_of),
+                             signatures=tuple(signatures))
+
+
+# ---------------------------------------------------------------------------
 # Adapt output: the assignment in domain coordinates
 # ---------------------------------------------------------------------------
 
@@ -233,11 +466,15 @@ class TaskGraphDomain:
 
     def __init__(self, devices: Sequence[DeviceProfile], *,
                  bus: str | BusTopology = "serialized",
-                 dynamic: bool = False, refine: bool = True):
+                 dynamic: bool = False, refine: bool = True,
+                 hierarchical: bool | str = "auto",
+                 min_repeats: int = 4):
         self._devices = list(devices)
         self.topology = BusTopology.from_spec(bus, self._devices)
         self.bus = self.topology.spec
         self.refine = refine
+        self.hierarchical = hierarchical
+        self.min_repeats = min_repeats
         self.dyn = DynamicScheduler(self._devices, bus=self.topology) \
             if dynamic else None
 
@@ -246,6 +483,16 @@ class TaskGraphDomain:
 
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: TaskGraph) -> GraphScheduleResult:
+        # the template-tiled path (DESIGN.md §15) kicks in automatically
+        # when the detector finds enough repeated structure; flat list
+        # scheduling stays the path for one-off / irregular graphs
+        if self.hierarchical and isinstance(w, TaskGraph):
+            part = w.template_partition(min_repeats=self.min_repeats)
+            if part is not None:
+                return solve_hierarchical(devices, w.task_specs(),
+                                          w.edge_indices(), partition=part,
+                                          bus=self.topology,
+                                          refine=self.refine)
         return solve_list_schedule(devices, w.task_specs(),
                                    w.edge_indices(), bus=self.topology,
                                    refine=self.refine)
@@ -397,6 +644,7 @@ def transformer_stack(config=None, *, layers: int | None = None,
 
     nodes: list[TaskNode] = []
     edges: list[tuple[str, str]] = []
+    blocks: list[tuple[str, ...]] = []
     for m in range(microbatches):
         prev: str | None = None
         for l in range(layers):
@@ -406,11 +654,13 @@ def transformer_stack(config=None, *, layers: int | None = None,
                                       name=f"{base}.l{l}.m{m}")
             nodes.extend(block.nodes)
             edges.extend(block.edges)
+            blocks.append(tuple(t.name for t in block.nodes))
             if prev is not None:
                 for gi in range(g):
                     edges.append((prev, f"{base}.l{l}.m{m}.qkv{gi}"))
             prev = f"{base}.l{l}.m{m}.combine"
-    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges),
+                     blocks=tuple(blocks))
 
 
 def moe_block(*, d_model: int = 4096, seq: int = 4096,
@@ -535,6 +785,7 @@ def moe_stack(config=None, *, layers: int | None = None,
 
     nodes: list[TaskNode] = []
     edges: list[tuple[str, str]] = []
+    blocks: list[tuple[str, ...]] = []
     for m in range(microbatches):
         prev: str | None = None
         for l in range(layers):
@@ -552,11 +803,142 @@ def moe_stack(config=None, *, layers: int | None = None,
                                           name=bname)
             nodes.extend(block.nodes)
             edges.extend(block.edges)
+            blocks.append(tuple(t.name for t in block.nodes))
             if prev is not None:
                 for gi in range(g):
                     edges.append((prev, f"{bname}.qkv{gi}"))
             prev = f"{bname}.combine"
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges),
+                     blocks=tuple(blocks))
+
+
+def ssm_block(*, d_model: int = 4096, seq: int = 4096,
+              d_state: int = 128, expand: int = 2, head_dim: int = 64,
+              ssm_groups: int = 1, chunk: int = 256, conv: int = 4,
+              dtype_size: int = 2, name: str = "ssm") -> TaskGraph:
+    """A mamba2-style SSD block as a ``TaskGraph`` — the scan-chain DAG
+    shape (ROADMAP: whole-model DAGs beyond attention stacks).
+
+    SSD (state-space duality) splits the sequence into chunks: each
+    chunk's *intra* term is a quadratic attention-like matmul — chunks
+    mutually independent, the DAG width — while the *inter* term carries
+    a recurrent ``(d_inner, d_state)`` state chunk-to-chunk — a serial
+    scan chain, the DAG depth.  That mix (wide independent quadratic
+    work threaded by a cheap serial spine) is structurally unlike the
+    transformer/MoE builders and exercises the scheduler's handling of
+    long mandatory chains.
+
+    Shapes (d = d_model, s = seq, di = expand*d, ds = d_state,
+    nh = di/head_dim, G = ssm_groups, Q = s/chunks):
+      inproj    (s,d)x(d,2di+2G*ds+nh)  z gate, x, B, C, dt in one matmul
+      conv      depthwise K-tap conv over x/B/C (cheap, elementwise)
+      intra{c}  2*Q^2*di ops            chunk-local attention-like term
+      state{c}  2*Q*di*ds ops           state update; chains state{c-1}
+      outproj   (s,di)x(di,d)           gated output projection
+    ``state{c-1}`` also feeds ``intra{c}`` (the inter-chunk output
+    contribution), and the final state joins ``outproj``; the state
+    payload crossing chunks is ``di*ds`` fp32 bytes."""
+    if d_model < 1 or seq < 1 or d_state < 1 or expand < 1:
+        raise ValueError("d_model, seq, d_state and expand must be >= 1")
+    d, s, ds, G = d_model, float(seq), d_state, ssm_groups
+    di = expand * d_model
+    nh = max(1, di // head_dim)
+    conv_dim = di + 2 * G * ds
+    w_in = 2 * di + 2 * G * ds + nh
+    x_bytes = float(seq * d * dtype_size)
+    n_chunks = max(1, seq // chunk)
+    q = s / n_chunks                     # tokens per chunk
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+
+    inproj = f"{name}.inproj"
+    cv = f"{name}.conv"
+    outproj = f"{name}.outproj"
+    nodes.append(TaskNode(inproj, ops=s * d * w_in,
+                          in_bytes=x_bytes + float(d * w_in * dtype_size),
+                          out_bytes=s * conv_dim * dtype_size))
+    nodes.append(TaskNode(cv, ops=s * conv_dim * conv,
+                          in_bytes=float(conv_dim * conv * dtype_size),
+                          out_bytes=s * conv_dim * dtype_size))
+    edges.append((inproj, cv))
+    for c in range(n_chunks):
+        intra = f"{name}.intra{c}"
+        state = f"{name}.state{c}"
+        nodes.append(TaskNode(intra, ops=2.0 * q * q * di,
+                              out_bytes=q * di * dtype_size))
+        nodes.append(TaskNode(state, ops=2.0 * q * di * ds,
+                              out_bytes=float(di * ds * 4)))
+        edges.append((cv, intra))
+        edges.append((cv, state))
+        if c > 0:
+            edges.append((f"{name}.state{c-1}", state))
+            edges.append((f"{name}.state{c-1}", intra))
+        edges.append((intra, outproj))
+    edges.append((f"{name}.state{n_chunks-1}", outproj))
+    nodes.append(TaskNode(outproj, ops=s * di * d,
+                          in_bytes=float(di * d * dtype_size),
+                          out_bytes=x_bytes))
     return TaskGraph(nodes=tuple(nodes), edges=tuple(edges))
+
+
+def ssm_stack(config=None, *, layers: int | None = None,
+              microbatches: int = 1, seq: int = 4096,
+              chunk: int | None = None, dtype_size: int = 2,
+              name: str | None = None) -> TaskGraph:
+    """A whole SSM model DAG from the in-repo config zoo (ROADMAP's open
+    whole-model-DAG item): ``layers`` mamba2-style ``ssm_block``s ×
+    ``microbatches`` independent pipelines, block l's ``outproj`` feeding
+    block l+1's ``inproj``.  ``config`` is an ``ArchConfig``, a config
+    name (``"mamba2-2_7b"``), or None for the default geometry; shapes
+    (``d_model``, ``ssm_state``, ``ssm_expand``, ``ssm_head_dim``,
+    ``ssm_chunk``, ``ssm_conv``, ``ssm_groups``) come from the config.
+    Emits its block partition (``blocks``) like the other stack builders,
+    so the template detector gets the per-layer tiling for free."""
+    d_model, d_state, expand = 2560, 128, 2
+    head_dim, ssm_groups, cfg_chunk, conv = 64, 1, 256, 4
+    cfg_name = "ssm"
+    if config is not None:
+        if isinstance(config, str):
+            from repro.configs import get_config   # lazy: avoids a cycle
+            cfg_name = config
+            config = get_config(config)
+        else:
+            cfg_name = getattr(config, "name", "model")
+        d_model = int(config.d_model)
+        d_state = int(config.ssm_state) or d_state
+        expand = int(config.ssm_expand)
+        head_dim = int(config.ssm_head_dim)
+        ssm_groups = int(getattr(config, "ssm_groups", 1))
+        cfg_chunk = int(config.ssm_chunk)
+        conv = int(getattr(config, "ssm_conv", 4))
+        if layers is None:
+            layers = int(config.num_layers)
+    layers = 1 if layers is None else layers
+    chunk = cfg_chunk if chunk is None else chunk
+    if layers < 1 or microbatches < 1 or chunk < 1:
+        raise ValueError("layers, microbatches and chunk must be >= 1")
+    seq_mb = max(1, seq // microbatches)
+    base = name if name is not None else str(cfg_name)
+
+    nodes: list[TaskNode] = []
+    edges: list[tuple[str, str]] = []
+    blocks: list[tuple[str, ...]] = []
+    for m in range(microbatches):
+        prev: str | None = None
+        for l in range(layers):
+            bname = f"{base}.l{l}.m{m}"
+            block = ssm_block(d_model=d_model, seq=seq_mb, d_state=d_state,
+                              expand=expand, head_dim=head_dim,
+                              ssm_groups=ssm_groups, chunk=chunk,
+                              conv=conv, dtype_size=dtype_size, name=bname)
+            nodes.extend(block.nodes)
+            edges.extend(block.edges)
+            blocks.append(tuple(t.name for t in block.nodes))
+            if prev is not None:
+                edges.append((prev, f"{bname}.inproj"))
+            prev = f"{bname}.outproj"
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges),
+                     blocks=tuple(blocks))
 
 
 def diamond(ops: float = 1e9, *, bytes_per_edge: float = 1e6,

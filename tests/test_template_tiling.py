@@ -1,0 +1,242 @@
+"""Template-tiled hierarchical solves (DESIGN.md §15).
+
+Detection: builder blocks and the generic fallback both partition
+repetitive DAGs; canonical signatures never merge blocks that differ in
+any one node's costs (the collision property).  Solving: the stitched
+placement's reported finish times are byte-identical to the engine's
+from-scratch simulation of the same assignment (ground truth), the
+makespan never loses to the best all-one-device schedule (the floor
+contract), the template cache shares representative placements across
+stacks of different depths, and the domain auto-selects the tiled path
+exactly when the detector finds repeated structure.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (BusTopology, CopyModel, DeviceProfile,
+                        LinearTimeModel, NO_COPY, TaskGraph,
+                        TaskGraphDomain, TaskNode, TemplatePlanCache,
+                        detect_templates, graph_finish_times,
+                        solve_hierarchical, solve_list_schedule, ssm_stack,
+                        transformer_block, transformer_stack)
+
+
+def _devs():
+    return [
+        DeviceProfile("cpu", "cpu", LinearTimeModel(a=1 / 5e12, b=1e-4),
+                      NO_COPY),
+        DeviceProfile("gpu0", "gpu", LinearTimeModel(a=1 / 60e12, b=5e-5),
+                      CopyModel(16e9, dtype_size=4)),
+        DeviceProfile("gpu1", "gpu", LinearTimeModel(a=1 / 25e12, b=8e-5),
+                      CopyModel(8e9, dtype_size=4)),
+    ]
+
+
+def _chain_of_blocks(repeats: int, *, perturb: int | None = None,
+                     with_blocks: bool = True) -> TaskGraph:
+    """``repeats`` copies of a 4-node diamond block chained tail→head;
+    ``perturb`` bumps one node's ops in that block (collision fixture)."""
+    nodes, edges, blocks = [], [], []
+    for r in range(repeats):
+        ops = [4e11, 2e11, 3e11, 1e11]
+        if r == perturb:
+            ops[1] *= 1.5
+        names = [f"b{r}.n{k}" for k in range(4)]
+        nodes += [TaskNode(names[0], ops=ops[0], in_bytes=1e6,
+                           out_bytes=2e6),
+                  TaskNode(names[1], ops=ops[1], out_bytes=1e6),
+                  TaskNode(names[2], ops=ops[2], out_bytes=1e6),
+                  TaskNode(names[3], ops=ops[3], out_bytes=2e6)]
+        edges += [(names[0], names[1]), (names[0], names[2]),
+                  (names[1], names[3]), (names[2], names[3])]
+        if r > 0:
+            edges.append((f"b{r-1}.n3", names[0]))
+        blocks.append(tuple(names))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges),
+                     blocks=tuple(blocks) if with_blocks else ())
+
+
+# -- detection ---------------------------------------------------------------
+
+
+def test_builder_stack_emits_block_partition():
+    g = transformer_stack(layers=6, microbatches=2, groups=4)
+    assert len(g.blocks) == 12
+    part = g.template_partition()
+    assert part is not None
+    assert len(part.instances) == 12
+    # first / middle / last layers differ in boundary arity, nothing else
+    assert part.n_templates == 3
+    assert sorted(part.repeats().values()) == [2, 2, 8]
+    covered = sorted(i for inst in part.instances for i in inst)
+    assert covered == list(range(len(g.nodes)))
+
+
+def test_generic_fallback_detects_without_blocks():
+    g = _chain_of_blocks(8, with_blocks=False)
+    assert g.blocks == ()
+    part = detect_templates(g, min_repeats=4)
+    assert part is not None
+    assert len(part.instances) == 8
+    assert max(part.repeats().values()) >= 4
+    covered = sorted(i for inst in part.instances for i in inst)
+    assert covered == list(range(len(g.nodes)))
+
+
+def test_template_collision_one_node_cost_differs():
+    """Blocks differing only in ONE node's ops must NOT merge."""
+    clean = detect_templates(_chain_of_blocks(8), min_repeats=2)
+    bumped = detect_templates(_chain_of_blocks(8, perturb=3), min_repeats=2)
+    assert clean is not None and bumped is not None
+    assert bumped.n_templates == clean.n_templates + 1
+    # the perturbed instance sits alone in its template
+    t3 = bumped.template_of[3]
+    assert bumped.repeats()[t3] == 1
+    assert all(bumped.template_of[a] != t3 for a in range(8) if a != 3)
+
+
+def test_template_collision_bytes_differ():
+    g = _chain_of_blocks(8)
+    node = g.nodes[13]  # b3.n1
+    bumped = TaskGraph(
+        nodes=g.nodes[:13]
+        + (dataclasses.replace(node, out_bytes=node.out_bytes + 64.0),)
+        + g.nodes[14:],
+        edges=g.edges, blocks=g.blocks)
+    part = detect_templates(bumped, min_repeats=2)
+    clean = detect_templates(g, min_repeats=2)
+    assert part is not None and clean is not None
+    assert part.n_templates > clean.n_templates
+
+
+def test_detection_declines_irregular_graphs():
+    assert detect_templates(transformer_block()) is None      # one block
+    assert detect_templates(_chain_of_blocks(4)) is None      # < min_repeats
+    assert _chain_of_blocks(4).template_partition(min_repeats=2) is not None
+
+
+def test_signatures_are_name_blind():
+    a = detect_templates(_chain_of_blocks(8), min_repeats=2)
+    g = transformer_stack(layers=1, microbatches=8, groups=2, name="x")
+    h = transformer_stack(layers=1, microbatches=8, groups=2, name="y")
+    pa = detect_templates(g, min_repeats=2)
+    pb = detect_templates(h, min_repeats=2)
+    assert pa is not None and pb is not None
+    assert pa.signatures == pb.signatures
+    assert a is not None and a.signatures != pa.signatures
+
+
+# -- memoization (the PlanCache hot path) ------------------------------------
+
+
+def test_cost_signature_memoized_and_blocks_excluded():
+    g = transformer_stack(layers=2, microbatches=2)
+    assert g.cost_signature() is g.cost_signature()
+    assert g.task_specs() is g.task_specs()
+    assert g.edge_indices() is g.edge_indices()
+    bare = TaskGraph(nodes=g.nodes, edges=g.edges)   # blocks stripped
+    assert bare.cost_signature() == g.cost_signature()
+
+
+# -- the solve: exactness, floor, cache sharing ------------------------------
+
+
+def test_hierarchical_matches_engine_ground_truth():
+    devs = _devs()
+    g = transformer_stack(layers=6, microbatches=2, groups=4)
+    part = g.template_partition()
+    r = solve_hierarchical(devs, g.task_specs(), g.edge_indices(),
+                           partition=part, template_cache=TemplatePlanCache())
+    truth = graph_finish_times(devs, g.task_specs(), g.edge_indices(),
+                               r.assign, topology=BusTopology.from_spec(
+                                   "serialized", devs), order=r.order)
+    assert r.task_finish == truth
+    assert r.makespan == max(truth)
+
+
+def test_hierarchical_never_loses_to_one_device():
+    devs = _devs()
+    g = _chain_of_blocks(12)   # a pure chain: single device is optimal-ish
+    part = g.template_partition(min_repeats=2)
+    r = solve_hierarchical(devs, g.task_specs(), g.edge_indices(),
+                           partition=part, template_cache=TemplatePlanCache())
+    topo = BusTopology.from_spec("serialized", devs)
+    floor = min(
+        max(graph_finish_times(devs, g.task_specs(), g.edge_indices(),
+                               [j] * len(g), topology=topo))
+        for j in range(len(devs)))
+    assert r.makespan <= floor + 1e-12
+
+
+def test_hierarchical_within_bound_of_flat():
+    devs = _devs()
+    g = transformer_stack("stablelm-12b", layers=4, microbatches=2, groups=4)
+    flat = solve_list_schedule(devs, g.task_specs(), g.edge_indices(),
+                               refine=False)
+    hier = solve_hierarchical(devs, g.task_specs(), g.edge_indices(),
+                              partition=g.template_partition(),
+                              template_cache=TemplatePlanCache())
+    assert hier.makespan <= 1.10 * flat.makespan
+
+
+def test_template_cache_shared_across_depths():
+    devs = _devs()
+    cache = TemplatePlanCache()
+    shallow = transformer_stack(layers=6, microbatches=1, groups=4)
+    deep = transformer_stack(layers=20, microbatches=1, groups=4)
+    solve_hierarchical(devs, shallow.task_specs(), shallow.edge_indices(),
+                       partition=shallow.template_partition(),
+                       template_cache=cache)
+    misses = cache.misses
+    assert misses == 3 and cache.hits == 0
+    # different depth, same block geometry: every template is a cache hit
+    solve_hierarchical(devs, deep.task_specs(), deep.edge_indices(),
+                       partition=deep.template_partition(),
+                       template_cache=cache)
+    assert cache.misses == misses
+    assert cache.hits == 3
+
+
+def test_template_cache_lru_and_clear():
+    cache = TemplatePlanCache(capacity=2)
+    cache.put("a", (0,))
+    cache.put("b", (1,))
+    cache.put("c", (2,))
+    assert cache.get("a") is None
+    assert cache.get("c") == (2,)
+    cache.clear()
+    assert len(cache) == 0 and cache.hits == 0
+
+
+# -- runtime wiring ----------------------------------------------------------
+
+
+def test_domain_auto_selects_hierarchical():
+    devs = _devs()
+    g = transformer_stack(layers=6, microbatches=2, groups=4)
+    dom = TaskGraphDomain(devs)
+    hier = dom.optimize(devs, g)
+    ref = solve_hierarchical(devs, g.task_specs(), g.edge_indices(),
+                             partition=g.template_partition())
+    assert hier.makespan == ref.makespan and hier.assign == ref.assign
+    flat = TaskGraphDomain(devs, hierarchical=False).optimize(devs, g)
+    assert flat.iterations != hier.iterations   # different solve paths ran
+    # irregular graph: auto falls back to the flat path
+    blk = transformer_block()
+    assert blk.template_partition() is None
+    a = dom.optimize(devs, blk)
+    b = TaskGraphDomain(devs, hierarchical=False).optimize(devs, blk)
+    assert a.makespan == b.makespan and a.assign == b.assign
+
+
+def test_domain_end_to_end_schedule_valid():
+    from repro.core.graph import verify_graph_dependencies
+    devs = _devs()
+    g = ssm_stack(layers=4, microbatches=2, seq=2048, chunk=512)
+    dom = TaskGraphDomain(devs)
+    assert g.template_partition(min_repeats=2) is not None
+    opt = dom.optimize(devs, g)
+    plan = dom.adapt(devs, opt, g)
+    sched = dom.schedule(devs, plan, g)
+    assert verify_graph_dependencies(g, sched.timeline) == []

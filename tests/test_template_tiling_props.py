@@ -1,0 +1,76 @@
+"""Template tiling — the exactness property (DESIGN.md §15).
+
+Whatever assignment ``solve_hierarchical`` stitches (random block
+shapes, random repeat counts, boundary fan-in, the seam-descent polish
+on top), the finish times it reports must be *byte-identical* to the
+engine's from-scratch simulation of that assignment: tiling is a
+placement strategy, never a pricing approximation.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BusTopology, CopyModel, DeviceProfile,
+                        LinearTimeModel, NO_COPY, TaskGraph, TaskNode,
+                        TemplatePlanCache, graph_finish_times,
+                        solve_hierarchical)
+
+
+def _devs():
+    return [
+        DeviceProfile("cpu", "cpu", LinearTimeModel(a=1 / 5e12, b=1e-4),
+                      NO_COPY),
+        DeviceProfile("gpu0", "gpu", LinearTimeModel(a=1 / 60e12, b=5e-5),
+                      CopyModel(16e9, dtype_size=4)),
+        DeviceProfile("gpu1", "gpu", LinearTimeModel(a=1 / 25e12, b=8e-5),
+                      CopyModel(8e9, dtype_size=4)),
+    ]
+
+
+_bytes = st.one_of(st.just(0.0), st.floats(1e3, 1e8))
+
+
+@st.composite
+def _tiled_graph(draw):
+    """R repeats of one random block, chained tail→head, with builder
+    ``blocks`` metadata (zero byte counts mixed in so the free
+    same-device / no-output fast paths are exercised)."""
+    k = draw(st.integers(2, 5))
+    block_edges = tuple((u, v) for u in range(k) for v in range(u + 1, k)
+                        if draw(st.booleans()))
+    costs = [(draw(st.floats(1e8, 1e12)), draw(_bytes), draw(_bytes))
+             for _ in range(k)]
+    repeats = draw(st.integers(4, 7))
+    nodes, edges, blocks = [], [], []
+    for r in range(repeats):
+        names = [f"b{r}.n{i}" for i in range(k)]
+        for i, (ops, inb, outb) in enumerate(costs):
+            nodes.append(TaskNode(names[i], ops=ops, in_bytes=inb,
+                                  out_bytes=outb))
+        edges.extend((names[u], names[v]) for u, v in block_edges)
+        if r > 0:
+            edges.append((f"b{r-1}.n{k-1}", names[0]))
+        blocks.append(tuple(names))
+    return TaskGraph(nodes=tuple(nodes), edges=tuple(edges),
+                     blocks=tuple(blocks))
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=_tiled_graph())
+def test_tiled_finish_times_equal_from_scratch_simulation(g):
+    devs = _devs()
+    part = g.template_partition(min_repeats=2)
+    assert part is not None
+    r = solve_hierarchical(devs, g.task_specs(), g.edge_indices(),
+                           partition=part,
+                           template_cache=TemplatePlanCache())
+    truth = graph_finish_times(
+        devs, g.task_specs(), g.edge_indices(), r.assign,
+        topology=BusTopology.from_spec("serialized", devs), order=r.order)
+    assert r.task_finish == truth
+    assert r.makespan == max(truth)
+    assert len({a for a in r.assign}) >= 1 and all(
+        0 <= a < len(devs) for a in r.assign)
