@@ -1,0 +1,311 @@
+"""Cluster-level scheduling benchmark — the §16 device-to-cluster story,
+emitted as ``BENCH_cluster.json`` (a CI artifact alongside the graph and
+scheduler benches).
+
+One synthetic 2-host x 3-device stack (DESIGN.md §16): host ``h0`` holds a
+40 TFLOP/s and a 30 TFLOP/s accelerator on one PCIe bus, host ``h1`` holds
+a second 40 TFLOP/s part, and the hosts talk over a capped NIC that is an
+order of magnitude slower than the intra-host links.  Three sections, each
+hard-asserted and guarded by ``run.py --check``:
+
+* **placement** — cluster-aware vs NIC-oblivious placement of a layered
+  all-to-all DAG (every task of layer *l+1* reads every layer-*l* output,
+  so any two-host placement pays real NIC crossings).  The baseline solves
+  under ``topology.flatten()`` — same links and attach rows, hierarchy
+  erased, i.e. exactly what the pre-§16 single-host planner saw — and its
+  assignment is then priced under the *cluster* truth with
+  ``graph_finish_times``.  Acceptance: the cluster-aware plan beats the
+  flat plan's true cost by ≥ ``CLUSTER_AWARE_FLOOR``.
+* **pareto** — the pluggable makespan/energy objective swept over
+  ``PARETO_WEIGHTS`` (seconds-per-joule exchange rates) on powered device
+  profiles (``idle_watts`` + ``joules_per_op``).  The free-assignment
+  space is kept small enough that the solver enumerates it exhaustively,
+  so each point is the true optimum of its score and the exchange
+  argument guarantees monotonicity.  Acceptance: makespan non-decreasing
+  and energy non-increasing along the sweep, the front is not degenerate
+  (≥ 2 distinct energy levels), and the ``weight=0`` knob is
+  bit-identical to ``objective=None`` (assign, order, makespan).
+* **device_loss** — mid-stream device departure as a change-point
+  (DESIGN.md §16): a job planned on all three devices meets a ground
+  truth where ``h1.a`` runs ``DEAD_FACTOR`` x slow (a dying part).  The
+  locked-in baseline rides the stale plan to completion; the rescue run
+  calls ``CoExecutionRuntime.device_leave`` at 25% of the planned
+  makespan — frontier freeze, pinned re-solve with the departed device
+  banned, splice (reason ``"device-loss"``).  Acceptance: rescue beats
+  locked-in by ≥ ``RESCUE_FLOOR``, the splice respects every DAG
+  dependency, and no spliced task runs on the departed device.
+
+All three sections are deterministic model quantities (virtual executor,
+fixed profiles) — the ``*makespan_s`` / ``*speedup`` keys land in run.py's
+regression guard buckets on purpose.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from repro.core import (BusTopology, Objective, TaskGraphDomain,
+                        graph_finish_times, solve_list_schedule)
+from repro.core.device_model import CopyModel, DeviceProfile, LinearTimeModel
+from repro.core.graph import TaskGraph, TaskNode, verify_graph_dependencies
+from repro.core.runtime import CoExecutionRuntime, truth_from_profiles
+
+from .common import emit, timed
+
+OUT_PATH = os.environ.get("BENCH_CLUSTER_PATH", "BENCH_cluster.json")
+
+CLUSTER_AWARE_FLOOR = 1.10   # cluster-aware vs NIC-oblivious true cost
+RESCUE_FLOOR = 1.10          # device-loss rescue vs locked-in plan
+DEAD_FACTOR = 50.0           # how slow the dying device really runs
+LOSS_AT_FRACTION = 0.25      # departure notice at 25% of planned makespan
+PARETO_WEIGHTS = (0.0, 2e-5, 1e-4, 5e-4, 2e-3)   # seconds per joule
+
+# the 2-host x 3-device stack (DESIGN.md §16): per-host PCIe/NVLink-class
+# staging links, cross-host traffic through one capped NIC
+STACK = (("h0", (("h0.a", 40.0), ("h0.b", 30.0))),
+         ("h1", (("h1.a", 40.0),)))
+# power table for the energy objective: h0 parts are fast but hungry,
+# h1.a is the efficient part (so the knob has a real trade to make)
+POWER = {"h0.a": (2.0, 4e-10), "h0.b": (1.5, 3e-10), "h1.a": (0.5, 0.8e-10)}
+
+
+def _device(name: str, tflops: float, copy_bw: float, *,
+            powered: bool = False) -> DeviceProfile:
+    d = DeviceProfile(name, "gpu",
+                      LinearTimeModel(2.0 / (tflops * 1e12), 1e-6),
+                      CopyModel(copy_bw, dtype_size=2))
+    if powered:
+        idle_w, jpo = POWER[name]
+        return d.with_power(idle_watts=idle_w, joules_per_op=jpo)
+    return d
+
+
+def _cluster(*, copy_bw: float = 15.75e9, nic_bw: float = 2e9,
+             powered: bool = False
+             ) -> tuple[list[DeviceProfile], BusTopology]:
+    hosts = {hname: [_device(n, tf, copy_bw, powered=powered)
+                     for n, tf in members]
+             for hname, members in STACK}
+    devs = [d for hname, _ in STACK for d in hosts[hname]]
+    topo = BusTopology.cluster(hosts, nic_bandwidth_bytes_per_s=nic_bw,
+                               nic_latency_s=1e-5)
+    return devs, topo
+
+
+def _layered(width: int, layers: int, ops: float, nbytes: float) -> TaskGraph:
+    """All-to-all layered DAG: layer l+1 reads every layer-l output."""
+    nodes, edges = [], []
+    for l in range(layers):
+        for w in range(width):
+            nodes.append(TaskNode(f"l{l}.t{w}", ops, nbytes, nbytes))
+            if l:
+                edges.extend((f"l{l-1}.t{p}", f"l{l}.t{w}")
+                             for p in range(width))
+    return TaskGraph(tuple(nodes), tuple(edges))
+
+
+def _chains(n_chains: int, n_stages: int, ops: float,
+            nbytes: float) -> TaskGraph:
+    nodes, edges = [], []
+    for c in range(n_chains):
+        for s in range(n_stages):
+            nodes.append(TaskNode(f"c{c}.s{s}", ops, nbytes, nbytes))
+            if s:
+                edges.append((f"c{c}.s{s - 1}", f"c{c}.s{s}"))
+    return TaskGraph(tuple(nodes), tuple(edges))
+
+
+def _cross_host(topo: BusTopology, devs, edges, assign) -> int:
+    host = [topo.host_index(d.name) for d in devs]
+    return sum(1 for (u, v) in edges
+               if host[assign[u]] != host[assign[v]])
+
+
+# ---------------------------------------------------------------------------
+# placement: cluster-aware vs NIC-oblivious flat
+# ---------------------------------------------------------------------------
+
+
+def placement_rows() -> dict:
+    # NVLink-class staging (cheap intra-host moves) + a 1 GB/s NIC: the
+    # flat planner happily spreads every layer across both hosts
+    devs, topo = _cluster(copy_bw=100e9, nic_bw=1e9)
+    g = _layered(width=4, layers=6, ops=1e10, nbytes=4e6)
+    tasks, edges = g.task_specs(), g.edge_indices()
+    aware = solve_list_schedule(devs, tasks, edges, bus=topo)
+    flat = solve_list_schedule(devs, tasks, edges, bus=topo.flatten())
+    # the flat plan's TRUE cost: its assignment priced under the cluster
+    flat_truth = max(graph_finish_times(devs, tasks, edges, flat.assign,
+                                        topology=topo, order=flat.order))
+    return {
+        "n_tasks": len(tasks),
+        "n_edges": len(edges),
+        "aware_makespan_s": aware.makespan,
+        "flat_planned_makespan_s": flat.makespan,   # what flat believed
+        "flat_truth_makespan_s": flat_truth,        # what it really costs
+        "cluster_speedup": flat_truth / aware.makespan,
+        "aware_cross_host_edges": _cross_host(topo, devs, edges,
+                                              aware.assign),
+        "flat_cross_host_edges": _cross_host(topo, devs, edges, flat.assign),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pareto: the makespan/energy objective knob
+# ---------------------------------------------------------------------------
+
+
+def pareto_rows() -> dict:
+    devs, topo = _cluster(powered=True)
+    g = _chains(n_chains=2, n_stages=4, ops=5e9, nbytes=1e5)
+    tasks, edges = g.task_specs(), g.edge_indices()
+    # 3^8 = 6561 assignments: below the raised exhaustive limit, so every
+    # point is the true optimum of its score (monotonicity is then a
+    # theorem, not a solver accident)
+    solve = dict(bus=topo, exhaustive_limit=20000, max_evals=20001)
+    points = []
+    for w in PARETO_WEIGHTS:
+        r = solve_list_schedule(devs, tasks, edges,
+                                objective=Objective(energy_weight=w),
+                                **solve)
+        points.append({"energy_weight": w, "makespan_s": r.makespan,
+                       "energy_j": r.energy_j,
+                       "assign": list(r.assign)})
+    base = solve_list_schedule(devs, tasks, edges, **solve)
+    zero = solve_list_schedule(devs, tasks, edges,
+                               objective=Objective(energy_weight=0.0),
+                               **solve)
+    return {
+        "weights": list(PARETO_WEIGHTS),
+        "points": points,
+        "zero_weight_bit_identical": (
+            list(base.assign) == list(zero.assign)
+            and list(base.order) == list(zero.order)
+            and base.makespan == zero.makespan),
+        "energy_span_j": points[0]["energy_j"] - points[-1]["energy_j"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# device_loss: departure change-point vs locked-in plan
+# ---------------------------------------------------------------------------
+
+
+def device_loss_rows() -> dict:
+    lost = "h1.a"
+    base_devs, _ = _cluster()
+    truth = truth_from_profiles(
+        base_devs,
+        lambda uid, name: DEAD_FACTOR if name == lost else 1.0)
+    g = _chains(n_chains=6, n_stages=4, ops=5e9, nbytes=1e5)
+
+    def run(rescue: bool):
+        devs, topo = _cluster()
+        dom = TaskGraphDomain(devs, bus=topo, dynamic=True)
+        with CoExecutionRuntime(dom, executor="virtual", truth=truth,
+                                feedback=False, max_inflight=1) as rt:
+            job = rt.submit(g)
+            job.wait(60)
+            planned = job.plan.schedule.timeline.makespan
+            if not rescue:
+                return job.measured.makespan, planned, [], job
+            at = LOSS_AT_FRACTION * planned
+            recs = rt.device_leave(lost, at=at)
+            return job.measured.makespan, planned, recs, job
+
+    locked, planned, _, _ = run(rescue=False)
+    rescued, _, recs, job = run(rescue=True)
+    assert recs, "device_leave produced no rescue record"
+    rec = recs[-1]
+    violations = verify_graph_dependencies(rec.spec, job.measured)
+    # no spliced (re-solved frontier) task may run on the departed device;
+    # frozen tasks that started before the loss legitimately finish there
+    spliced = set(rec.spliced)
+    stray = sorted({e.task for e in job.measured.events
+                    if e.task in spliced and e.device == lost})
+    return {
+        "lost_device": lost,
+        "dead_factor": DEAD_FACTOR,
+        "planned_makespan_s": planned,
+        "loss_at_s": rec.at,
+        "locked_in_makespan_s": locked,
+        "rescued_makespan_s": rescued,
+        "rescue_speedup": locked / rescued,
+        "replan_reason": rec.reason,
+        "frozen": len(rec.frozen),
+        "spliced": len(rec.spliced),
+        "invariant_violations": list(violations),
+        "spliced_tasks_on_lost_device": stray,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    report: dict = {
+        "stack": {hname: [{"name": n, "tflops": tf,
+                           "idle_watts": POWER[n][0],
+                           "joules_per_op": POWER[n][1]}
+                          for n, tf in members]
+                  for hname, members in STACK},
+    }
+    placement, t = timed(placement_rows, repeats=1)
+    report["placement"] = placement
+    emit("cluster_placement", t * 1e6,
+         f"x{placement['cluster_speedup']:.2f}_vs_flat")
+    pareto, t = timed(pareto_rows, repeats=1)
+    report["pareto"] = pareto
+    emit("cluster_pareto", t * 1e6,
+         f"span{pareto['energy_span_j']:.2f}J")
+    loss, t = timed(device_loss_rows, repeats=1)
+    report["device_loss"] = loss
+    emit("cluster_device_loss", t * 1e6,
+         f"x{loss['rescue_speedup']:.2f}_vs_locked_in")
+
+    pts = pareto["points"]
+    acceptance = {
+        "cluster_aware_beats_flat": (
+            placement["cluster_speedup"] >= CLUSTER_AWARE_FLOOR),
+        "pareto_monotone": all(
+            pts[i]["makespan_s"] <= pts[i + 1]["makespan_s"] + 1e-12
+            and pts[i]["energy_j"] >= pts[i + 1]["energy_j"] - 1e-12
+            for i in range(len(pts) - 1)),
+        "pareto_settings": len(pts),
+        "pareto_nondegenerate": pareto["energy_span_j"] > 1e-9,
+        "zero_weight_bit_identical": pareto["zero_weight_bit_identical"],
+        "rescue_beats_locked_in": (
+            loss["rescue_speedup"] >= RESCUE_FLOOR),
+        "rescue_reason_is_device_loss": loss["replan_reason"]
+        == "device-loss",
+        "rescue_respects_dependencies": not loss["invariant_violations"],
+        "rescue_avoids_lost_device": not loss["spliced_tasks_on_lost_device"],
+    }
+    report["acceptance"] = acceptance
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    assert acceptance["cluster_aware_beats_flat"], (
+        f"cluster-aware placement only "
+        f"{placement['cluster_speedup']:.3f}x over flat "
+        f"(floor {CLUSTER_AWARE_FLOOR})")
+    assert acceptance["pareto_settings"] >= 3, "need >= 3 knob settings"
+    assert acceptance["pareto_monotone"], (
+        f"non-monotone makespan/energy front: {pts}")
+    assert acceptance["pareto_nondegenerate"], (
+        "energy knob is inert: every weight produced the same energy")
+    assert acceptance["zero_weight_bit_identical"], (
+        "Objective(0.0) diverged from objective=None")
+    assert acceptance["rescue_beats_locked_in"], (
+        f"device-loss rescue only {loss['rescue_speedup']:.3f}x over "
+        f"locked-in (floor {RESCUE_FLOOR})")
+    assert acceptance["rescue_reason_is_device_loss"], loss["replan_reason"]
+    assert acceptance["rescue_respects_dependencies"], (
+        loss["invariant_violations"])
+    assert acceptance["rescue_avoids_lost_device"], (
+        loss["spliced_tasks_on_lost_device"])
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,9 @@ Sections:
               EFT baseline, partial re-solve latency, template-tiled
               hierarchical solves up to 30k nodes (scheduler; writes
               BENCH_scheduler.json — uploaded in CI)
+  §Cluster  — cluster-aware vs NIC-oblivious placement on a 2-host stack,
+              makespan/energy Pareto sweep, device-loss rescue vs locked-in
+              plan (cluster; writes BENCH_cluster.json — uploaded in CI)
   §Tenants  — weighted-fair + preemptive admission vs FIFO on one shared
               core, per-tier latency percentiles (runtime_tenants; writes
               BENCH_runtime.json — uploaded in CI)
@@ -58,7 +61,7 @@ import traceback
 
 BENCH_FILES = ("BENCH_timeline.json", "BENCH_streaming.json",
                "BENCH_graph.json", "BENCH_scheduler.json",
-               "BENCH_runtime.json")
+               "BENCH_cluster.json", "BENCH_runtime.json")
 TOLERANCE = float(os.environ.get("BENCH_REGRESSION_TOL", "0.10"))
 LATENCY_TOL = float(os.environ.get("BENCH_LATENCY_TOL", "0.15"))
 # wall-clock latency leaves that ARE gated (path suffix -> direction):
@@ -113,9 +116,12 @@ def load_baselines() -> dict[str, dict[str, tuple[str, float]]]:
 def check_regressions(baselines: dict[str, dict[str, tuple[str, float]]],
                       tolerance: float = TOLERANCE) -> list[str]:
     """Compare freshly-emitted reports against the snapshotted baselines.
-    Returns human-readable regression lines (empty = pass).  Keys present
-    only on one side are ignored — new sections extend the baseline, they
-    don't regress it."""
+    Returns human-readable regression lines (empty = pass).  Keys only in
+    the FRESH report are ignored — new sections extend the baseline, they
+    don't regress it.  Keys only in the BASELINE are a failure, listed by
+    name: a silently-vanished metric means a section stopped emitting a
+    quantity the guard was protecting (a rename or a dropped section),
+    and skipping it would turn the guard off without anyone noticing."""
     problems: list[str] = []
     for fname, base in baselines.items():
         try:
@@ -123,6 +129,14 @@ def check_regressions(baselines: dict[str, dict[str, tuple[str, float]]],
                 new = _metrics(json.load(f))
         except (OSError, ValueError):
             continue   # the section failed; already reported as ERROR
+        missing = sorted(p for p in base if p not in new)
+        if missing:
+            shown = ", ".join(missing[:8])
+            more = f" (+{len(missing) - 8} more)" if len(missing) > 8 else ""
+            problems.append(
+                f"{fname}: {len(missing)} baseline metric(s) missing from "
+                f"the fresh report: {shown}{more} — a renamed or dropped "
+                f"section must update the committed baseline")
         for path, (direction, bval) in base.items():
             if path not in new or bval <= 0.0:
                 continue
@@ -178,14 +192,15 @@ def main() -> None:
     if len(sys.argv) == 3 and sys.argv[1] == "--check":
         _check(sys.argv[2])
         return
-    from . import (exec_time, graph, plan_cache, prediction_accuracy,
-                   roofline, runtime_tenants, scheduler, speedup,
-                   streaming, timeline, work_distribution)
+    from . import (cluster, exec_time, graph, plan_cache,
+                   prediction_accuracy, roofline, runtime_tenants,
+                   scheduler, speedup, streaming, timeline,
+                   work_distribution)
     baselines = load_baselines()
     failures: list[str] = []
     for mod in (prediction_accuracy, work_distribution, speedup, exec_time,
                 roofline, plan_cache, timeline, streaming, graph, scheduler,
-                runtime_tenants):
+                cluster, runtime_tenants):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:

@@ -25,8 +25,9 @@ from .device_model import (CopyModel, DeviceProfile, LinearTimeModel, NO_COPY,
                            TPU_VMEM_BYTES)
 from .predict import (Profiler, fit_linear, host_cpu_runner, load_profiles,
                       relative_error, rmse, save_profiles, simulated_runner)
-from .optimize import (GraphScheduleResult, OptimizeResult,
-                       SHARED_TEMPLATE_CACHE, TemplatePlanCache,
+from .optimize import (GraphScheduleResult, MAKESPAN_OBJECTIVE, Objective,
+                       OptimizeResult, SHARED_TEMPLATE_CACHE,
+                       TemplatePlanCache, divisible_energy, graph_energy,
                        solve_analytic, solve_bisection, solve_hierarchical,
                        solve_list_schedule, solve_local_search)
 from .adapt import (DeviceAssignment, GemmPlan, SubProduct, decompose_square,
@@ -87,4 +88,5 @@ __all__ = [
     "verify_graph_dependencies",
     "SHARED_TEMPLATE_CACHE", "TemplatePlanCache", "TemplatePartition",
     "detect_templates", "solve_hierarchical",
+    "MAKESPAN_OBJECTIVE", "Objective", "divisible_energy", "graph_energy",
 ]

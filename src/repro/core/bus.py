@@ -278,6 +278,15 @@ class BusTopology:
     links: tuple[Link, ...]
     attach: tuple[tuple[str, str | None, str | None], ...]
     spec: str = "custom"   # short tag carried into OptimizeResult.bus
+    # hierarchical (multi-host) extension: ``hosts`` groups device names
+    # into host islands; a DAG edge whose producer and consumer live on
+    # different hosts pays an extra NIC hop (``nic`` bandwidth cap plus
+    # ``nic_latency_s``) between the producer's host-stage and the
+    # consumer's copy_in.  Empty ``hosts`` means a flat (single-host)
+    # topology and the engine takes the exact pre-existing code path.
+    hosts: tuple[tuple[str, tuple[str, ...]], ...] = ()
+    nic: Link | None = None
+    nic_latency_s: float = 0.0
 
     def __post_init__(self) -> None:
         by_name = {l.name: l for l in self.links}
@@ -295,6 +304,14 @@ class BusTopology:
         # feasibility hot path; frozen dataclass, so set via object.*)
         object.__setattr__(self, "_in_map", in_map)
         object.__setattr__(self, "_out_map", out_map)
+        host_of: dict[str, int] = {}
+        for hi, (_hname, members) in enumerate(self.hosts):
+            for dev in members:
+                if dev in host_of:
+                    raise ValueError(f"device {dev!r} listed under two "
+                                     "hosts")
+                host_of[dev] = hi
+        object.__setattr__(self, "_host_of", host_of)
 
     # -- construction -------------------------------------------------------
 
@@ -341,6 +358,31 @@ class BusTopology:
         return cls(links=lks, attach=tuple(rows), spec=spec)
 
     @classmethod
+    def cluster(cls, hosts: Mapping[str, Sequence[DeviceProfile]], *,
+                nic_bandwidth_bytes_per_s: float,
+                nic_latency_s: float = 0.0,
+                bus: str = "pcie") -> "BusTopology":
+        """Multi-host stack: each host gets its own internal shared bus
+        (``{host}.{bus}``, the paper's serialized model per island) and
+        hosts talk through one capped NIC.  Cross-host DAG edges price as
+        a two-hop staged copy: producer host-stage -> NIC -> consumer
+        copy_in (DESIGN.md §16)."""
+        links: list[Link] = []
+        attach: list[tuple[str, str | None, str | None]] = []
+        groups: list[tuple[str, tuple[str, ...]]] = []
+        for hname, devs in hosts.items():
+            lk = Link(f"{hname}.{bus}")
+            links.append(lk)
+            for d in devs:
+                attach.append((d.name, lk.name, lk.name) if _has_copy(d)
+                              else (d.name, None, None))
+            groups.append((hname, tuple(d.name for d in devs)))
+        nic = Link("nic", bandwidth_bytes_per_s=nic_bandwidth_bytes_per_s)
+        return cls(links=tuple(links), attach=tuple(attach),
+                   spec="cluster", hosts=tuple(groups), nic=nic,
+                   nic_latency_s=nic_latency_s)
+
+    @classmethod
     def from_spec(cls, bus: "BusTopology | str | None",
                   devices: Sequence[DeviceProfile]) -> "BusTopology":
         """Resolve the legacy ``bus=`` strings (and None) to a topology."""
@@ -368,6 +410,27 @@ class BusTopology:
         link if they do copy."""
         table = self._in_map if kind in ("in", "copy_in") else self._out_map
         return table.get(device)
+
+    def is_hierarchical(self) -> bool:
+        """True when the topology groups devices into host islands."""
+        return bool(self.hosts)
+
+    def host_index(self, device: str) -> int | None:
+        """Index of the host island holding ``device`` (None when flat or
+        the device is not listed under any host)."""
+        return self._host_of.get(device)
+
+    def flatten(self) -> "BusTopology":
+        """NIC-oblivious view: same links and attach rows, hierarchy
+        erased — what a single-host planner would see.  The baseline for
+        the cluster-aware placement comparison."""
+        if not self.hosts:
+            return self
+        # distinct spec tag: context caches key on (devices, priority,
+        # spec), and the flat view prices differently from the hierarchy
+        return dataclasses.replace(self, hosts=(), nic=None,
+                                   nic_latency_s=0.0,
+                                   spec=self.spec + "-flat")
 
     def is_contended(self) -> bool:
         """True if any link serializes copies of two or more devices."""
@@ -682,7 +745,7 @@ class GraphSimContext:
                  "in_link", "in_lname", "out_link", "out_lname", "dev_name",
                  "sim_positions", "link_names", "in_lid", "out_lid",
                  "has_out", "has_in", "ext_in", "par_in", "stage_out",
-                 "comp", "_np", "_ext_seed")
+                 "comp", "host_id", "hier", "nic_dur", "_np", "_ext_seed")
 
     # every per-graph table that depends only on (devices, tasks, edges,
     # topo, order) — shared, not copied, by ``rebind``
@@ -690,7 +753,8 @@ class GraphSimContext:
                      "parents", "children", "pos_of", "has_copy", "in_link",
                      "in_lname", "out_link", "out_lname", "dev_name",
                      "link_names", "in_lid", "out_lid", "has_out", "has_in",
-                     "ext_in", "par_in", "stage_out", "comp", "_np")
+                     "ext_in", "par_in", "stage_out", "comp", "host_id",
+                     "hier", "nic_dur", "_np")
 
     def __init__(self, devices: Sequence[DeviceProfile],
                  tasks: Sequence[TaskSpec],
@@ -771,6 +835,26 @@ class GraphSimContext:
                 self.comp.append((tm.a * ops + tm.b).tolist())
             else:
                 self.comp.append([tm(t.ops) for t in self.tasks])
+        # hierarchical topologies: host island per device plus the per-task
+        # NIC hop (out_bytes / nic_bw + nic_latency) a cross-host edge pays
+        # between the producer's host-stage and the consumer's copy_in.
+        # Flat topologies keep hier=False and never read these — the exact
+        # pre-hierarchy float sequence (byte-identity, DESIGN.md §12/§16).
+        self.hier = topo.is_hierarchical()
+        if self.hier:
+            self.host_id = [-1 if (h := topo.host_index(d.name)) is None
+                            else h for d in self.devices]
+            nic_bw = (topo.nic.bandwidth_bytes_per_s
+                      if topo.nic is not None else None)
+            lat = topo.nic_latency_s
+            if nic_bw is None or math.isinf(nic_bw):
+                self.nic_dur = np.where(out_b <= 0.0, 0.0, lat).tolist()
+            else:
+                self.nic_dur = np.where(out_b <= 0.0, 0.0,
+                                        out_b / nic_bw + lat).tolist()
+        else:
+            self.host_id = [-1] * len(self.devices)
+            self.nic_dur = zeros
         self._np = None   # lazy numpy views of the duration tables
         self._ext_seed = None   # lazy (compute_end, avail, finish) template
 
@@ -830,7 +914,8 @@ class _NpTables:
     IEEE float64 operations over them match the scalar engine exactly."""
 
     __slots__ = ("has_copy", "ext_in", "par_in", "stage_out", "comp",
-                 "in_lid", "out_lid", "idx", "same_link")
+                 "in_lid", "out_lid", "idx", "same_link", "hier", "host",
+                 "nic_dur")
 
     def __init__(self, ctx: "GraphSimContext"):
         self.has_copy = np.array(ctx.has_copy, dtype=bool)
@@ -843,6 +928,9 @@ class _NpTables:
         self.idx = np.arange(len(ctx.devices))
         self.same_link = np.array([a == b for a, b in
                                    zip(ctx.in_lid, ctx.out_lid)])
+        self.hier = ctx.hier
+        self.host = np.array(ctx.host_id, dtype=np.intp)
+        self.nic_dur = np.array(ctx.nic_dur)
 
 
 class GraphSimState:
@@ -936,6 +1024,39 @@ class GraphSimState:
         st.placed = self.placed
         return st
 
+    # -- energy accounting (DESIGN.md §16) -----------------------------------
+
+    def device_busy(self) -> list[float]:
+        """Per-device busy seconds of the current assignment: the sum of
+        each placed non-ext task's compute time on its device, from the
+        same ``ctx.comp`` table the simulation prices.  Assignment-
+        determined, so valid before *and* after ``advance``."""
+        ctx = self.ctx
+        busy = [0.0] * len(ctx.devices)
+        for i in range(ctx.n):
+            j = self.assign[i]
+            if j >= 0 and self.placed[i] and i not in ctx.ext:
+                busy[j] += ctx.comp[j][i]
+        return busy
+
+    def energy_joules(self, makespan: float | None = None) -> float:
+        """Total joules under the device power models: per-op dynamic
+        energy plus idle watts over each device's schedule gap.  With no
+        ``makespan`` given, uses the simulated finish horizon."""
+        ctx = self.ctx
+        if makespan is None:
+            makespan = max(self.finish, default=0.0)
+        busy = self.device_busy()
+        e = 0.0
+        for i in range(ctx.n):
+            j = self.assign[i]
+            if j >= 0 and self.placed[i] and i not in ctx.ext:
+                e += ctx.devices[j].joules_per_op * float(ctx.tasks[i].ops)
+        for d, b in zip(ctx.devices, busy):
+            if d.idle_watts > 0.0 and makespan > b:
+                e += d.idle_watts * (makespan - b)
+        return e
+
     # -- clock reads (None = carried-over start) -----------------------------
 
     def link_clock_id(self, lid: int) -> float:
@@ -1003,6 +1124,7 @@ class GraphSimState:
         stage_out_t, comp_t = ctx.stage_out, ctx.comp
         link_names, dev_name = ctx.link_names, ctx.dev_name
         clocks = ctx.clocks
+        hier, host_t, nic_t = ctx.hier, ctx.host_id, ctx.nic_dur
         inf = math.inf
         for idx in range(lo, hi):
             i = order[sp[idx]]
@@ -1011,6 +1133,7 @@ class GraphSimState:
                 continue
             lid = in_lid_t[j]
             hc = has_copy[j]
+            hj = host_t[j] if hier else -1
             ready = 0.0
             if hc and has_in[i]:
                 s = lclock[lid]
@@ -1027,11 +1150,19 @@ class GraphSimState:
                     r = compute_end[u]             # same device: free
                 elif not hc or not has_out[u]:
                     r = avail[u]                   # host reads staged copy
+                    if hier and hj >= 0:
+                        q = assign[u]
+                        if q >= 0 and 0 <= host_t[q] != hj:
+                            r += nic_t[u]          # staged on a remote host
                 else:
                     s = lclock[lid]
                     if s is None:
                         s = clocks.link(link_names[lid])
                     au = avail[u]
+                    if hier and hj >= 0:
+                        q = assign[u]
+                        if q >= 0 and 0 <= host_t[q] != hj:
+                            au += nic_t[u]         # NIC hop before copy_in
                     if au > s:
                         s = au
                     s += pin[u]
@@ -1110,7 +1241,11 @@ class GraphSimState:
             lclock[in_lid] = s + dur
             ready = s + dur
 
-        # precedence edges
+        # precedence edges (cross-host producers pay the NIC hop as a
+        # delay on their staged output's availability — DESIGN.md §16)
+        hier = ctx.hier
+        host_t, nic_t = ctx.host_id, ctx.nic_dur
+        hj = host_t[j] if hier else -1
         par_in = ctx.par_in[j]
         for u in ctx.parents[i]:
             if not placed[u]:
@@ -1119,12 +1254,20 @@ class GraphSimState:
                 r = compute_end[u]             # same device: free
             elif not has_copy or not ctx.has_out[u]:
                 r = avail[u]                   # host reads the staged copy
+                if hier and hj >= 0:
+                    q = assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        r += nic_t[u]          # staged on a remote host
             else:
                 dur = par_in[u]
                 s = lclock[in_lid]
                 if s is None:
                     s = ctx.clocks.link(ctx.link_names[in_lid])
                 au = avail[u]
+                if hier and hj >= 0:
+                    q = assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        au += nic_t[u]         # NIC hop before copy_in
                 if au > s:
                     s = au
                 if events is not None:
@@ -1215,6 +1358,9 @@ class GraphSimState:
             s = self.link_clock_id(in_lid)
             lc = s + ctx.ext_in[j][i]
             ready = lc
+        hier = ctx.hier
+        host_t, nic_t = ctx.host_id, ctx.nic_dur
+        hj = host_t[j] if hier else -1
         par_in = ctx.par_in[j]
         for u in ctx.parents[i]:
             if not placed[u]:
@@ -1223,9 +1369,17 @@ class GraphSimState:
                 r = self.compute_end[u]
             elif not has_copy or not ctx.has_out[u]:
                 r = self.avail[u]
+                if hier and hj >= 0:
+                    q = assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        r += nic_t[u]
             else:
                 s = lc if lc is not None else self.link_clock_id(in_lid)
                 au = self.avail[u]
+                if hier and hj >= 0:
+                    q = assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        au += nic_t[u]
                 if au > s:
                     s = au
                 lc = s + par_in[u]
@@ -1273,6 +1427,7 @@ class GraphSimState:
         compute_end, avail, reclaim = self.compute_end, self.avail, \
             self.reclaim
         mypos = self.pos
+        hier, host_t, nic_t = ctx.hier, ctx.host_id, ctx.nic_dur
         flip: list[int | None] = [None] * nd
         slack = [0.0] * nd
         lc: list[float | None] = [None] * nd
@@ -1322,17 +1477,24 @@ class GraphSimState:
             # peek contribution, lane by lane (scalar op order per lane)
             ceu = compute_end[u]
             avu = avail[u]
+            hq = host_t[au] if (hier and au >= 0) else -1
+            ndur = nic_t[u]
             for j in range(nd):
                 if au == j:
                     r = ceu
                 elif not has_copy[j] or not hou:
                     r = avu
+                    if hq >= 0 and 0 <= host_t[j] != hq:
+                        r += ndur
                 else:
                     s = lc[j]
                     if s is None:
                         s = self.link_clock_id(in_lid[j])
-                    if avu > s:
-                        s = avu
+                    a2 = avu
+                    if hq >= 0 and 0 <= host_t[j] != hq:
+                        a2 += ndur
+                    if a2 > s:
+                        s = a2
                     s += par_in[j][u]
                     lc[j] = s
                     r = s
@@ -1571,17 +1733,28 @@ class GraphSimBatch:
             nd = lclock[:, in_lid] + ctx.ext_in[j][i]
             lclock[:, in_lid] = nd
             ready = nd
+        hier = ctx.hier
+        host_t, nic_t = ctx.host_id, ctx.nic_dur
+        hj = host_t[j] if hier else -1
         par_in = ctx.par_in[j]
         for u in ctx.parents[i]:
             if not placed[u]:
                 continue
             if u == mv:
+                # producer device lane-varies: the NIC hop applies on
+                # lanes whose candidate host differs from j's host
+                av = avail[:, u]
+                if hier and hj >= 0:
+                    hq = self._npt.host[self.cand]
+                    crossm = (hq >= 0) & (hq != hj)
+                    if crossm.any():
+                        av = np.where(crossm, av + nic_t[u], av)
                 if not has_copy or not ctx.has_out[u]:
                     same = self.cand == j
-                    r = np.where(same, compute_end[:, u], avail[:, u])
+                    r = np.where(same, compute_end[:, u], av)
                 else:
                     same = self.cand == j
-                    s = np.maximum(lclock[:, in_lid], avail[:, u])
+                    s = np.maximum(lclock[:, in_lid], av)
                     nd = s + par_in[u]
                     lclock[:, in_lid] = np.where(same, lclock[:, in_lid],
                                                  nd)
@@ -1590,8 +1763,17 @@ class GraphSimBatch:
                 r = compute_end[:, u]
             elif not has_copy or not ctx.has_out[u]:
                 r = avail[:, u]
+                if hier and hj >= 0:
+                    q = self.assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        r = r + nic_t[u]
             else:
-                s = np.maximum(lclock[:, in_lid], avail[:, u])
+                av = avail[:, u]
+                if hier and hj >= 0:
+                    q = self.assign[u]
+                    if q >= 0 and 0 <= host_t[q] != hj:
+                        av = av + nic_t[u]
+                s = np.maximum(lclock[:, in_lid], av)
                 nd = s + par_in[u]
                 lclock[:, in_lid] = nd
                 r = nd
@@ -1679,19 +1861,31 @@ class GraphSimBatch:
             nd = s + npt.ext_in[jv, i]
             lclock[li, in_l] = np.where(hc, nd, s)
             ready = np.where(hc, nd, 0.0)
+        hier = ctx.hier
+        host_t, nic_t = ctx.host_id, ctx.nic_dur
+        hjv = npt.host[jv] if hier else None
         for u in ctx.parents[i]:
             if not placed[u]:
                 continue
             same = jv == self.assign[u]
+            # consumer device lane-varies: NIC hop on lanes whose host
+            # differs from the (scalar) producer's host
+            av = avail[:, u]
+            if hier:
+                q = self.assign[u]
+                if q >= 0 and host_t[q] >= 0:
+                    crossm = (hjv >= 0) & (hjv != host_t[q])
+                    if crossm.any():
+                        av = np.where(crossm, av + nic_t[u], av)
             if not ctx.has_out[u]:
-                r = np.where(same, compute_end[:, u], avail[:, u])
+                r = np.where(same, compute_end[:, u], av)
             else:
                 docopy = ~same & hc
-                s = np.maximum(lclock[li, in_l], avail[:, u])
+                s = np.maximum(lclock[li, in_l], av)
                 nd = s + npt.par_in[jv, u]
                 lclock[li, in_l] = np.where(docopy, nd, lclock[li, in_l])
                 r = np.where(same, compute_end[:, u],
-                             np.where(docopy, nd, avail[:, u]))
+                             np.where(docopy, nd, av))
             ready = r if ready is None else np.maximum(ready, r)
 
         s = self.dclock[li, jv]

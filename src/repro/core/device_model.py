@@ -144,10 +144,22 @@ class DeviceProfile:
     # chunks so compute on chunk 1 overlaps the transfer of chunk 2.  The
     # GEMM adapt phase maps this to row-chunks; 1 = unpipelined (paper).
     pipeline_chunks: int = 1
+    # Power model (POAS §6 names energy-aware scheduling as future work;
+    # Hill & Reddi's ALP viewpoint makes joules half the pitch).  A device
+    # burns ``idle_watts`` whenever the schedule holds it idle and
+    # ``joules_per_op`` for every MAC it executes; both default to 0 so
+    # pre-power profiles (and pure-makespan solves) are unchanged.
+    idle_watts: float = 0.0
+    joules_per_op: float = 0.0
 
     def total_time(self, c: float, n: int, k: int) -> float:
         """Compute + (non-serialized) copy time for ``c`` ops — paper Eq. 1 term."""
         return self.compute(c) + self.copy(c, n, k)
+
+    def with_power(self, idle_watts: float,
+                   joules_per_op: float) -> "DeviceProfile":
+        return dataclasses.replace(self, idle_watts=idle_watts,
+                                   joules_per_op=joules_per_op)
 
     @property
     def effective_speed(self) -> float:

@@ -481,6 +481,28 @@ class TaskGraphDomain:
     def predict(self) -> Sequence[DeviceProfile]:
         return self.dyn.snapshot() if self.dyn is not None else self._devices
 
+    def set_devices(self, devices: Sequence[DeviceProfile], *,
+                    topology: "str | BusTopology | None" = None) -> None:
+        """Elastic membership change-point (DESIGN.md §16): swap the
+        planning device set, so the next admission solves on the new
+        cluster.  ``topology`` replaces the bus when given; spec-string
+        topologies are rebuilt for the new device list automatically,
+        while a custom ``BusTopology`` is kept as-is (its attach rows are
+        name-keyed, so rows for departed devices are simply unused —
+        joiners need an explicit ``topology``).  Dynamic mode carries
+        re-fitted models for surviving devices and invalidates hooked
+        plan caches via the scheduler's re-fit listeners."""
+        self._devices = list(devices)
+        if topology is not None:
+            self.topology = BusTopology.from_spec(topology, self._devices)
+        elif self.topology.spec in ("serialized", "independent"):
+            self.topology = BusTopology.from_spec(self.topology.spec,
+                                                  self._devices)
+        self.bus = self.topology.spec
+        if self.dyn is not None:
+            self.dyn.bus = self.topology
+            self.dyn.set_devices(self._devices)
+
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: TaskGraph) -> GraphScheduleResult:
         # the template-tiled path (DESIGN.md §15) kicks in automatically

@@ -56,10 +56,82 @@ class OptimizeResult:
     finish_times: list[float]        # per-device predicted finish
     bus: str                         # "independent" | "serialized" | custom
     iterations: int = 0
+    energy_j: float | None = None    # joules, when an Objective was given
 
     def shares(self) -> list[float]:
         n = sum(self.ops)
         return [c / n if n else 0.0 for c in self.ops]
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Pluggable solver objective (DESIGN.md §16).
+
+    ``score = makespan + energy_weight * energy_joules`` — the knob
+    ``energy_weight`` is *seconds per joule*: 0 recovers the paper's pure
+    makespan objective (selection stays bit-identical to the pre-objective
+    solvers, regression-tested), +inf-ward trades latency for energy.
+    Energy is priced post-hoc from the device power models
+    (``DeviceProfile.idle_watts`` / ``joules_per_op``) over the engine's
+    per-device busy/idle split, so the timing hot paths never change.
+    """
+
+    energy_weight: float = 0.0
+
+    @property
+    def is_makespan(self) -> bool:
+        return self.energy_weight <= 0.0
+
+    def score(self, makespan: float, energy_j: float) -> float:
+        if self.energy_weight <= 0.0:
+            return makespan
+        return makespan + self.energy_weight * energy_j
+
+
+MAKESPAN_OBJECTIVE = Objective(0.0)
+
+
+def divisible_energy(devices: Sequence[DeviceProfile],
+                     ops: Sequence[float], makespan: float) -> float:
+    """Energy of a divisible-workload split: per-device dynamic joules for
+    the MACs executed plus idle watts over the schedule gap."""
+    e = 0.0
+    for d, c in zip(devices, ops):
+        busy = d.compute(float(c)) if c > 0.0 else 0.0
+        if busy > makespan:
+            busy = makespan
+        e += d.joules_per_op * float(c) + d.idle_watts * (makespan - busy)
+    return e
+
+
+def _graph_energy_parts(ctx: GraphSimContext, assign: Sequence[int]
+                        ) -> tuple[list[float], float]:
+    """``(per-device busy seconds, dynamic joules)`` of a (partial) graph
+    assignment — from the same per-(device, task) compute table the engine
+    prices, so energy and timing share one source of truth.  Frozen
+    (``ext``) tasks ran outside this plan and are excluded."""
+    devices, comp, tasks, ext = ctx.devices, ctx.comp, ctx.tasks, ctx.ext
+    busy = [0.0] * len(devices)
+    dyn = 0.0
+    for i in range(ctx.n):
+        j = assign[i]
+        if j >= 0 and i not in ext:
+            busy[j] += comp[j][i]
+            dyn += devices[j].joules_per_op * float(tasks[i].ops)
+    return busy, dyn
+
+
+def graph_energy(ctx: GraphSimContext, assign: Sequence[int],
+                 makespan: float) -> float:
+    """Total joules of a graph schedule under the device power models."""
+    busy, dyn = _graph_energy_parts(ctx, assign)
+    idle = 0.0
+    for d, b in zip(ctx.devices, busy):
+        if d.idle_watts > 0.0:
+            gap = makespan - b
+            if gap > 0.0:
+                idle += d.idle_watts * gap
+    return dyn + idle
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +217,8 @@ def _max_ops_serialized(devices: Sequence[DeviceProfile], order: Sequence[int],
 def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
                     n: int, k: int,
                     bus: str | BusTopology = "independent",
-                    tol: float = 1e-9, polish: bool = True) -> OptimizeResult:
+                    tol: float = 1e-9, polish: bool = True,
+                    objective: Objective | None = None) -> OptimizeResult:
     """Minimize makespan by bisecting on T.
 
     ``bus`` is a legacy spec string ("independent" | "serialized") or a
@@ -154,6 +227,13 @@ def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
     chunked pipelined copies; the contended-topology result is additionally
     *polished* by coordinate descent on the same engine (the greedy
     priority-ordered assignment is not always the global optimum).
+
+    ``objective``: with a pure-makespan objective (None / weight 0) the
+    selection is exactly the historical one; an energy-weighted objective
+    re-scores the makespan-optimal split against every device-*subset*
+    split (spreading work burns idle+dynamic joules on every device it
+    touches — the energy optimum often parks the workload on fewer,
+    more efficient devices) and returns the best ``score``.
     """
     spec = bus.spec if isinstance(bus, BusTopology) else bus
     if N <= 0:
@@ -214,6 +294,35 @@ def solve_bisection(devices: Sequence[DeviceProfile], N: float, *,
         f1 = _finish_times(devices, one, n, k, topo, order)
         if max(f1) < best.makespan:
             best = OptimizeResult(one, max(f1), f1, spec, iterations=iters)
+    if objective is None:
+        return best
+    best.energy_j = divisible_energy(devices, best.ops, best.makespan)
+    if objective.is_makespan or len(devices) <= 1:
+        return best
+    # energy mode: re-score against every proper device-subset split —
+    # each subset solved makespan-optimally by the exact machinery above,
+    # then priced with the idle watts of the devices it left out
+    best_score = objective.score(best.makespan, best.energy_j)
+    m = len(devices)
+    for mask in range(1, (1 << m) - 1):
+        idxs = [i for i in range(m) if mask >> i & 1]
+        sub = [devices[i] for i in idxs]
+        r = solve_bisection(sub, N, n=n, k=k,
+                            bus=bus if isinstance(bus, BusTopology)
+                            else spec, tol=tol, polish=polish)
+        ops_full = [0.0] * m
+        for i, c in zip(idxs, r.ops):
+            ops_full[i] = c
+        e = divisible_energy(devices, ops_full, r.makespan)
+        s = objective.score(r.makespan, e)
+        if s < best_score - _EPS:
+            fin_full = [0.0] * m
+            for i, f in zip(idxs, r.finish_times):
+                fin_full[i] = f
+            best = OptimizeResult(ops_full, r.makespan, fin_full, spec,
+                                  iterations=iters + r.iterations,
+                                  energy_j=e)
+            best_score = s
     return best
 
 
@@ -558,7 +667,7 @@ class _DeviceArrays:
     arrays plus per-device masks, one lane per candidate device."""
 
     __slots__ = ("idx", "has_copy", "ext_in", "par_in", "stage_out", "comp",
-                 "same_link")
+                 "same_link", "hier", "host", "nic_dur")
 
     def __init__(self, ctx: GraphSimContext):
         npt = ctx.np_tables()   # built once per graph, shared by rebind
@@ -569,6 +678,9 @@ class _DeviceArrays:
         self.stage_out = npt.stage_out
         self.comp = npt.comp
         self.same_link = npt.same_link
+        self.hier = npt.hier
+        self.host = npt.host
+        self.nic_dur = npt.nic_dur
 
 
 def _peek_batch(st: GraphSimState, da: _DeviceArrays, i: int) -> np.ndarray:
@@ -595,11 +707,20 @@ def _peek_batch(st: GraphSimState, da: _DeviceArrays, i: int) -> np.ndarray:
         ready = np.where(da.has_copy, end, ready)
 
     placed, assign = st.placed, st.assign
+    hier, host_t = ctx.hier, ctx.host_id
     for u in ctx.parents[i]:
         if not placed[u]:
             continue
         same = da.idx == assign[u]
         ce_u, av_u = st.compute_end[u], st.avail[u]
+        if hier:
+            # cross-host lanes read the producer's staged output one NIC
+            # hop late (mirrors the scalar peek_finish)
+            q = assign[u]
+            if q >= 0 and host_t[q] >= 0:
+                crossm = (da.host >= 0) & (da.host != host_t[q])
+                if crossm.any():
+                    av_u = np.where(crossm, av_u + da.nic_dur[u], av_u)
         if not ctx.has_out[u]:
             r = np.where(same, ce_u, av_u)
         else:
@@ -629,7 +750,9 @@ def _peek_batch(st: GraphSimState, da: _DeviceArrays, i: int) -> np.ndarray:
 
 
 def _eft_place(ctx: GraphSimContext, assign: Sequence[int],
-               pinned: Mapping[int, int]) -> tuple[GraphSimState, int]:
+               pinned: Mapping[int, int],
+               banned: frozenset[int] | None = None
+               ) -> tuple[GraphSimState, int]:
     """Rank-priority EFT placement on the incremental engine: one
     ``GraphSimState`` swept along the priority order, each (task, device)
     candidate priced by the vectorized peek in O(deg·d) — falling back to
@@ -693,6 +816,8 @@ def _eft_place(ctx: GraphSimContext, assign: Sequence[int],
         best_tmp: GraphSimState | None = None
         best_fp: int | None = None
         for j in range(ndev):
+            if banned is not None and j in banned:
+                continue   # departed device: the solver cannot place here
             evals += 1
             if use_batch:
                 fp, _, _, slack = st._stage_flip_info(i, j)
@@ -766,7 +891,9 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
                     max_evals: int = 2000,
                     free: Sequence[int] | None = None,
                     prune: bool = True,
-                    init: tuple[GraphSimState, _SnapChain] | None = None
+                    init: tuple[GraphSimState, _SnapChain] | None = None,
+                    objective: Objective | None = None,
+                    banned: frozenset[int] | None = None
                     ) -> tuple[list[int], int, float, list[float]]:
     """Reassignment descent on the exact graph makespan — ``_descend``'s
     pairwise-transfer loop in discrete per-task coordinates: move one task
@@ -810,15 +937,43 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
         if chain.min_key == 0:
             chain.snaps[0] = st.snap_clone()
         chain.advance_snapped(st, end)
-    best = max(st.finish)
+    # energy-weighted objective (DESIGN.md §16): candidates are accepted on
+    # score = makespan + lam * energy.  The energy terms of a candidate
+    # assignment are known BEFORE simulation (busy time is the sum of the
+    # per-(device, task) compute table over the assignment), so the engine's
+    # branch-and-bound stays exact: a candidate is prunable once its
+    # makespan alone pushes the (linear, clamp-free lower bound of the)
+    # score past the incumbent.  lam == 0 keeps the historical makespan
+    # path byte-identical.
+    lam = (objective.energy_weight
+           if objective is not None and not objective.is_makespan else 0.0)
+    if lam > 0.0:
+        devs = ctx.devices
+        iw = [d.idle_watts for d in devs]
+        jpo = [d.joules_per_op for d in devs]
+        opsv = [float(t.ops) for t in ctx.tasks]
+        comp = ctx.comp
+        si = sum(iw)
+        busy, dyn = _graph_energy_parts(ctx, st.assign)
+        wb = sum(w * b for w, b in zip(iw, busy))
+        ms0 = max(st.finish)
+        idle0 = sum(w * (ms0 - b) for w, b in zip(iw, busy)
+                    if ms0 > b and w > 0.0)
+        best = ms0 + lam * (dyn + idle0)
+    else:
+        best = max(st.finish)
     evals = 1
     # candidate-move pruning: sweep the critical-path neighborhood first,
     # falling back to the full sweep only when the pruned sweep goes dry
     # with budget remaining (and re-pruning when the full sweep improves)
-    do_prune = prune and ndev > 1 and len(movable) >= _PRUNE_MIN_MOVABLE
+    # (energy mode sweeps everything: a move off the critical path can
+    # still cut joules)
+    do_prune = prune and lam == 0.0 and ndev > 1 \
+        and len(movable) >= _PRUNE_MIN_MOVABLE
     cands = _prune_movable(ctx, st, movable) if do_prune else movable
     pruned_now = do_prune
-    use_batch = ndev - 1 >= _BATCH_MIN_LANES
+    nbanned = len(banned) if banned else 0
+    use_batch = ndev - 1 - nbanned >= _BATCH_MIN_LANES and lam == 0.0
     # the budget binds mid-sweep, not only between sweeps: a single sweep
     # is len(free)·(d-1) candidate moves, which at 10^3+ nodes dwarfs any
     # reasonable budget — checking only in the while-condition made
@@ -834,7 +989,10 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
             if use_batch and max_evals - evals >= _BATCH_MIN_LANES:
                 # batched move pricing: every alternative device of task i
                 # in one GraphSimBatch sharing a single snapshot resume
-                cand_devs = [j for j in range(ndev) if j != old]
+                cand_devs = [j for j in range(ndev) if j != old
+                             and (banned is None or j not in banned)]
+                if not cand_devs:
+                    continue
                 p0 = pi
                 for j in cand_devs:
                     fp = st.stage_flip_pos(i, j)
@@ -860,7 +1018,7 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
             for j in range(ndev):
                 if evals >= max_evals:
                     break
-                if j == old:
+                if j == old or (banned is not None and j in banned):
                     continue
                 fp = st.stage_flip_pos(i, j)
                 p0 = pi if fp is None or fp > pi else fp
@@ -872,14 +1030,43 @@ def _descend_assign(ctx: GraphSimContext, assign: Sequence[int], *,
                 # moment one exceeds the incumbent; a completed walk is
                 # byte-identical to an unbounded one, so accepted heads
                 # (and the unpruned trajectory) are unchanged
-                done = tmp.advance(end, bound=best - _EPS)
+                if lam > 0.0:
+                    # candidate energy constants, pre-simulation: the
+                    # makespan cap where even zero idle clamping cannot
+                    # bring the score under the incumbent
+                    dwb = iw[j] * comp[j][i] - iw[old] * comp[old][i]
+                    ddyn = (jpo[j] - jpo[old]) * opsv[i]
+                    cap = (best - lam * (dyn + ddyn - wb - dwb)) \
+                        / (1.0 + lam * si)
+                    done = tmp.advance(end, bound=cap - _EPS)
+                else:
+                    done = tmp.advance(end, bound=best - _EPS)
                 evals += 1
-                t = max(tmp.finish) if done else math.inf
+                if lam > 0.0:
+                    if done:
+                        ms = max(tmp.finish)
+                        busy[old] -= comp[old][i]
+                        busy[j] += comp[j][i]
+                        idle = sum(w * (ms - b)
+                                   for w, b in zip(iw, busy)
+                                   if ms > b and w > 0.0)
+                        busy[old] += comp[old][i]
+                        busy[j] -= comp[j][i]
+                        t = ms + lam * (dyn + ddyn + idle)
+                    else:
+                        t = math.inf
+                else:
+                    t = max(tmp.finish) if done else math.inf
                 if done and t < best - _EPS:
                     # adopt: the candidate walk already IS the new head
                     chain.invalidate_above(m)
                     st = tmp
                     best, improved = t, True
+                    if lam > 0.0:
+                        busy[old] -= comp[old][i]
+                        busy[j] += comp[j][i]
+                        wb += dwb
+                        dyn += ddyn
                     old = j
                 else:
                     st.assign[i] = old
@@ -941,7 +1128,9 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                         seed_assign: Sequence[int] | None = None,
                         max_evals: int = 2000,
                         prune: bool = True,
-                        cache: SolveContextCache | None = None
+                        cache: SolveContextCache | None = None,
+                        objective: Objective | None = None,
+                        banned: Sequence[int] | frozenset[int] | None = None
                         ) -> GraphScheduleResult:
     """Minimize a task graph's makespan by list scheduling on the engine.
 
@@ -972,6 +1161,15 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     the seed already provides the quality floor, and a partial solve runs
     inside a live splice where solver latency stalls the straggler's worker
     (``max_evals`` caps each descent for the same reason).
+
+    ``objective``: pure makespan (None / weight 0) keeps the selection
+    bit-identical to the historical solver and just reports ``energy_j``;
+    an energy-weighted objective scores candidates by
+    ``makespan + weight * joules`` (DESIGN.md §16).  ``banned`` names
+    device *indices* the solver must not place free tasks on — the elastic
+    membership path (device loss) re-solves with the departed device
+    banned so spec device tuples and clock names stay aligned while the
+    shrunken cluster is genuinely enforced.
     """
     topo = BusTopology.from_spec(bus, devices)
     spec = bus.spec if isinstance(bus, BusTopology) else topo.spec
@@ -979,6 +1177,7 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     if n == 0:
         z = [0.0] * len(devices)
         return GraphScheduleResult(z, 0.0, z, spec)
+    banned = frozenset(banned) if banned else None
     pinned = dict(pinned) if pinned else {}
     free = [i for i in range(n) if i not in pinned]
     ckey = (tuple(devices), priority, spec) if cache is not None else None
@@ -1007,6 +1206,8 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
         stf.advance(len(order))
         return stf.finish
 
+    allowed = [j for j in range(len(devices))
+               if banned is None or j not in banned]
     assign = [-1] * n
     for i, j in pinned.items():
         assign[i] = j
@@ -1021,8 +1222,8 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
         for i in order:
             if i in pinned:
                 continue
-            best_j, best_t = 0, math.inf
-            for j in range(len(devices)):
+            best_j, best_t = allowed[0], math.inf
+            for j in allowed:
                 # myopic: the task alone, an empty timeline
                 solo[i] = j
                 t = graph_finish_times(devices, tasks, edges, solo,
@@ -1033,7 +1234,7 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
             solo[i] = -1
             assign[i] = best_j
     else:
-        st, e, eft_chain = _eft_place(ctx, assign, pinned)
+        st, e, eft_chain = _eft_place(ctx, assign, pinned, banned)
         assign = st.assign
         evals += e
         task_fin = st.finish
@@ -1042,19 +1243,27 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
     def makespan(a) -> float:
         return max(finish(a))
 
+    energy_mode = objective is not None and not objective.is_makespan
+
+    def score_of(a, fin) -> float:
+        ms = max(fin)
+        if not energy_mode:
+            return ms
+        return objective.score(ms, graph_energy(ctx, a, ms))
+
     if refine and free:
         # the exhaustive branch honours max_evals too: a latency-capped
         # partial solve (mid-graph splice) must not sneak up to
         # exhaustive_limit full-graph simulations through a small free set
-        if len(devices) ** len(free) <= min(exhaustive_limit, max_evals):
-            best_a, best_t = list(assign), makespan(assign)
+        if len(allowed) ** len(free) <= min(exhaustive_limit, max_evals):
+            fin0 = finish(assign)
+            best_a, best_t = list(assign), score_of(assign, fin0)
             evals += 1
-            for combo in itertools.product(range(len(devices)),
-                                           repeat=len(free)):
+            for combo in itertools.product(allowed, repeat=len(free)):
                 cand = list(assign)
                 for i, j in zip(free, combo):
                     cand[i] = j
-                t = makespan(cand)
+                t = score_of(cand, finish(cand))
                 evals += 1
                 if t < best_t - _EPS:
                     best_a, best_t = list(cand), t
@@ -1084,7 +1293,7 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                 # (re-fitted) device — the shape the re-plan usually wants
                 # when one device just slowed down, and one the capped
                 # descent cannot reliably reach from EFT local optima
-                fastest = max(range(len(devices)),
+                fastest = max(allowed,
                               key=lambda j: devices[j].effective_speed)
                 rescue = list(assign)
                 for i in free:
@@ -1104,13 +1313,14 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                     share = max(1, remaining // (len(seeds) - k))
                     cand, e, t, fin = _descend_assign(
                         ctx, seed, free=free, max_evals=share, prune=prune,
-                        init=eft_init if k == 0 else None)
+                        init=eft_init if k == 0 else None,
+                        objective=objective, banned=banned)
                     remaining = max(0, remaining - e)
                     evals += e
                     if best_a is None or t < best_t - _EPS:
                         best_a, best_t, best_fin = cand, t, fin
             else:
-                for j in range(len(devices)):
+                for j in allowed:
                     one = list(assign)
                     for i in free:
                         one[i] = j
@@ -1118,7 +1328,8 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
                 for k, seed in enumerate(seeds):
                     cand, e, t, fin = _descend_assign(
                         ctx, seed, free=free, max_evals=max_evals,
-                        prune=prune, init=eft_init if k == 0 else None)
+                        prune=prune, init=eft_init if k == 0 else None,
+                        objective=objective, banned=banned)
                     evals += e
                     if best_a is None or t < best_t - _EPS:
                         best_a, best_t, best_fin = cand, t, fin
@@ -1133,11 +1344,14 @@ def solve_list_schedule(devices: Sequence[DeviceProfile],
             continue
         ops[assign[i]] += float(t.ops)
         dev_finish[assign[i]] = max(dev_finish[assign[i]], task_finish[i])
-    return GraphScheduleResult(ops=ops, makespan=max(task_finish),
+    ms = max(task_finish)
+    return GraphScheduleResult(ops=ops, makespan=ms,
                                finish_times=dev_finish, bus=spec,
                                iterations=evals, assign=list(assign),
                                order=list(order),
-                               task_finish=list(task_finish))
+                               task_finish=list(task_finish),
+                               energy_j=(graph_energy(ctx, assign, ms)
+                                         if objective is not None else None))
 
 # ---------------------------------------------------------------------------
 # Template-tiled hierarchical solves (DESIGN.md §15)
@@ -1209,7 +1423,8 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
                        template_cache: TemplatePlanCache | None = None,
                        rep_max_evals: int = 800,
                        polish_evals: int = _POLISH_EVALS,
-                       polish_max_nodes: int = _POLISH_MAX_NODES
+                       polish_max_nodes: int = _POLISH_MAX_NODES,
+                       objective: Objective | None = None
                        ) -> GraphScheduleResult:
     """Template-tiled list scheduling for repetitive DAGs (DESIGN.md §15).
 
@@ -1244,11 +1459,17 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
         else SHARED_TEMPLATE_CACHE
     dev_key = tuple(devices)
     evals = 0
+    energy_mode = objective is not None and not objective.is_makespan
 
-    # 1. one representative solve per template, cached by signature
+    # 1. one representative solve per template, cached by signature.  An
+    # energy-weighted objective picks different representative placements,
+    # so it gets its own cache entries; pure makespan keeps the historical
+    # 4-tuple key (and therefore its warm entries).
     placements: list[tuple[int, ...]] = []
     for sig in partition.signatures:
         key = (sig, dev_key, spec, bool(refine))
+        if energy_mode:
+            key = key + (objective.energy_weight,)
         hit = cache.get(key)
         if hit is None:
             costs, internal, inb, _outb = sig
@@ -1261,7 +1482,8 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
                    for k, (ops_k, in_b, out_b) in enumerate(costs)]
             r = solve_list_schedule(devices, rep, internal, bus=topo,
                                     refine=refine,
-                                    max_evals=rep_max_evals)
+                                    max_evals=rep_max_evals,
+                                    objective=objective)
             evals += r.iterations
             hit = tuple(r.assign)
             cache.put(key, hit)
@@ -1280,7 +1502,12 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
     st = GraphSimState(ctx, assign)
     st.advance(len(order))
     evals += 1
-    best = max(st.finish)
+    best_ms = max(st.finish)
+    # ``best`` is the objective score (== makespan in pure-makespan mode).
+    # Score >= makespan always (energy >= 0), so the makespan lower bounds
+    # and bound-aware engine walks below stay valid prunes under a score.
+    best = (objective.score(best_ms, graph_energy(ctx, assign, best_ms))
+            if energy_mode else best_ms)
     task_fin = st.finish
 
     # 4. the all-one-device floor.  An all-on-j schedule serializes every
@@ -1305,9 +1532,12 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
         done = tmp.advance(len(order), bound=best - _EPS)
         evals += 1
         if done:
-            t1 = max(tmp.finish)
+            ms1 = max(tmp.finish)
+            t1 = (objective.score(ms1, graph_energy(ctx, onej, ms1))
+                  if energy_mode else ms1)
             if t1 < best - _EPS:
                 assign, best, task_fin = onej, t1, tmp.finish
+                best_ms = ms1
 
     # 5. seam polish: pruned descent over cross-instance tasks only
     if refine and polish_evals > 0 and n <= polish_max_nodes:
@@ -1321,18 +1551,22 @@ def solve_hierarchical(devices: Sequence[DeviceProfile],
             cand, e, t2, fin = _descend_assign(ctx, list(assign),
                                                free=seams,
                                                max_evals=polish_evals,
-                                               prune=True)
+                                               prune=True,
+                                               objective=objective)
             evals += e
             if t2 < best - _EPS:
                 assign, best, task_fin = cand, t2, fin
+                best_ms = max(fin)
 
     ops = [0.0] * len(devices)
     dev_finish = [0.0] * len(devices)
     for i, tk in enumerate(tasks):
         ops[assign[i]] += float(tk.ops)
         dev_finish[assign[i]] = max(dev_finish[assign[i]], task_fin[i])
-    return GraphScheduleResult(ops=ops, makespan=best,
+    return GraphScheduleResult(ops=ops, makespan=best_ms,
                                finish_times=dev_finish, bus=spec,
                                iterations=evals, assign=list(assign),
                                order=list(order),
-                               task_finish=list(task_fin))
+                               task_finish=list(task_fin),
+                               energy_j=(graph_energy(ctx, assign, best_ms)
+                                         if objective is not None else None))

@@ -805,6 +805,85 @@ class CoExecutionRuntime:
             self._hold = False
             self._cv.notify_all()
 
+    # -- elastic membership (DESIGN.md §16) ---------------------------------
+
+    def device_leave(self, name: str, *,
+                     at: float | None = None) -> list[ReplanRecord]:
+        """Device departure as a first-class change-point.
+
+        Two halves, generalizing the §11 straggler rescue:
+
+        1. *Future admissions*: every tenant whose planning set contains
+           ``name`` shrinks it (``Domain.set_devices`` hook — dynamic
+           domains carry their re-fitted models for the survivors) and
+           drops its ``PlanCache``, so the next plan solves on the
+           smaller cluster.
+        2. *In-flight jobs* (virtual mode): any job whose stream had not
+           finished by ``at`` (default: the virtual admission clock) and
+           whose not-yet-started frontier touches the departed device is
+           frontier-frozen and re-solved with the device *banned* —
+           assignments of started tasks pinned, clocks carried, spliced
+           back into the stream with ``ReplanRecord(reason=
+           "device-loss")``.  Banning (rather than deleting) keeps the
+           job's spec device tuple and clock names index-aligned.
+
+        Returns the splice records, one per rescued job.
+        """
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("runtime is shut down")
+            tenants = list(self.tenants.values())
+        for ten in tenants:
+            cur = list(ten.domain.predict())
+            new = [d for d in cur if d.name != name]
+            if len(new) == len(cur):
+                continue
+            if not new:
+                raise ValueError(f"device {name!r} is the last device of "
+                                 f"tenant {ten.name!r}; cannot leave")
+            if hasattr(ten.domain, "set_devices"):
+                ten.domain.set_devices(new)
+            if ten.poas.cache is not None:
+                ten.poas.cache.invalidate()
+            if ten.pump is not None:
+                ten.pump.index = {d.name: i for i, d in enumerate(new)}
+        recs: list[ReplanRecord] = []
+        if self.executor == "virtual":
+            t = self._vnow if at is None else float(at)
+            with self._lock:
+                inflight = [j for j in self.jobs
+                            if j.measured is not None and j.error is None
+                            and j.measured.makespan > t + 1e-12]
+            for job in inflight:
+                rec = self._rescue_device_loss(job, name, t)
+                if rec is not None:
+                    recs.append(rec)
+        return recs
+
+    def device_join(self, device: DeviceProfile, *,
+                    topology: "str | BusTopology | None" = None) -> None:
+        """Device arrival: widen every tenant's planning set and drop its
+        ``PlanCache`` — the next admission plans on the larger cluster.
+        In-flight jobs are left alone (their specs never knew the
+        joiner).  ``topology`` replaces the bus when the new device needs
+        attach rows a custom topology lacks."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("runtime is shut down")
+            tenants = list(self.tenants.values())
+        for ten in tenants:
+            if not hasattr(ten.domain, "set_devices"):
+                continue
+            cur = list(ten.domain.predict())
+            if any(d.name == device.name for d in cur):
+                continue
+            ten.domain.set_devices(cur + [device], topology=topology)
+            if ten.poas.cache is not None:
+                ten.poas.cache.invalidate()
+            if ten.pump is not None:
+                ten.pump.index = {d.name: i
+                                  for i, d in enumerate(cur + [device])}
+
     def run_stream(self, workloads: Sequence[Workload],
                    timeout: float | None = 120.0) -> list[StreamJob]:
         """Submit every workload, wait for all of them, return their jobs."""
@@ -1242,6 +1321,99 @@ class CoExecutionRuntime:
             reason=reason))
         return Timeline(sorted(frozen_events + truth_frontier.events,
                                key=lambda e: (e.start, e.end)))
+
+    def _rescue_device_loss(self, job: StreamJob, name: str,
+                            at: float) -> ReplanRecord | None:
+        """Frontier-freeze + pinned re-solve of one in-flight job after
+        ``name`` departs at stream time ``at`` — the §11 splice with the
+        departed device *banned* instead of a straggler re-fit.  Unlike
+        the straggler path there is no ``_worth_splicing`` gate: staying
+        locked in is not an option once the device is gone."""
+        spec = job.final_spec
+        if not isinstance(spec, GraphTimelineSpec):
+            return None
+        dev_names = [d.name for d in spec.devices]
+        if name not in dev_names:
+            return None
+        bi = dev_names.index(name)
+        measured = job.measured
+        first_start = {t.name: min((e.start for e in measured.events
+                                    if e.task == t.name), default=math.inf)
+                       for t in spec.tasks}
+        started, pend = _ancestor_closed_freeze(
+            spec, [t.name for t in spec.tasks
+                   if first_start[t.name] < at - 1e-12])
+        if not pend:
+            return None   # everything had started: nothing left to move
+        index = {t.name: i for i, t in enumerate(spec.tasks)}
+        if all(spec.assign[index[n]] != bi for n in pend):
+            return None   # the frontier never touches the departed device
+        started_set = set(started)
+        frozen_events = [e for e in measured.events if e.task in started_set]
+        # retract by event IDENTITY (task names collide across jobs that
+        # share a graph template — same rule as the preemption splice)
+        retracted = {id(e) for e in measured.events
+                     if e.task not in started_set}
+        with self._lock:
+            self._virtual_events = [e for e in self._virtual_events
+                                    if id(e) not in retracted]
+        clocks = carry_clocks(Timeline(frozen_events),
+                              job._base_clocks or ClockState())
+        if at > clocks.floor:
+            # nothing re-issued can start before the loss was detected
+            clocks = clocks.with_floor(at)
+        devices = list(spec.devices)
+        ext = self._frozen_ext(spec, started, Timeline(frozen_events),
+                               at, devices, 1.0)
+        # Graceful-drain evacuation: a frozen output resident only on the
+        # departed device (avail = inf, "never staged") would pin its
+        # consumers to a device that no longer exists.  Model the
+        # departure notice staging it to the host at the moment of loss
+        # (spot-preemption drain) over the device's outbound path; the
+        # engine then charges any cross-host consumer the NIC hop as
+        # usual.  Drain copies are priced but not given link occupancy —
+        # the same simplification as the NIC hop itself (DESIGN.md §16).
+        drain_dev = devices[bi]
+        lk = spec.topology.link_of(name, "copy_out") \
+            if spec.topology is not None else None
+        for i, (c_end, avail) in list(ext.items()):
+            if spec.assign[i] == bi and math.isinf(avail):
+                t = spec.tasks[i]
+                bw = drain_dev.copy.bandwidth_bytes_per_s
+                if lk is not None and lk.bandwidth_bytes_per_s is not None:
+                    bw = min(bw, lk.bandwidth_bytes_per_s)
+                dur = 0.0 if (t.out_bytes <= 0.0 or math.isinf(bw)) \
+                    else t.out_bytes / bw + drain_dev.copy.latency_s
+                ext[i] = (c_end, max(c_end, at) + dur)
+        pinned = {index[n]: spec.assign[index[n]] for n in started}
+        res = solve_list_schedule(devices, spec.tasks, spec.edges,
+                                  bus=spec.topology, pinned=pinned,
+                                  ext=ext, clocks=clocks,
+                                  max_evals=_REPLAN_MAX_EVALS,
+                                  banned=frozenset({bi}),
+                                  cache=job._solve_cache)
+        new_spec = dataclasses.replace(spec, assign=tuple(res.assign),
+                                       order=tuple(res.order))
+        ext_names = {spec.tasks[i].name: v for i, v in ext.items()}
+        planned_frontier = new_spec.rebase_partial(clocks, ext=ext_names)
+        truth_devs = [self.truth(job.uid, d) if self.truth else d
+                      for d in new_spec.devices]
+        truth_frontier = new_spec.rebase_partial(clocks, ext=ext_names,
+                                                 devices=truth_devs)
+        rec = ReplanRecord(at=at, straggler=name, frozen=tuple(started),
+                           spliced=tuple(pend), spec=new_spec,
+                           planned=planned_frontier, reason="device-loss")
+        job.replans.append(rec)
+        job.measured = Timeline(sorted(
+            frozen_events + list(truth_frontier.events),
+            key=lambda e: (e.start, e.end)))
+        self._meas_clocks = self._next_clocks(
+            truth_frontier, carry_clocks(Timeline(frozen_events),
+                                         job._base_clocks or ClockState()))
+        with self._lock:
+            self._virtual_events.extend(truth_frontier.events)
+            self._virtual_finishes[job.uid] = job.measured.makespan
+        return rec
 
     # -- threaded execution -------------------------------------------------
 

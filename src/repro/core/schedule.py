@@ -191,6 +191,22 @@ class DynamicScheduler:
         with self._lock:
             return list(self.devices)
 
+    def set_devices(self, devices: Sequence[DeviceProfile]) -> None:
+        """Elastic membership change-point (DESIGN.md §16): replace the
+        device set.  Surviving devices (matched by name) keep their
+        re-fitted models and observation windows; departed ones drop
+        theirs; joiners start from their given profile.  Bumps ``epoch``
+        and fires the re-fit listeners, so every ``PlanCache`` hooked to
+        this scheduler invalidates and the next plan sees the new set."""
+        with self._lock:
+            fitted = {d.name: d for d in self.devices}
+            obs = {d.name: o for d, o in zip(self.devices, self._obs)}
+            self.devices = [fitted.get(d.name, d) for d in devices]
+            self._obs = [obs.get(d.name, []) for d in devices]
+            self.epoch += 1
+        for fn in self._refit_listeners:
+            fn()
+
     def _refit(self, device_index: int, model, at_ops: float) -> None:
         d = self.devices[device_index]
         old, new = d.compute(at_ops), model(at_ops)

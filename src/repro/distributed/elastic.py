@@ -72,7 +72,15 @@ class FaultTolerantRunner:
             on_metrics: Callable[[int, dict], None] | None = None) -> Any:
         it = iter(batches)
         while self.step < num_steps:
-            batch = next(it)
+            try:
+                batch = next(it)
+            except StopIteration:
+                # the batch stream can run dry before num_steps (finite
+                # datasets, truncated replays): stop cleanly with a final
+                # checkpoint instead of leaking StopIteration to the caller
+                log.warning("batch stream exhausted at step %d/%d; stopping",
+                            self.step, num_steps)
+                break
             retries = 0
             while True:
                 try:
@@ -101,10 +109,24 @@ class FaultTolerantRunner:
 
     # -- elastic re-mesh ----------------------------------------------------
 
-    def remesh(self, new_shardings: Any) -> None:
+    def remesh(self, new_shardings: Any, *, scheduler: Any = None,
+               lost: tuple = (), joined: tuple = ()) -> None:
         """Rebuild state for a different mesh (e.g. after losing a pod):
-        checkpoint now, then restore with the new shardings."""
+        checkpoint now, then restore with the new shardings.
+
+        When the training loop splits batches with a
+        ``HeteroBatchScheduler``, pass it (plus the departed pod names /
+        joined ``PodProfile``s) and the same call routes the membership
+        change through the POAS change-point path (``pod_leave`` /
+        ``pod_join`` — re-fitted models carried for survivors, plan cache
+        invalidated), so the very next step's batch split is solved on
+        the new cluster instead of the stale one."""
         self.maybe_checkpoint(force=True)
+        if scheduler is not None:
+            for name in lost:
+                scheduler.pod_leave(name)
+            for pod in joined:
+                scheduler.pod_join(pod)
         self.restore_shardings = new_shardings
         self.state, self.step = self._store.restore(
             self.cfg.checkpoint_dir, self.state, shardings=new_shardings)

@@ -99,6 +99,35 @@ class TrainStepDomain:
     def predict(self) -> Sequence[DeviceProfile]:
         return self.dyn.snapshot() if self.dyn is not None else self._devices
 
+    def set_pods(self, pods: Sequence[PodProfile]) -> None:
+        """Elastic membership change-point (DESIGN.md §16): replace the
+        pod set.  Dynamic mode carries re-fitted models for surviving
+        pods (matched by name) and invalidates hooked plan caches."""
+        self.pods = list(pods)
+        self._devices = [pod_device(p, self.flops_per_token)
+                         for p in self.pods]
+        self.topology = BusTopology.independent(self._devices)
+        if self.dyn is not None:
+            self.dyn.bus = self.topology
+            self.dyn.set_devices(self._devices)
+
+    def set_devices(self, devices: Sequence[DeviceProfile], *,
+                    topology=None) -> None:
+        """Runtime-facing membership hook (``CoExecutionRuntime.device_
+        leave/join``): the given profiles are authoritative; pod rows are
+        matched by name, and a joiner announced as a raw ``DeviceProfile``
+        gets a derived pod row (grain from its row alignment)."""
+        by_name = {p.name: p for p in self.pods}
+        self.pods = [by_name.get(d.name,
+                                 PodProfile(d.name, chips=1, peak_flops=0.0,
+                                            grain=max(1, d.align_m)))
+                     for d in devices]
+        self._devices = list(devices)
+        self.topology = BusTopology.independent(self._devices)
+        if self.dyn is not None:
+            self.dyn.bus = self.topology
+            self.dyn.set_devices(self._devices)
+
     def optimize(self, devices: Sequence[DeviceProfile],
                  w: TrainStepWorkload) -> OptimizeResult:
         return solve_bisection(devices, w.total_ops(), n=1, k=1,
@@ -196,6 +225,35 @@ class HeteroBatchScheduler:
                 self.pump.observe(name, ops[name], float(seconds))
                 fed += 1
         return fed
+
+    def pod_leave(self, name: str) -> None:
+        """Pod departure as a membership change-point: shrink the split
+        domain (surviving pods keep their re-fitted models), drop the
+        plan cache, re-key the pump — the next ``plan`` solves on the
+        smaller cluster."""
+        pods = [p for p in self.pods if p.name != name]
+        if len(pods) == len(self.pods):
+            return
+        if not pods:
+            raise ValueError(f"pod {name!r} is the last pod; cannot leave")
+        self.pods = pods
+        self.domain.set_pods(pods)
+        if self.poas.cache is not None:
+            self.poas.cache.invalidate()
+        if self.pump is not None:
+            self.pump.index = {p.name: i for i, p in enumerate(pods)}
+
+    def pod_join(self, pod: PodProfile) -> None:
+        """Pod arrival: widen the split domain at the next ``plan``."""
+        if any(p.name == pod.name for p in self.pods):
+            return
+        pods = self.pods + [pod]
+        self.pods = pods
+        self.domain.set_pods(pods)
+        if self.poas.cache is not None:
+            self.poas.cache.invalidate()
+        if self.pump is not None:
+            self.pump.index = {p.name: i for i, p in enumerate(pods)}
 
     def imbalance(self, split: BatchSplit) -> float:
         """Predicted idle fraction of the fastest-finishing pod."""

@@ -1,0 +1,340 @@
+"""Device-to-cluster tests (DESIGN.md §16): the pluggable makespan/energy
+objective, elastic membership change-points, the device-loss rescue path,
+the hetero train-step domain round-trip, and the fault-tolerant runner's
+clean handling of an exhausted batch stream."""
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BusTopology, MAKESPAN_OBJECTIVE, Objective,
+                        TaskGraphDomain, divisible_energy, graph_energy,
+                        solve_bisection, solve_hierarchical,
+                        solve_list_schedule)
+from repro.core.device_model import CopyModel, DeviceProfile, LinearTimeModel
+from repro.core.graph import (TaskGraph, TaskNode, transformer_stack,
+                              verify_graph_dependencies)
+from repro.core.runtime import CoExecutionRuntime, truth_from_profiles
+from repro.distributed.hetero import (HeteroBatchScheduler, PodProfile,
+                                      TrainStepDomain, TrainStepWorkload)
+
+
+def _dev(name, tflops, *, idle_w=0.0, jpo=0.0, copy_bw=15.75e9):
+    return DeviceProfile(name, "gpu",
+                         LinearTimeModel(2.0 / (tflops * 1e12), 1e-6),
+                         CopyModel(copy_bw, dtype_size=2),
+                         idle_watts=idle_w, joules_per_op=jpo)
+
+
+def _stack(**kw):
+    return [_dev("h0.a", 40.0, **kw), _dev("h0.b", 30.0, **kw),
+            _dev("h1.a", 40.0, **kw)]
+
+
+def _cluster_topo(devs, nic=2e9):
+    return BusTopology.cluster({"h0": devs[:2], "h1": devs[2:]},
+                               nic_bandwidth_bytes_per_s=nic,
+                               nic_latency_s=1e-5)
+
+
+def _chains(n_chains, n_stages, ops=5e9, nbytes=1e5):
+    nodes, edges = [], []
+    for c in range(n_chains):
+        for s in range(n_stages):
+            nodes.append(TaskNode(f"c{c}.s{s}", ops, nbytes, nbytes))
+            if s:
+                edges.append((f"c{c}.s{s - 1}", f"c{c}.s{s}"))
+    return TaskGraph(tuple(nodes), tuple(edges))
+
+
+# ------------------------------------------------------------ objective --
+
+
+def test_makespan_objective_bit_identical_list_schedule():
+    """Pure-makespan knob: identical selections to the no-objective path
+    (acceptance bit-identity contract), energy reported on the side."""
+    devs = _stack(idle_w=1.0, jpo=1e-10)
+    topo = _cluster_topo(devs)
+    g = _chains(4, 3)
+    tasks, edges = g.task_specs(), g.edge_indices()
+    base = solve_list_schedule(devs, tasks, edges, bus=topo)
+    for obj in (MAKESPAN_OBJECTIVE, Objective(energy_weight=0.0)):
+        r = solve_list_schedule(devs, tasks, edges, bus=topo, objective=obj)
+        assert list(r.assign) == list(base.assign)
+        assert list(r.order) == list(base.order)
+        assert r.makespan == base.makespan
+        assert r.task_finish == base.task_finish
+        assert r.energy_j is not None
+    assert base.energy_j is None
+
+
+def test_makespan_objective_bit_identical_hierarchical():
+    devs = _stack(idle_w=1.0, jpo=1e-10)
+    g = transformer_stack(config="stablelm-12b", layers=4, microbatches=4,
+                          groups=4)
+    part = g.template_partition(min_repeats=4)
+    assert part is not None
+    tasks, edges = g.task_specs(), g.edge_indices()
+    # separate cache instances: the makespan path must not read entries
+    # keyed without the weight, nor vice versa
+    from repro.core.optimize import TemplatePlanCache
+    base = solve_hierarchical(devs, tasks, edges, partition=part,
+                              bus="serialized",
+                              template_cache=TemplatePlanCache())
+    r = solve_hierarchical(devs, tasks, edges, partition=part,
+                           bus="serialized",
+                           template_cache=TemplatePlanCache(),
+                           objective=MAKESPAN_OBJECTIVE)
+    assert list(r.assign) == list(base.assign)
+    assert r.makespan == base.makespan
+    assert r.energy_j is not None and base.energy_j is None
+
+
+def test_makespan_objective_bit_identical_bisection():
+    devs = _stack(idle_w=1.0, jpo=1e-10)
+    base = solve_bisection(devs, 100e12, n=30000, k=30000)
+    r = solve_bisection(devs, 100e12, n=30000, k=30000,
+                        objective=MAKESPAN_OBJECTIVE)
+    assert r.ops == base.ops
+    assert r.makespan == base.makespan
+
+
+def test_energy_weight_trades_makespan_for_joules():
+    """A positive exchange rate moves work to the efficient device: energy
+    falls, makespan rises — and the sweep is monotone at the optimum."""
+    devs = [_dev("fast", 40.0, idle_w=2.0, jpo=4e-10),
+            _dev("eff", 10.0, idle_w=1.0, jpo=0.5e-10)]
+    g = _chains(1, 4)
+    tasks, edges = g.task_specs(), g.edge_indices()
+    pts = []
+    for w in (0.0, 1e-4, 1e-2):
+        r = solve_list_schedule(devs, tasks, edges, bus="independent",
+                                objective=Objective(w),
+                                exhaustive_limit=4096, max_evals=4097)
+        pts.append((r.makespan, r.energy_j))
+    for (m0, e0), (m1, e1) in zip(pts, pts[1:]):
+        assert m1 >= m0 - 1e-12
+        assert e1 <= e0 + 1e-12
+    assert pts[-1][1] < pts[0][1]   # the knob actually moved work
+
+
+def test_energy_accounting_matches_hand_computation():
+    d0 = _dev("a", 40.0, idle_w=10.0, jpo=2e-10)
+    d1 = _dev("b", 40.0, idle_w=4.0, jpo=1e-10)
+    ops = [8e9, 0.0]
+    ms = d0.compute(8e9)
+    e = divisible_energy([d0, d1], ops, ms)
+    busy = d0.compute(8e9)
+    assert e == pytest.approx(2e-10 * 8e9 + 10.0 * (ms - busy) + 4.0 * ms)
+
+
+def test_banned_devices_never_take_free_tasks():
+    devs = _stack()
+    g = _chains(3, 3)
+    tasks, edges = g.task_specs(), g.edge_indices()
+    r = solve_list_schedule(devs, tasks, edges, bus="independent",
+                            banned=frozenset({2}))
+    assert all(j != 2 for j in r.assign)
+    assert math.isfinite(r.makespan)
+
+
+# ----------------------------------------------------------- membership --
+
+
+def _loss_runtime(truth=None):
+    devs = _stack()
+    dom = TaskGraphDomain(devs, bus=_cluster_topo(devs), dynamic=True)
+    return CoExecutionRuntime(dom, executor="virtual", truth=truth,
+                              feedback=False, max_inflight=1)
+
+
+def test_device_leave_rescues_inflight_job():
+    g = _chains(6, 4)
+    with _loss_runtime() as rt:
+        job = rt.submit(g)
+        job.wait(60)
+        before = job.measured.makespan
+        at = 0.3 * before
+        recs = rt.device_leave("h1.a", at=at)
+        assert len(recs) == 1
+        rec = recs[0]
+        assert rec.reason == "device-loss"
+        assert rec.straggler == "h1.a"
+        assert rec.spliced   # the frontier touched the departed device
+        after = job.measured.makespan
+        assert math.isfinite(after)
+        # splice keeps every DAG dependency intact
+        assert not verify_graph_dependencies(rec.spec, job.measured)
+        # no re-solved task lands on the departed device
+        spliced = set(rec.spliced)
+        assert not [e.task for e in job.measured.events
+                    if e.task in spliced and e.device == "h1.a"]
+        # future admissions plan without it
+        job2 = rt.submit(g)
+        job2.wait(60)
+        assert all(e.device != "h1.a" for e in job2.measured.events)
+
+
+def test_device_leave_then_join_restores_planning_set():
+    g = _chains(6, 4)
+    with _loss_runtime() as rt:
+        job = rt.submit(g)
+        job.wait(60)
+        rt.device_leave("h1.a", at=0.3 * job.measured.makespan)
+        assert [d.name for d in rt.domain.predict()] == ["h0.a", "h0.b"]
+        devs = _stack()
+        rt.device_join(devs[2], topology=_cluster_topo(devs))
+        assert [d.name for d in rt.domain.predict()] == \
+            ["h0.a", "h0.b", "h1.a"]
+
+
+def test_device_leave_last_device_refused():
+    devs = [_dev("only", 40.0)]
+    dom = TaskGraphDomain(devs, bus="independent", dynamic=True)
+    with CoExecutionRuntime(dom, executor="virtual",
+                            max_inflight=1) as rt:
+        with pytest.raises(ValueError):
+            rt.device_leave("only")
+
+
+def test_device_loss_rescue_beats_locked_in():
+    """The BENCH_cluster scenario in miniature: ground truth runs h1.a
+    50x slow; the rescue must beat riding the stale plan."""
+    dead = 50.0
+    truth = truth_from_profiles(
+        _stack(), lambda uid, name: dead if name == "h1.a" else 1.0)
+    g = _chains(6, 4)
+    with _loss_runtime(truth) as rt:
+        job = rt.submit(g)
+        job.wait(60)
+        locked = job.measured.makespan
+    with _loss_runtime(truth) as rt:
+        job = rt.submit(g)
+        job.wait(60)
+        planned = job.plan.schedule.timeline.makespan
+        recs = rt.device_leave("h1.a", at=0.25 * planned)
+        assert recs
+        assert job.measured.makespan < locked / 1.10
+
+
+def test_dynamic_scheduler_set_devices_carries_fitted_models():
+    from repro.core.schedule import DynamicScheduler
+    devs = _stack()
+    dyn = DynamicScheduler(devs, bus="independent")
+    # re-fit h0.b 2x slow from observations
+    for _ in range(3):
+        dyn.observe(1, 1e12, 2.0 * devs[1].compute(1e12))
+    slow = dyn.snapshot()[1]
+    assert slow.compute(1e12) > 1.5 * devs[1].compute(1e12)
+    epoch = dyn.epoch
+    dyn.set_devices([devs[0], devs[1]])   # h1.a departs
+    assert [d.name for d in dyn.snapshot()] == ["h0.a", "h0.b"]
+    # the survivor kept its re-fitted model, not the stale profile
+    assert dyn.snapshot()[1].compute(1e12) == slow.compute(1e12)
+    assert dyn.epoch == epoch + 1
+
+
+# --------------------------------------------- hetero train-step domain --
+
+
+PODS = [PodProfile("pod0", chips=256, peak_flops=197e12, grain=16),
+        PodProfile("pod1", chips=128, peak_flops=197e12, grain=16)]
+
+
+def test_train_step_domain_optimize_adapt_roundtrip():
+    dom = TrainStepDomain(PODS, flops_per_token=6 * 12e9, seq_len=4096,
+                          dynamic=False)
+    w = TrainStepWorkload(global_batch=384, seq_len=4096)
+    devices = list(dom.predict())
+    opt = dom.optimize(devices, w)
+    split = dom.adapt(devices, opt, w)
+    assert sum(split.sizes) == 384
+    assert all(s % 16 == 0 for s in split.sizes)
+    assert split.sizes[0] > split.sizes[1]   # twice the chips, more rows
+    # predicted step time is the slowest pod's compute at its share
+    assert split.predicted_step_s == pytest.approx(
+        max(d.compute(s * 4096) for d, s in zip(devices, split.sizes)
+            if s > 0))
+    sched = dom.schedule(devices, split, w)
+    assert sched.timeline.makespan >= split.predicted_step_s - 1e-12
+
+
+def test_feed_step_routes_measurements_by_pod_name():
+    s = HeteroBatchScheduler(PODS, flops_per_token=6 * 12e9, seq_len=4096,
+                             dynamic=True)
+    split = s.plan(384)
+    epoch0 = s.dyn.epoch
+    # mapping form: pod name -> measured step seconds (pod1 3x slow)
+    base = {p.name: d.compute(r * 4096)
+            for p, d, r in zip(s.pods, s.devices, split.sizes)}
+    for step in range(3):
+        fed = s.feed_step(split, {
+            "pod0": base["pod0"],
+            "pod1": 3.0 * base["pod1"] * (1 + 0.01 * step)})
+        assert fed == 2
+    assert s.dyn.epoch > epoch0
+    split2 = s.plan(384)
+    assert split2.sizes[1] < split.sizes[1]   # straggler sheds load
+
+    # timeline form routes through the same pump
+    from repro.core.bus import BusEvent, Timeline
+    tl = Timeline([BusEvent(device="pod0", kind="compute", start=0.0,
+                            end=base["pod0"])])
+    assert s.feed_step(split, tl) == 1
+    # unknown pods / zero shares are ignored, not mis-routed
+    assert s.feed_step(split, {"ghost": 1.0}) == 0
+
+
+def test_pod_leave_and_join_are_change_points():
+    s = HeteroBatchScheduler(PODS, flops_per_token=6 * 12e9, seq_len=4096,
+                             dynamic=True)
+    s.plan(384)
+    s.pod_leave("pod1")
+    assert [p.name for p in s.pods] == ["pod0"]
+    split = s.plan(384)
+    assert split.sizes == (384,)
+    s.pod_join(PODS[1])
+    split = s.plan(384)
+    assert len(split.sizes) == 2 and sum(split.sizes) == 384
+    # the pump re-keyed: observations route to the rebuilt indices
+    assert s.feed_step(split, {"pod1": 0.5}) == 1
+    with pytest.raises(ValueError):
+        s.pod_leave("pod0"), s.pod_leave("pod1")
+
+
+# --------------------------------------------------- elastic runner fix --
+
+
+def test_runner_stops_cleanly_on_exhausted_stream(tmp_path):
+    """A batch stream shorter than num_steps must end the run with a final
+    checkpoint, not leak StopIteration out of ``run`` (PEP 479 makes that
+    a RuntimeError inside generators upstream)."""
+    from repro.checkpoint import store
+    from repro.distributed.elastic import FaultTolerantRunner, RunnerConfig
+
+    def step(state, batch):
+        return {"x": state["x"] + 1.0}, {}
+
+    cfg = RunnerConfig(checkpoint_dir=str(tmp_path), checkpoint_every=100)
+    runner = FaultTolerantRunner(cfg, step_fn=step, state={"x": jnp.asarray(0.0)})
+    final = runner.run(({} for _ in range(3)), num_steps=10)
+    assert runner.step == 3          # stopped at exhaustion, no exception
+    assert float(final["x"]) == 3.0
+    assert store.latest_step(tmp_path) == 3   # forced final checkpoint
+
+
+def test_remesh_routes_membership_through_scheduler(tmp_path):
+    from repro.distributed.elastic import FaultTolerantRunner, RunnerConfig
+
+    def step(state, batch):
+        return {"x": state["x"] + 1.0}, {}
+
+    cfg = RunnerConfig(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    runner = FaultTolerantRunner(cfg, step_fn=step, state={"x": jnp.asarray(0.0)})
+    runner.run(({} for _ in range(4)), num_steps=4)
+    s = HeteroBatchScheduler(PODS, flops_per_token=6 * 12e9, seq_len=4096)
+    runner.remesh(None, scheduler=s, lost=("pod1",))
+    assert [p.name for p in s.pods] == ["pod0"]
+    assert runner.step == 4          # state restored at the same step
+    runner.remesh(None, scheduler=s, joined=(PODS[1],))
+    assert [p.name for p in s.pods] == ["pod0", "pod1"]
